@@ -1,0 +1,10 @@
+"""Build-time compile package (L1 Pallas kernels + L2 JAX model + AOT).
+
+x64 must be enabled before any jax array is created: the data path hashes
+64-bit keys (kernels/hash.py) and the default jax config silently downcasts
+uint64 -> uint32, which would corrupt the key space.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

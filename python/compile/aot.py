@@ -1,0 +1,95 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``).  The XLA
+text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md and /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Produces:
+  artifacts/ring_lookup.hlo.txt   lookup_resolve  (u32[8192] table, u64[1024] keys) -> i32[1024]
+  artifacts/analytics.hlo.txt     maintenance_grid (f32[64] n, f32[64] savg) -> (f32[64], f32[64])
+  artifacts/MANIFEST.txt          shapes + provenance, parsed by rust tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ring_search as krs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, shapes) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+ARTIFACTS = {
+    # name -> (entry fn, example-shape fn, human signature)
+    "ring_lookup": (
+        model.lookup_entry,
+        model.lookup_shapes,
+        f"(u32[{krs.TABLE_SIZE}] table, u64[{krs.BATCH}] keys) -> (i32[{krs.BATCH}],)",
+    ),
+    "analytics": (
+        model.analytics_entry,
+        model.analytics_shapes,
+        f"(f32[{model.GRID}] n, f32[{model.GRID}] savg_sec) -> (f32[{model.GRID}] d1ht_bps, f32[{model.GRID}] calot_bps)",
+    ),
+}
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = [
+        "# d1ht AOT artifacts — HLO text (see python/compile/aot.py)",
+        f"jax={jax.__version__}",
+        f"table_size={krs.TABLE_SIZE}",
+        f"batch={krs.BATCH}",
+        f"grid={model.GRID}",
+        f"pad=0x{0xFFFFFFFF:08X}",
+    ]
+    for name, (fn, shapes_fn, sig) in ARTIFACTS.items():
+        text = lower_entry(fn, shapes_fn())
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also copy ring_lookup to this path")
+    args = ap.parse_args()
+    out_dir = (os.path.dirname(args.out) or ".") if args.out and not args.out_dir else args.out_dir
+    build(out_dir)
+    if args.out:
+        # Makefile compatibility: artifacts/model.hlo.txt = the data-path graph.
+        src = os.path.join(out_dir, "ring_lookup.hlo.txt")
+        with open(src) as f, open(args.out, "w") as g:
+            g.write(f.read())
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Key-to-ring hashing, vectorized (L2 helper, also used inside the model).
+
+The paper derives IDs from SHA-1 of key values / peer addresses (§III).  On
+the AOT data path we hash *already-64-bit* keys onto the 32-bit kernel ring
+with a strong integer mixer (SplitMix64 finalizer, Stafford variant 13).
+This preserves the paper's modeling assumption — lookup targets uniformly
+distributed over the ring, oblivious to peer IDs — which is all the
+consistent-hashing analysis needs.  Full SHA-1 identity derivation lives on
+the rust side (rust/src/id/sha1.rs) where peer addresses are available.
+
+The rust mirror of this function is rust/src/id/space.rs::mix64; the two are
+bit-for-bit identical and cross-checked by python/tests/test_model.py
+vectors embedded in rust/src/id/space.rs tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+M1 = jnp.uint64(0xBF58476D1CE4E5B9)
+M2 = jnp.uint64(0x94D049BB133111EB)
+
+
+def mix64(x: jnp.ndarray) -> jnp.ndarray:
+    """SplitMix64 finalizer: uniform 64-bit mixing, bijective."""
+    x = x.astype(jnp.uint64)
+    x = (x ^ (x >> jnp.uint64(30))) * M1
+    x = (x ^ (x >> jnp.uint64(27))) * M2
+    x = x ^ (x >> jnp.uint64(31))
+    return x
+
+
+def key_to_ring32(key: jnp.ndarray) -> jnp.ndarray:
+    """Map 64-bit keys to the kernel's u32 ring: top 32 bits of the mix.
+
+    The top bits of SplitMix64 pass PractRand; taking them (rather than a
+    modulo) keeps the map monotone-free and avoids the PAD value except with
+    probability 2^-32 per key (the rust side re-bucketizes those).
+    """
+    return (mix64(key) >> jnp.uint64(32)).astype(jnp.uint32)

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+Everything here is deliberately naive and obviously-correct; pytest compares
+the Pallas kernels (and the AOT'd HLO, via the rust integration tests)
+against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ring_search_ref(table: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first ``table`` entry >= query (successor semantics).
+
+    ``table`` is sorted ascending (PAD-padded tail).  Equivalent to
+    ``jnp.searchsorted(table, q, side='left')`` per query; written as an
+    explicit comparison-sum so it is independent of searchsorted's
+    implementation (and trivially correct for duplicate entries: it returns
+    the *first* index among equals, matching the kernel's lower-bound
+    invariant).
+    """
+    # count of entries strictly below q == index of first entry >= q
+    return jnp.sum(table[None, :] < queries[:, None], axis=1).astype(jnp.int32)
+
+
+def mix64_ref(x):
+    """Scalar-python SplitMix64 finalizer (ground truth for hash.mix64)."""
+    mask = (1 << 64) - 1
+    x = int(x) & mask
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & mask
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & mask
+    return (x ^ (x >> 31)) & mask
+
+
+def lookup_resolve_ref(table, keys):
+    """Oracle for model.lookup_resolve: hash keys then successor-search."""
+    ring = jnp.array([mix64_ref(k) >> 32 for k in list(keys)], dtype=jnp.uint32)
+    return ring_search_ref(table, ring)

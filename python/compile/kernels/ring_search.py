@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: batched ring-successor search.
+
+The compute hot-spot of a single-hop DHT's data path is resolving a batch of
+lookups against the full routing table: for each queried ring ID, find the
+first table entry clockwise from it (the *successor*, Chord/D1HT semantics,
+Section III of the paper).
+
+The routing table is a sorted array of ``table_size`` u32 ring IDs, padded at
+the tail with ``PAD`` (0xFFFFFFFF).  For a query ``q`` the kernel returns the
+index of the first entry ``>= q``; callers wrap index ``n_live`` (the number
+of live entries) back to slot 0, which implements the ring wrap-around.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the whole table is one VMEM block (8192 x u32 = 32 KiB, the paper itself
+    reports ~36 KB routing tables) — no HBM traffic inside the search;
+  * queries stream through in ``block_q`` chunks via BlockSpec;
+  * the search is a fixed-depth (log2 table_size) *branchless* binary search
+    expressed as vectorized compare/select steps — pure VPU work, no MXU,
+    no data-dependent control flow, identical instruction stream per lane.
+
+``interpret=True`` is mandatory in this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls.  Numerics are validated against the pure-jnp
+oracle in ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padding value for unused table slots.  Must compare greater than any live
+# id; live ids are restricted to [0, PAD) by the rust side.
+PAD = jnp.uint32(0xFFFFFFFF)
+
+# Default AOT shapes (must match rust/src/runtime/lookup.rs).
+TABLE_SIZE = 8192
+BATCH = 1024
+
+
+def _search_kernel(table_ref, query_ref, out_ref, *, table_size: int):
+    """One grid step: successor-search ``query_ref`` against ``table_ref``.
+
+    Branchless binary search: maintain per-lane lower bound ``lo`` such that
+    table[lo-1] < q <= table[lo] at exit.  ``depth`` iterations of
+    compare+select, fully unrolled (depth = log2(table_size) = 13 for the
+    default shape), each a vector op over the whole query block.
+    """
+    queries = query_ref[...]
+    depth = int(math.log2(table_size))
+    assert 1 << depth == table_size, "table_size must be a power of two"
+
+    lo = jnp.zeros(queries.shape, dtype=jnp.int32)
+    # Invariant: the answer is in [lo, lo + 2^k] after (depth - k) steps.
+    for k in reversed(range(depth)):
+        mid = lo + (1 << k)
+        # Gather table[mid - 1]: the largest element strictly below the
+        # candidate upper half.  mid is in [1, table_size], so mid-1 indexes
+        # safely.  One gather + compare + select per step.
+        pivot = table_ref[...][mid - 1]
+        lo = jnp.where(pivot < queries, mid, lo)
+    # The loop clamps lo to table_size-1; if even the last entry is below
+    # the query the true lower bound is table_size ("wrap to slot 0").
+    last = table_ref[...][lo]
+    out_ref[...] = jnp.where(last < queries, lo + 1, lo)
+
+
+@functools.partial(jax.jit, static_argnames=("table_size", "block_q"))
+def ring_search(table: jax.Array, queries: jax.Array, *,
+                table_size: int = TABLE_SIZE, block_q: int = 256) -> jax.Array:
+    """Batched successor search: index of first ``table`` entry >= query.
+
+    Args:
+      table:   sorted ``(table_size,)`` uint32, tail-padded with ``PAD``.
+      queries: ``(batch,)`` uint32 ring ids to resolve.
+      table_size: static table length (power of two).
+      block_q: query block per grid step (must divide batch).
+
+    Returns:
+      ``(batch,)`` int32 indices in ``[0, table_size]``; ``table_size`` (or
+      any index >= n_live) means "wraps to slot 0".
+    """
+    (batch,) = queries.shape
+    if batch % block_q:
+        raise ValueError(f"batch {batch} not divisible by block_q {block_q}")
+    grid = (batch // block_q,)
+    return pl.pallas_call(
+        functools.partial(_search_kernel, table_size=table_size),
+        grid=grid,
+        # The table is re-presented whole to every grid step (one VMEM
+        # block); queries/outputs are tiled along the batch.
+        in_specs=[
+            pl.BlockSpec((table_size,), lambda i: (0,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(table, queries)

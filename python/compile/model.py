@@ -1,0 +1,138 @@
+"""L2: the paper's compute graphs, authored in JAX, calling the L1 kernels.
+
+Two AOT entry points (lowered to HLO text once by ``aot.py``, executed from
+rust via PJRT — python is never on the request path):
+
+* ``lookup_resolve`` — the DHT data path: mix a batch of 64-bit keys onto
+  the u32 ring and successor-search them against a padded routing-table
+  snapshot with the Pallas kernel.  This is what the rust coordinator calls
+  to resolve lookup batches (rust/src/runtime/lookup.rs).
+
+* ``maintenance_grid`` — the paper's analytical maintenance-bandwidth model
+  (Eqs. III.1, IV.2, IV.5–IV.7 for D1HT; Eq. VII.1 for 1h-Calot) evaluated
+  vectorized over a (system size, average session length) grid.  The Fig. 7
+  bench executes this artifact from rust and cross-checks the native
+  implementation in rust/src/analysis/.
+
+Shapes are static (AOT): see TABLE_SIZE/BATCH in kernels/ring_search.py and
+GRID here; they must match rust/src/runtime/{lookup,analytics}.rs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hash as khash
+from .kernels import ring_search as krs
+
+# ---------------------------------------------------------------------------
+# Wire-format constants — single source of truth is Fig. 2 of the paper;
+# mirrored in rust/src/proto/sizes.rs (bits, IPv4+UDP headers included).
+# ---------------------------------------------------------------------------
+V_M = 320.0   # D1HT/OneHop maintenance-message fixed part
+V_A = 288.0   # acknowledgment
+V_H = 288.0   # 1h-Calot heartbeat
+V_C = 384.0   # 1h-Calot maintenance message (carries exactly one event)
+M_EVENT = 32.0  # bits per event (IPv4, default port)
+
+# Analytical grid size (padded by the rust caller; mask = n > 0).
+GRID = 64
+MAX_RHO = 24  # ceil(log2(1e7)) = 24; static unroll bound for the P(l) sum
+
+
+# ---------------------------------------------------------------------------
+# Data path
+# ---------------------------------------------------------------------------
+def lookup_resolve(table: jax.Array, keys: jax.Array) -> jax.Array:
+    """Resolve a batch of 64-bit keys against a routing-table snapshot.
+
+    Args:
+      table: (TABLE_SIZE,) uint32 sorted ring ids, PAD-padded tail.
+      keys:  (BATCH,) uint64 keys (pre-hash).
+
+    Returns:
+      (BATCH,) int32 successor indices (TABLE_SIZE => wrap to slot 0).
+    """
+    ring = khash.key_to_ring32(keys)
+    return krs.ring_search(table, ring)
+
+
+# ---------------------------------------------------------------------------
+# Analytical maintenance model (per-peer outgoing bandwidth, bits/sec)
+# ---------------------------------------------------------------------------
+def d1ht_bandwidth(n: jax.Array, savg_sec: jax.Array, *,
+                   f: float = 0.01, delta_avg: float = 0.25) -> jax.Array:
+    """Eq. IV.5 with Theta from Eq. IV.2 (explicit message delay).
+
+    n: system size; savg_sec: average session length in seconds.
+    Returns per-peer maintenance bandwidth in bits/sec.
+    """
+    n = n.astype(jnp.float32)
+    savg = savg_sec.astype(jnp.float32)
+    r = 2.0 * n / savg                                   # Eq. III.1
+    rho = jnp.ceil(jnp.log2(jnp.maximum(n, 2.0)))        # messages per interval
+    theta = (2.0 * f * savg - 2.0 * rho * delta_avg) / (8.0 + rho)  # Eq. IV.2
+    theta = jnp.maximum(theta, 1e-3)
+
+    # P(l) = 1 - (1 - 2 r Theta / n)^(2^(rho-l-1)),  l in [1, rho)  (Eq. IV.6)
+    # computed as exp(k * log1p(-q)) for numerical stability at huge k.
+    q = jnp.clip(2.0 * r * theta / n, 0.0, 1.0 - 1e-7)
+    log1mq = jnp.log1p(-q)
+    n_msgs = jnp.ones_like(n)                            # TTL=0 always sent
+    for l in range(1, MAX_RHO):
+        k = jnp.exp2(rho - l - 1.0)
+        p_l = 1.0 - jnp.exp(k * log1mq)
+        n_msgs = n_msgs + jnp.where(l < rho, p_l, 0.0)   # Eq. IV.7
+
+    return (n_msgs * (V_M + V_A) + r * M_EVENT * theta) / theta  # Eq. IV.5
+
+
+def calot_bandwidth(n: jax.Array, savg_sec: jax.Array) -> jax.Array:
+    """Eq. VII.1, per peer.
+
+    Note (DESIGN.md §6): the paper prints the heartbeat term as
+    ``4·n·v_h/60``; dimensional analysis and the paper's own ">140 kbps at
+    n=1e6, KAD" datum require the *per-peer* term ``4·v_h/60`` (each peer
+    sends four heartbeats per minute).  We implement the per-peer form.
+    """
+    n = n.astype(jnp.float32)
+    r = 2.0 * n / savg_sec.astype(jnp.float32)
+    return r * (V_C + V_A) + 4.0 * V_H / 60.0
+
+
+def maintenance_grid(n: jax.Array, savg_sec: jax.Array):
+    """Vectorized (GRID,) evaluation for the Fig. 7 sweep.
+
+    Returns (d1ht_bps, calot_bps); entries where n <= 0 are 0 (padding).
+    """
+    live = n > 0
+    d = jnp.where(live, d1ht_bandwidth(n, savg_sec), 0.0)
+    c = jnp.where(live, calot_bandwidth(n, savg_sec), 0.0)
+    return d, c
+
+
+# ---------------------------------------------------------------------------
+# AOT wrappers with pinned shapes (used by aot.py)
+# ---------------------------------------------------------------------------
+def lookup_entry(table, keys):
+    return (lookup_resolve(table, keys),)
+
+
+def analytics_entry(n, savg_sec):
+    d, c = maintenance_grid(n, savg_sec)
+    return (d, c)
+
+
+def lookup_shapes():
+    return (
+        jax.ShapeDtypeStruct((krs.TABLE_SIZE,), jnp.uint32),
+        jax.ShapeDtypeStruct((krs.BATCH,), jnp.uint64),
+    )
+
+
+def analytics_shapes():
+    return (
+        jax.ShapeDtypeStruct((GRID,), jnp.float32),
+        jax.ShapeDtypeStruct((GRID,), jnp.float32),
+    )

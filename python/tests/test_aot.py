@@ -1,0 +1,52 @@
+"""AOT pipeline: lowering produces loadable, shape-correct HLO text."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.kernels import ring_search as krs
+
+
+class TestLowering:
+    def test_ring_lookup_lowers(self):
+        text = aot.lower_entry(model.lookup_entry, model.lookup_shapes())
+        assert text.startswith("HloModule")
+        assert f"u32[{krs.TABLE_SIZE}]" in text
+        assert f"u64[{krs.BATCH}]" in text
+        assert f"s32[{krs.BATCH}]" in text
+
+    def test_analytics_lowers(self):
+        text = aot.lower_entry(model.analytics_entry, model.analytics_shapes())
+        assert text.startswith("HloModule")
+        assert f"f32[{model.GRID}]" in text
+
+    def test_no_custom_calls(self):
+        """interpret=True pallas must lower to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT client."""
+        for fn, shapes in [
+            (model.lookup_entry, model.lookup_shapes()),
+            (model.analytics_entry, model.analytics_shapes()),
+        ]:
+            text = aot.lower_entry(fn, shapes)
+            assert "custom-call" not in text, "unrunnable custom-call in HLO"
+
+    def test_entry_layout_is_tuple(self):
+        """rust side unwraps with to_tuple{1,2}: root must be a tuple."""
+        text = aot.lower_entry(model.lookup_entry, model.lookup_shapes())
+        first = text.splitlines()[0]
+        assert "->(s32[1024]{0})" in first.replace(" ", "")
+
+
+class TestBuildTree(object):
+    def test_build_writes_all_artifacts(self, tmp_path):
+        aot.build(str(tmp_path))
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["MANIFEST.txt", "analytics.hlo.txt", "ring_lookup.hlo.txt"]
+        manifest = (tmp_path / "MANIFEST.txt").read_text()
+        assert f"table_size={krs.TABLE_SIZE}" in manifest
+        assert f"grid={model.GRID}" in manifest
+        for name in ("ring_lookup", "analytics"):
+            body = (tmp_path / f"{name}.hlo.txt").read_text()
+            assert body.startswith("HloModule")
+            assert len(body) > 1000

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas ring_search kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the data-path artifact: hypothesis
+sweeps table occupancies, duplicates, boundary values, and query
+distributions; every case must match ``ref.ring_search_ref`` exactly
+(integer indices — no tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import ring_search as krs
+
+PAD = 0xFFFFFFFF
+
+
+def make_table(live_ids, table_size=krs.TABLE_SIZE):
+    live = np.sort(np.asarray(live_ids, dtype=np.uint32))
+    t = np.full(table_size, PAD, dtype=np.uint32)
+    t[: len(live)] = live
+    return t
+
+
+def run_kernel(table, queries, **kw):
+    out = krs.ring_search(jnp.asarray(table), jnp.asarray(queries), **kw)
+    return np.asarray(out)
+
+
+def run_ref(table, queries):
+    return np.asarray(ref.ring_search_ref(jnp.asarray(table), jnp.asarray(queries)))
+
+
+def pad_queries(qs, batch=krs.BATCH):
+    q = np.zeros(batch, dtype=np.uint32)
+    q[: len(qs)] = np.asarray(qs, dtype=np.uint32)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Deterministic cases
+# ---------------------------------------------------------------------------
+class TestRingSearchBasic:
+    def test_empty_table_all_wrap(self):
+        """All-PAD table: every query lands at index 0 (first PAD slot)."""
+        t = make_table([])
+        q = pad_queries([0, 1, 123456, PAD - 1])
+        assert (run_kernel(t, q) == 0).all()
+
+    def test_single_entry(self):
+        t = make_table([1000])
+        q = pad_queries([0, 999, 1000, 1001, PAD - 1])
+        out = run_kernel(t, q)
+        assert list(out[:5]) == [0, 0, 0, 1, 1]
+
+    def test_exact_hits_return_entry(self):
+        live = [10, 20, 30, 40]
+        t = make_table(live)
+        out = run_kernel(t, pad_queries(live))
+        assert list(out[:4]) == [0, 1, 2, 3]
+
+    def test_between_entries(self):
+        t = make_table([10, 20, 30])
+        out = run_kernel(t, pad_queries([11, 19, 21, 29, 31]))
+        assert list(out[:5]) == [1, 1, 2, 2, 3]
+
+    def test_duplicates_return_first(self):
+        """Lower-bound semantics: first index among equal entries."""
+        t = make_table([5, 5, 5, 9])
+        out = run_kernel(t, pad_queries([5, 6, 9]))
+        assert list(out[:3]) == [0, 3, 3]
+
+    def test_query_zero(self):
+        t = make_table([0, 7])
+        out = run_kernel(t, pad_queries([0]))
+        assert out[0] == 0
+
+    def test_query_above_all_live_wraps(self):
+        """Query beyond the last live id resolves to the PAD region == wrap."""
+        t = make_table([100, 200])
+        out = run_kernel(t, pad_queries([201, PAD - 1]))
+        assert out[0] == 2 and out[1] == 2
+
+    def test_full_table_no_padding(self):
+        live = np.arange(0, krs.TABLE_SIZE, dtype=np.uint32) * 524288 + 3
+        t = make_table(live)
+        q = pad_queries([2, 3, 4, int(live[-1]), int(live[-1]) + 1])
+        out = run_kernel(t, q)
+        assert list(out[:5]) == [0, 0, 1, krs.TABLE_SIZE - 1, krs.TABLE_SIZE]
+
+    def test_matches_numpy_searchsorted(self):
+        rng = np.random.default_rng(7)
+        live = np.unique(rng.integers(0, PAD, 5000, dtype=np.uint32))
+        t = make_table(live)
+        q = rng.integers(0, 2**32, krs.BATCH, dtype=np.uint32)
+        np.testing.assert_array_equal(
+            run_kernel(t, q), np.searchsorted(t, q, side="left").astype(np.int32)
+        )
+
+    def test_block_sizes(self):
+        """block_q is a tuning knob; results must be identical across it."""
+        rng = np.random.default_rng(3)
+        t = make_table(rng.integers(0, PAD, 100, dtype=np.uint32))
+        q = rng.integers(0, 2**32, krs.BATCH, dtype=np.uint32)
+        base = run_kernel(t, q, block_q=256)
+        for bq in (64, 128, 512, 1024):
+            np.testing.assert_array_equal(run_kernel(t, q, block_q=bq), base)
+
+    def test_bad_block_raises(self):
+        t = make_table([1])
+        with pytest.raises(ValueError):
+            run_kernel(t, np.zeros(krs.BATCH, np.uint32), block_q=300)
+
+    def test_small_table_sizes(self):
+        """table_size is static but parametric: cover other powers of two."""
+        rng = np.random.default_rng(11)
+        for ts in (64, 256, 1024):
+            live = np.unique(rng.integers(0, PAD, ts // 2, dtype=np.uint32))
+            t = make_table(live, table_size=ts)
+            q = rng.integers(0, 2**32, 256, dtype=np.uint32)
+            out = krs.ring_search(
+                jnp.asarray(t), jnp.asarray(q), table_size=ts, block_q=128
+            )
+            np.testing.assert_array_equal(
+                np.asarray(out), np.searchsorted(t, q, side="left").astype(np.int32)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Property-based sweep
+# ---------------------------------------------------------------------------
+ids32 = st.integers(min_value=0, max_value=PAD - 1)
+
+
+class TestRingSearchHypothesis:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        live=st.lists(ids32, min_size=0, max_size=300),
+        queries=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64),
+    )
+    def test_matches_oracle(self, live, queries):
+        t = make_table(live)
+        q = pad_queries(queries)
+        np.testing.assert_array_equal(run_kernel(t, q), run_ref(t, q))
+
+    @settings(max_examples=20, deadline=None)
+    @given(live=st.lists(ids32, min_size=1, max_size=200), data=st.data())
+    def test_successor_invariant(self, live, data):
+        """table[idx-1] < q <= table[idx] — the lower-bound contract."""
+        t = make_table(live)
+        q_vals = data.draw(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=32))
+        q = pad_queries(q_vals)
+        out = run_kernel(t, q)
+        t64 = t.astype(np.uint64)
+        for qi, idx in zip(q[: len(q_vals)].astype(np.uint64), out[: len(q_vals)]):
+            if idx < krs.TABLE_SIZE:
+                assert t64[idx] >= qi
+            if idx > 0:
+                assert t64[idx - 1] < qi
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_random_dense(self, seed):
+        rng = np.random.default_rng(seed)
+        n_live = int(rng.integers(0, krs.TABLE_SIZE + 1))
+        t = make_table(rng.integers(0, PAD, n_live, dtype=np.uint32))
+        q = rng.integers(0, 2**32, krs.BATCH, dtype=np.uint32)
+        np.testing.assert_array_equal(run_kernel(t, q), run_ref(t, q))

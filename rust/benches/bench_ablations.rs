@@ -1,0 +1,46 @@
+//! Ablation benches on the design choices DESIGN.md §3 calls out:
+//! EDRA aggregation on/off, ID reuse, and the XLA-artifact batched
+//! lookup vs the native binary search (the L1/L2-vs-L3 data-path
+//! comparison).
+
+use d1ht::experiments::ablations;
+use d1ht::id::Id;
+use d1ht::routing::Table;
+use d1ht::runtime::lookup::{resolve_native, BatchLookup, Snapshot, BATCH};
+use d1ht::util::bench::{bench_auto, black_box, run_suite};
+use d1ht::util::rng::Rng;
+
+fn main() {
+    println!("{}", ablations::aggregation(1024, 3600.0, 300.0).render());
+    println!("{}", ablations::id_reuse(256, 300.0).render());
+
+    // XLA vs native batched lookup
+    let mut rng = Rng::new(5);
+    let table = Table::from_ids((0..4000).map(|_| Id(rng.next_u64())).collect());
+    let snap = Snapshot::capture(&table).unwrap();
+    let keys: Vec<u64> = (0..BATCH).map(|_| rng.next_u64()).collect();
+
+    let mut results = Vec::new();
+    results.push(bench_auto(
+        "native_batch_lookup_1024keys_4000peers",
+        std::time::Duration::from_millis(300),
+        || {
+            black_box(resolve_native(&snap, &keys));
+        },
+    ));
+    if d1ht::runtime::artifacts_available() {
+        let exe = BatchLookup::load().expect("load ring_lookup artifact");
+        // correctness cross-check before timing
+        assert_eq!(exe.resolve(&snap, &keys).unwrap(), resolve_native(&snap, &keys));
+        results.push(bench_auto(
+            "xla_aot_batch_lookup_1024keys_4000peers",
+            std::time::Duration::from_millis(500),
+            || {
+                black_box(exe.resolve(&snap, &keys).unwrap());
+            },
+        ));
+    } else {
+        eprintln!("(artifacts missing — run `make artifacts` for the XLA side)");
+    }
+    run_suite("ablations: batched lookup data path", results);
+}

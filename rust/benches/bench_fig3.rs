@@ -1,0 +1,19 @@
+//! Regenerates Figure 3: PlanetLab aggregate maintenance bandwidth,
+//! D1HT vs 1h-Calot at 1K/2K peers, measured + analytical.
+//!
+//! `--paper` runs the §VII-A-faithful configuration (growth phase,
+//! 30-minute windows, 3 seeds); the default is the quick profile.
+
+use d1ht::experiments::{fig3, Fidelity};
+
+fn main() {
+    let fid = if std::env::args().any(|a| a == "--paper") {
+        Fidelity::Paper
+    } else {
+        Fidelity::Quick
+    };
+    let t0 = std::time::Instant::now();
+    let t = fig3::run(fid);
+    println!("{}", t.render());
+    println!("(fig3 regenerated in {:?}, fidelity {fid:?})", t0.elapsed());
+}

@@ -1,0 +1,18 @@
+//! Regenerates Figure 4 (a: Savg=174min, b: Savg=60min): HPC aggregate
+//! maintenance bandwidth, D1HT vs 1h-Calot, 1000..4000 peers.
+
+use d1ht::experiments::{fig4, Fidelity};
+
+fn main() {
+    let fid = if std::env::args().any(|a| a == "--paper") {
+        Fidelity::Paper
+    } else {
+        Fidelity::Quick
+    };
+    for savg in [174.0, 60.0] {
+        let t0 = std::time::Instant::now();
+        let t = fig4::run(fid, savg);
+        println!("{}", t.render());
+        println!("(fig4 Savg={savg}min regenerated in {:?})\n", t0.elapsed());
+    }
+}

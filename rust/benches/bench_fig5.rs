@@ -1,0 +1,18 @@
+//! Regenerates Figure 5 (a: idle, b: busy nodes): lookup latencies for
+//! D1HT, 1h-Calot, Pastry (+expected) and Dserver at 800..4000 peers.
+
+use d1ht::experiments::{fig5, Fidelity};
+
+fn main() {
+    let fid = if std::env::args().any(|a| a == "--paper") {
+        Fidelity::Paper
+    } else {
+        Fidelity::Quick
+    };
+    for busy in [false, true] {
+        let t0 = std::time::Instant::now();
+        let t = fig5::run(fid, busy);
+        println!("{}", t.render());
+        println!("(fig5{} regenerated in {:?})\n", if busy { "b" } else { "a" }, t0.elapsed());
+    }
+}

@@ -1,0 +1,16 @@
+//! Regenerates Figure 6: D1HT latency vs peers-per-node on busy nodes,
+//! 200 vs 400 physical nodes.
+
+use d1ht::experiments::{fig6, Fidelity};
+
+fn main() {
+    let fid = if std::env::args().any(|a| a == "--paper") {
+        Fidelity::Paper
+    } else {
+        Fidelity::Quick
+    };
+    let t0 = std::time::Instant::now();
+    let t = fig6::run(fid);
+    println!("{}", t.render());
+    println!("(fig6 regenerated in {:?})", t0.elapsed());
+}

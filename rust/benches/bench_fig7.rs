@@ -1,0 +1,30 @@
+//! Regenerates Figure 7 (a–d): analytical per-peer maintenance bandwidth
+//! for D1HT / 1h-Calot / OneHop across 1e4..1e7 peers and the four
+//! session lengths. Uses the AOT analytics artifact when present (and
+//! times artifact-vs-native), falling back to the native models.
+
+use d1ht::experiments::fig7;
+use d1ht::util::bench::{bench_auto, black_box, run_suite};
+
+fn main() {
+    let via_artifact = d1ht::runtime::artifacts_available();
+    for savg in fig7::SESSIONS_MIN {
+        let t = fig7::run(savg, via_artifact).expect("fig7");
+        println!("{}", t.render());
+    }
+    println!("(series computed via {})", if via_artifact { "AOT artifact" } else { "native models" });
+
+    // artifact vs native evaluation cost (the L2 ablation datum)
+    let mut results = Vec::new();
+    results.push(bench_auto("fig7_native_models", std::time::Duration::from_millis(300), || {
+        black_box(fig7::run(174.0, false).unwrap());
+    }));
+    if via_artifact {
+        let grid = d1ht::runtime::analytics::AnalyticsGrid::load().expect("load artifact");
+        let pts: Vec<(f64, f64)> = fig7::sizes().iter().map(|&n| (n, 174.0 * 60.0)).collect();
+        results.push(bench_auto("fig7_aot_artifact_eval", std::time::Duration::from_millis(300), || {
+            black_box(grid.eval(&pts).unwrap());
+        }));
+    }
+    run_suite("fig7", results);
+}

@@ -1,0 +1,78 @@
+//! Microbenchmarks of the L3 hot paths (§Perf): routing-table successor
+//! search, EDRA interval close, event-queue throughput, SHA-1, and the
+//! wire codec. These are the quantities the performance pass tracks in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use d1ht::edra::Edra;
+use d1ht::id::{sha1::sha1, Id};
+use d1ht::proto::messages::Event;
+use d1ht::routing::Table;
+use d1ht::sim::engine::{run_until, Queue, World};
+use d1ht::util::bench::{bench_auto, black_box, run_suite};
+use d1ht::util::rng::Rng;
+
+struct Noop;
+impl World for Noop {
+    type Ev = u64;
+    fn handle(&mut self, _t: f64, ev: u64, q: &mut Queue<u64>) {
+        if ev > 0 {
+            q.after(1.0, ev - 1);
+        }
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut results = Vec::new();
+
+    // routing table successor search at the paper's largest table
+    let table = Table::from_ids((0..4000).map(|_| Id(rng.next_u64())).collect());
+    let probes: Vec<Id> = (0..1024).map(|_| Id(rng.next_u64())).collect();
+    results.push(bench_auto("table_successor_1024x_n4000", Duration::from_millis(200), || {
+        for &p in &probes {
+            black_box(table.successor(p));
+        }
+    }));
+
+    // EDRA interval close with a full buffer (Eq. IV.4 cap at n=4000: ~7)
+    results.push(bench_auto("edra_close_interval_n4000", Duration::from_millis(200), || {
+        let mut e = Edra::new(*table.ids().first().unwrap(), 0.01, 0.0);
+        for i in 0..8u64 {
+            e.acknowledge(Event::join(Id(i)), 12, 0.0);
+        }
+        black_box(e.close_interval(&table, 1.0));
+    }));
+
+    // event-queue throughput: 100k self-rescheduling events
+    results.push(bench_auto("sim_queue_100k_events", Duration::from_millis(400), || {
+        let mut q = Queue::new();
+        q.at(0.0, 100_000u64);
+        run_until(&mut Noop, &mut q, f64::MAX);
+        black_box(q.processed());
+    }));
+
+    // SHA-1 of a socket-address-sized input (ID derivation path)
+    let addr = b"203.0.113.77:4000";
+    results.push(bench_auto("sha1_peer_id", Duration::from_millis(200), || {
+        black_box(sha1(addr));
+    }));
+
+    // wire codec round trip for a 50-event maintenance message
+    let msg = d1ht::proto::messages::Message {
+        from: Id(1),
+        to: Id(2),
+        seqno: 9,
+        body: d1ht::proto::messages::MessageBody::Maintenance {
+            ttl: 5,
+            events: (0..50).map(|i| Event::join(Id(i))).collect(),
+        },
+    };
+    results.push(bench_auto("codec_roundtrip_50_events", Duration::from_millis(200), || {
+        let bytes = d1ht::proto::codec::encode(&msg);
+        black_box(d1ht::proto::codec::decode(&bytes).unwrap());
+    }));
+
+    run_suite("micro (L3 hot paths)", results);
+}

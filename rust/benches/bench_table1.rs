@@ -1,0 +1,13 @@
+//! Regenerates Table I (testbed inventory) and times the render path.
+
+use d1ht::experiments::table1;
+use d1ht::util::bench::{bench, black_box, run_suite};
+
+fn main() {
+    let t = table1::run();
+    println!("{}", t.render());
+    let r = bench("table1_render", 10, 100, || {
+        black_box(table1::run().render());
+    });
+    run_suite("table1", vec![r]);
+}

@@ -1,0 +1,166 @@
+//! D1HT analytical model: Eqs. III.1, IV.1–IV.7.
+//!
+//! Mirrors `python/compile/model.py::d1ht_bandwidth` bit-for-bit in
+//! structure (f32 there, f64 here); `runtime::analytics` cross-checks the
+//! AOT'd HLO against this implementation at test time.
+
+use crate::analysis::event_rate;
+use crate::edra::rho_for;
+use crate::proto::sizes::{M_EVENT_AVG, V_A, V_M};
+
+/// Model inputs; defaults match §VIII (f = 1%, δavg = 0.25 s).
+#[derive(Debug, Clone, Copy)]
+pub struct D1htModel {
+    pub f: f64,
+    pub delta_avg: f64,
+}
+
+impl Default for D1htModel {
+    fn default() -> Self {
+        D1htModel { f: crate::DEFAULT_F, delta_avg: crate::DEFAULT_DELTA_AVG_SECS }
+    }
+}
+
+impl D1htModel {
+    /// Θ from Eq. IV.2 (explicit δavg — the §VIII configuration).
+    pub fn theta(&self, n: f64, savg_secs: f64) -> f64 {
+        let rho = rho_for(n as usize) as f64;
+        let theta = (2.0 * self.f * savg_secs - 2.0 * rho * self.delta_avg) / (8.0 + rho);
+        theta.max(1e-3)
+    }
+
+    /// Θ from Eq. IV.3 (δavg = Θ/4 overestimate — the implementation's
+    /// self-tuning rule; see `edra::theta`).
+    pub fn theta_self_tuned(&self, n: f64, savg_secs: f64) -> f64 {
+        let rho = rho_for(n as usize) as f64;
+        (4.0 * self.f * savg_secs / (16.0 + 3.0 * rho)).max(1e-3)
+    }
+
+    /// Eq. IV.1: upper bound on the average acknowledge time.
+    pub fn t_avg(&self, n: f64, savg_secs: f64) -> f64 {
+        let rho = rho_for(n as usize) as f64;
+        let theta = self.theta(n, savg_secs);
+        2.0 * theta + rho * (theta + 2.0 * self.delta_avg) / 4.0
+    }
+
+    /// Eq. IV.6: probability a peer sends `M(l)` (l ≥ 1) in an interval.
+    pub fn p_send(&self, n: f64, savg_secs: f64, l: u32) -> f64 {
+        let rho = rho_for(n as usize) as u32;
+        debug_assert!(l >= 1 && l < rho.max(1));
+        let r = event_rate(n, savg_secs);
+        let theta = self.theta(n, savg_secs);
+        let q = (2.0 * r * theta / n).clamp(0.0, 1.0 - 1e-12);
+        let k = 2f64.powi((rho - l - 1) as i32);
+        1.0 - (k * (-q).ln_1p()).exp()
+    }
+
+    /// Eq. IV.7: expected maintenance messages per Θ interval.
+    pub fn n_msgs(&self, n: f64, savg_secs: f64) -> f64 {
+        let rho = rho_for(n as usize) as u32;
+        let mut total = 1.0; // M(0), always sent (Rule 4)
+        for l in 1..rho {
+            total += self.p_send(n, savg_secs, l);
+        }
+        total
+    }
+
+    /// Eq. IV.5: per-peer outgoing maintenance bandwidth (bits/sec).
+    pub fn bandwidth_bps(&self, n: f64, savg_secs: f64) -> f64 {
+        let r = event_rate(n, savg_secs);
+        let theta = self.theta(n, savg_secs);
+        let n_msgs = self.n_msgs(n, savg_secs);
+        (n_msgs * (V_A + V_M) as f64 + r * M_EVENT_AVG as f64 * theta) / theta
+    }
+
+    /// Eq. IV.4: the burst cap on buffered events.
+    pub fn event_cap(&self, n: f64) -> f64 {
+        let rho = rho_for(n as usize) as f64;
+        8.0 * self.f * n / (16.0 + 3.0 * rho)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Dynamics;
+
+    fn kbps(n: f64, d: Dynamics) -> f64 {
+        D1htModel::default().bandwidth_bps(n, d.savg_secs()) / 1000.0
+    }
+
+    #[test]
+    fn paper_section8_datums() {
+        // §VIII: n = 1e6; sessions 60/169/174/780 min ->
+        //        20.7 / 7.3 / 7.1 / 1.6 kbps
+        assert!((kbps(1e6, Dynamics::Fast) - 20.7).abs() / 20.7 < 0.03);
+        assert!((kbps(1e6, Dynamics::Kad) - 7.3).abs() / 7.3 < 0.03);
+        assert!((kbps(1e6, Dynamics::Gnutella) - 7.1).abs() / 7.1 < 0.03);
+        assert!((kbps(1e6, Dynamics::BitTorrent) - 1.6).abs() / 1.6 < 0.05);
+    }
+
+    #[test]
+    fn paper_discussion_range() {
+        // §IX: 1.6–16 kbps for 1–10 M peers with BitTorrent behavior
+        assert!(kbps(1e7, Dynamics::BitTorrent) < 17.0);
+        // §IX: <= 65 kbps for 10M with KAD/Gnutella dynamics
+        assert!(kbps(1e7, Dynamics::Kad) < 70.0);
+    }
+
+    #[test]
+    fn fasttrack_superpeer_datum() {
+        // §III: 40K SNs, Savg = 2.5 h -> "as low as 0.9 kbps per SN"
+        let v = D1htModel::default().bandwidth_bps(40_000.0, 2.5 * 3600.0) / 1000.0;
+        assert!((0.7..1.2).contains(&v), "got {v} kbps");
+    }
+
+    #[test]
+    fn theta_is_tens_of_seconds_at_most() {
+        // §IV-C: buffering period "a few tens of seconds at most"
+        let m = D1htModel::default();
+        for n in [1e4, 1e5, 1e6, 1e7] {
+            for d in [Dynamics::Fast, Dynamics::Kad, Dynamics::BitTorrent] {
+                let th = m.theta(n, d.savg_secs());
+                assert!(th > 0.0 && th < 60.0, "theta({n}, {d:?}) = {th}");
+            }
+        }
+    }
+
+    #[test]
+    fn n_msgs_bounded_by_rho() {
+        let m = D1htModel::default();
+        let n = 1e6;
+        let nm = m.n_msgs(n, Dynamics::Kad.savg_secs());
+        assert!(nm >= 1.0 && nm <= 20.0, "n_msgs={nm}");
+        // and P(l) decreasing in l
+        let mut last = 1.0;
+        for l in 1..20 {
+            let p = m.p_send(n, Dynamics::Kad.savg_secs(), l);
+            assert!(p <= last + 1e-12, "P({l})={p} > P({})={last}", l - 1);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn bandwidth_monotone_in_n() {
+        let m = D1htModel::default();
+        let s = Dynamics::Gnutella.savg_secs();
+        let mut last = 0.0;
+        for exp in 3..=7 {
+            let b = m.bandwidth_bps(10f64.powi(exp), s);
+            assert!(b > last);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn self_tuned_theta_close_to_explicit() {
+        // Eq. IV.3 bakes in δ = Θ/4 (an overestimate), so it is the more
+        // conservative (shorter) interval; both must stay in the same
+        // regime (within ~30% at Internet scale, same order everywhere).
+        let m = D1htModel::default();
+        let a = m.theta(1e6, Dynamics::Gnutella.savg_secs());
+        let b = m.theta_self_tuned(1e6, Dynamics::Gnutella.savg_secs());
+        assert!(b <= a, "self-tuned must be conservative: {b} vs {a}");
+        assert!((a - b).abs() / a < 0.3, "a={a} b={b}");
+    }
+}

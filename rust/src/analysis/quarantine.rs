@@ -1,0 +1,101 @@
+//! Quarantine overhead-reduction model (§V, §VIII Fig. 8).
+//!
+//! With a Quarantine period `T_q`, sessions shorter than `T_q` never join
+//! the overlay: only `q = (1 - p_short)·n` peers take part and only their
+//! joins/leaves are reported. The paper quantifies the gains with
+//! `T_q = 10 min`, for which the cited measurements give
+//! `p_short = 24%` (KAD [50]) and `31%` (Gnutella [12]) — hence the
+//! figure captions' `q = 0.76 n` and `q = 0.69 n`.
+//!
+//! The reduction is evaluated by re-running the D1HT bandwidth model on
+//! the quarantined population: both the event *rate* and the routing
+//! *population* shrink by `1 - p_short`, while the always-sent TTL=0
+//! keep-alives do not — which is exactly why the paper observes smaller
+//! gains for small systems (header-dominated) growing toward `p_short`
+//! for large ones (payload-dominated).
+
+use crate::analysis::d1ht::D1htModel;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuarantineModel {
+    pub d1ht: D1htModel,
+    /// Fraction of sessions shorter than T_q (filtered by Quarantine).
+    pub p_short: f64,
+    /// The Quarantine period (s); 10 min in the paper's evaluation.
+    pub t_q: f64,
+}
+
+impl QuarantineModel {
+    pub fn new(p_short: f64) -> Self {
+        QuarantineModel { d1ht: D1htModel::default(), p_short, t_q: 600.0 }
+    }
+
+    /// Per-peer bandwidth with Quarantine enabled.
+    pub fn bandwidth_bps(&self, n: f64, savg_secs: f64) -> f64 {
+        let q = (1.0 - self.p_short) * n;
+        self.d1ht.bandwidth_bps(q.max(2.0), savg_secs)
+    }
+
+    /// Relative overhead reduction vs plain D1HT (the Fig. 8 y-axis).
+    pub fn reduction(&self, n: f64, savg_secs: f64) -> f64 {
+        let plain = self.d1ht.bandwidth_bps(n, savg_secs);
+        1.0 - self.bandwidth_bps(n, savg_secs) / plain
+    }
+
+    /// Fraction of its session a surviving peer spends quarantined
+    /// (the "<6% of the average session length" remark in §V/§VIII).
+    pub fn quarantined_fraction(&self, savg_secs: f64) -> f64 {
+        self.t_q / savg_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Dynamics;
+
+    #[test]
+    fn reductions_approach_p_short_for_large_n() {
+        // Fig. 8: reductions reach ~24% (KAD) and ~31% (Gnutella)
+        let kad = QuarantineModel::new(Dynamics::Kad.short_session_fraction());
+        let gnu = QuarantineModel::new(Dynamics::Gnutella.short_session_fraction());
+        let rk = kad.reduction(1e7, Dynamics::Kad.savg_secs());
+        let rg = gnu.reduction(1e7, Dynamics::Gnutella.savg_secs());
+        assert!((rk - 0.24).abs() < 0.04, "KAD reduction {rk}");
+        assert!((rg - 0.31).abs() < 0.04, "Gnutella reduction {rg}");
+    }
+
+    #[test]
+    fn reduction_grows_with_system_size() {
+        // Fig. 8: "the maintenance bandwidth reduction grows with the
+        // system size" (TTL=0 keep-alives dominate small systems).
+        // ρ = ⌈log2 n⌉ stair-steps make the curve locally non-monotone
+        // (as in the paper's own saw-toothed Fig. 8 plots), so we check
+        // the overall trend plus bounds.
+        let m = QuarantineModel::new(0.31);
+        let s = Dynamics::Gnutella.savg_secs();
+        let small = m.reduction(1e4, s);
+        let big = m.reduction(1e7, s);
+        assert!(big > small, "big {big} <= small {small}");
+        for exp in [4, 5, 6, 7] {
+            let r = m.reduction(10f64.powi(exp), s);
+            assert!((0.0..=0.36).contains(&r), "n=1e{exp}: {r}");
+        }
+    }
+
+    #[test]
+    fn quarantine_period_under_6pct_of_session() {
+        // §VIII: T_q = 10 min is "less than 6% of the average session
+        // length for both systems"
+        for d in [Dynamics::Kad, Dynamics::Gnutella] {
+            let m = QuarantineModel::new(d.short_session_fraction());
+            assert!(m.quarantined_fraction(d.savg_secs()) < 0.06);
+        }
+    }
+
+    #[test]
+    fn no_quarantine_no_reduction() {
+        let m = QuarantineModel::new(0.0);
+        assert!(m.reduction(1e6, 10_000.0).abs() < 1e-9);
+    }
+}

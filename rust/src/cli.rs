@@ -1,0 +1,292 @@
+//! The `d1ht` command-line interface (hand-rolled arg parsing; no clap
+//! offline — DESIGN.md §5).
+//!
+//! ```text
+//! d1ht exp <table1|fig3|fig4a|fig4b|fig5a|fig5b|fig6|fig7|fig8|all> [--paper] [--csv]
+//! d1ht analyze --n <peers> --savg-min <mins> [--quarantine <frac>]
+//! d1ht serve --peers <n> [--lookups <k>] [--churn-steps <k>]
+//! d1ht sim --peers <n> --savg-min <mins> [--secs <s>] [--quarantine-tq <s>]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::{calot::CalotModel, d1ht::D1htModel, onehop::OneHopModel};
+use crate::coordinator::{run_experiment, ExperimentId};
+use crate::experiments::Fidelity;
+use crate::util::fmt::{bps, latency, Table};
+
+/// Minimal flag parser: positionals + `--key value` + boolean `--flag`.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => Some(it.next().unwrap().clone()),
+                    _ => None,
+                };
+                flags.push((name.to_string(), val));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    run(&argv, &mut std::io::stdout())
+}
+
+pub fn run(argv: &[String], out: &mut dyn std::io::Write) -> Result<()> {
+    let args = Args::parse(argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&args, out),
+        Some("analyze") => cmd_analyze(&args, out),
+        Some("serve") => cmd_serve(&args, out),
+        Some("sim") => cmd_sim(&args, out),
+        Some("help") | None => {
+            writeln!(out, "{}", HELP)?;
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+d1ht — single-hop DHT (Monnerat & Amorim, CCPE 2014) reproduction
+
+USAGE:
+  d1ht exp <id|all> [--paper] [--csv]    regenerate a paper table/figure
+       ids: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8
+            ablation-aggregation ablation-id-reuse
+  d1ht analyze --n <peers> --savg-min <mins>
+                                         closed-form overheads for one point
+  d1ht serve --peers <n> [--lookups <k>] real socket cluster on loopback
+  d1ht sim --peers <n> --savg-min <m> [--secs <s>] [--quarantine-tq <s>]
+                                         one simulated D1HT run
+  d1ht help";
+
+fn fidelity(args: &Args) -> Fidelity {
+    if args.has("paper") {
+        Fidelity::Paper
+    } else {
+        Fidelity::Quick
+    }
+}
+
+fn emit(tables: &[Table], csv: bool, out: &mut dyn std::io::Write) -> Result<()> {
+    for t in tables {
+        if csv {
+            writeln!(out, "# {}", t.title)?;
+            write!(out, "{}", t.to_csv())?;
+        } else {
+            writeln!(out, "{}", t.render())?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let fid = fidelity(args);
+    let csv = args.has("csv");
+    if id == "all" {
+        for &e in ExperimentId::all() {
+            emit(&run_experiment(e, fid)?, csv, out)?;
+        }
+        return Ok(());
+    }
+    emit(&run_experiment(ExperimentId::parse(id)?, fid)?, csv, out)
+}
+
+fn cmd_analyze(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    let n = args.get_usize("n", 1_000_000)? as f64;
+    let savg = args.get_f64("savg-min", 174.0)? * 60.0;
+    let d = D1htModel::default();
+    let oh = OneHopModel::default().optimal(n, savg);
+    let mut t = Table::new(
+        format!("Closed-form per-peer maintenance overheads (n={n:.0}, Savg={:.0}min)", savg / 60.0),
+        &["system", "bandwidth", "notes"],
+    );
+    t.row(vec![
+        "D1HT".into(),
+        bps(d.bandwidth_bps(n, savg)),
+        format!("theta={:.1}s rho={}", d.theta(n, savg), crate::edra::rho_for(n as usize)),
+    ]);
+    t.row(vec!["1h-Calot".into(), bps(CalotModel.bandwidth_bps(n, savg)), "per-event trees + heartbeats".into()]);
+    t.row(vec![
+        "OneHop ordinary".into(),
+        bps(oh.ordinary_bps),
+        format!("k={} u={}", oh.params.k, oh.params.u),
+    ]);
+    t.row(vec![
+        "OneHop slice leader".into(),
+        bps(oh.slice_leader_bps),
+        format!("t_avg={:.1}s", oh.t_avg),
+    ]);
+    if let Some(frac) = args.get("quarantine") {
+        let p: f64 = frac.parse().context("--quarantine fraction")?;
+        let qm = crate::analysis::quarantine::QuarantineModel::new(p);
+        t.row(vec![
+            format!("D1HT + Quarantine (p_short={p})"),
+            bps(qm.bandwidth_bps(n, savg)),
+            format!("reduction {:.1}%", qm.reduction(n, savg) * 100.0),
+        ]);
+    }
+    emit(&[t], args.has("csv"), out)
+}
+
+fn cmd_serve(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    let n = args.get_usize("peers", 16)?;
+    let lookups = args.get_usize("lookups", 500)?;
+    let churn_steps = args.get_usize("churn-steps", 0)?;
+    writeln!(out, "starting {n} real peers on loopback ...")?;
+    let mut cluster = crate::net::Cluster::start(n, crate::DEFAULT_F)?;
+    let converged = cluster.await_convergence(std::time::Duration::from_secs(30));
+    writeln!(out, "converged: {converged} (all {n} routing tables full)")?;
+    for step in 0..churn_steps {
+        let removed = cluster.churn_step(step as u64 + 1);
+        writeln!(out, "churn step {step}: removed {removed} peers")?;
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
+    let rep = cluster.run_lookups(lookups, 7);
+    let mut t = Table::new("real-network workload", &["metric", "value"]);
+    t.row(vec!["peers".into(), cluster.len().to_string()]);
+    t.row(vec!["lookups".into(), rep.lookups.to_string()]);
+    t.row(vec!["resolved".into(), rep.resolved.to_string()]);
+    t.row(vec!["one-hop %".into(), format!("{:.2}", rep.one_hop_ratio() * 100.0)]);
+    t.row(vec!["p50 latency".into(), latency(rep.latency.quantile_ns(0.5) as f64 / 1e9)]);
+    t.row(vec!["p99 latency".into(), latency(rep.latency.quantile_ns(0.99) as f64 / 1e9)]);
+    t.row(vec!["throughput (lookups/s)".into(), format!("{:.0}", rep.throughput())]);
+    t.row(vec!["maintenance out".into(), format!("{} bits", rep.maintenance_bits_out)]);
+    emit(&[t], args.has("csv"), out)?;
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_sim(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    use crate::dht::d1ht::{D1htCfg, D1htSim};
+    use crate::sim::churn::ChurnCfg;
+    use crate::sim::engine::{run_until, Queue};
+
+    let n = args.get_usize("peers", 1000)?;
+    let savg = args.get_f64("savg-min", 174.0)? * 60.0;
+    let secs = args.get_f64("secs", 600.0)?;
+    let tq = args.get("quarantine-tq").map(|v| v.parse()).transpose().context("--quarantine-tq")?;
+    let cfg = D1htCfg {
+        churn: ChurnCfg::exponential(savg),
+        quarantine_tq: tq,
+        lookup_rate: 1.0,
+        ..Default::default()
+    };
+    let mut sim = D1htSim::new(cfg);
+    let mut q = Queue::new();
+    sim.bootstrap(n, &mut q);
+    run_until(&mut sim, &mut q, 120.0);
+    sim.begin_recording(q.now());
+    sim.start_lookups(&mut q);
+    run_until(&mut sim, &mut q, 120.0 + secs);
+    sim.end_recording(q.now());
+    let m = sim.metrics();
+    let mut t = Table::new(
+        format!("simulated D1HT run (n={n}, Savg={:.0}min, {secs}s window)", savg / 60.0),
+        &["metric", "value"],
+    );
+    t.row(vec!["population".into(), sim.size().to_string()]);
+    t.row(vec!["per-peer maintenance".into(), bps(sim.per_peer_maintenance_bps())]);
+    t.row(vec!["aggregate maintenance".into(), bps(sim.per_peer_maintenance_bps() * sim.size() as f64)]);
+    t.row(vec!["lookups".into(), m.lookups_total().to_string()]);
+    t.row(vec!["one-hop %".into(), format!("{:.3}", m.one_hop_ratio() * 100.0)]);
+    t.row(vec!["lookup p50".into(), latency(m.lookup_latency.quantile_ns(0.5) as f64 / 1e9)]);
+    t.row(vec!["events/s".into(), format!("{:.2}", 2.0 * sim.size() as f64 / savg)]);
+    emit(&[t], args.has("csv"), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_to_string(argv: &[&str]) -> Result<String> {
+        let mut buf = Vec::new();
+        let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        run(&argv, &mut buf)?;
+        Ok(String::from_utf8(buf).unwrap())
+    }
+
+    #[test]
+    fn help_prints() {
+        let s = run_to_string(&["help"]).unwrap();
+        assert!(s.contains("USAGE"));
+        assert!(run_to_string(&[]).unwrap().contains("USAGE"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_to_string(&["bogus"]).is_err());
+    }
+
+    #[test]
+    fn exp_table1() {
+        let s = run_to_string(&["exp", "table1"]).unwrap();
+        assert!(s.contains("731"), "{s}");
+    }
+
+    #[test]
+    fn analyze_point() {
+        let s =
+            run_to_string(&["analyze", "--n", "1000000", "--savg-min", "169", "--quarantine", "0.24"])
+                .unwrap();
+        assert!(s.contains("D1HT"), "{s}");
+        assert!(s.contains("7.4 kbps") || s.contains("7.3 kbps"), "{s}");
+        assert!(s.contains("Quarantine"), "{s}");
+    }
+
+    #[test]
+    fn csv_mode() {
+        let s = run_to_string(&["exp", "fig8", "--csv"]).unwrap();
+        assert!(s.lines().any(|l| l.starts_with("peers,")), "{s}");
+    }
+
+    #[test]
+    fn flag_parser() {
+        let a = Args::parse(&["x".into(), "--k".into(), "v".into(), "--b".into()]);
+        assert_eq!(a.positional, vec!["x"]);
+        assert_eq!(a.get("k"), Some("v"));
+        assert!(a.has("b"));
+        assert!(!a.has("missing"));
+    }
+}

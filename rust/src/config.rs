@@ -1,0 +1,111 @@
+//! Runtime configuration: a small `key = value` file format plus
+//! environment overrides (`D1HT_<KEY>`), hand-rolled because the offline
+//! image carries no serde/toml (DESIGN.md §5). Comments (`#`) and blank
+//! lines are ignored; sections are not needed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Lookup with environment override: `D1HT_<KEY-uppercased>` wins.
+    pub fn get(&self, key: &str) -> Option<String> {
+        let env_key = format!("D1HT_{}", key.to_ascii_uppercase().replace('-', "_"));
+        std::env::var(env_key).ok().or_else(|| self.values.get(key).cloned())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key).as_deref() {
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("config {key}={v}: not a bool"),
+            None => Ok(default),
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.into(), value.into());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_typed_access() {
+        let c = Config::parse(
+            "# experiment defaults\n\
+             f = 0.01\n\
+             target_n = 4000   # peers\n\
+             quarantine = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_f64("f", 0.0).unwrap(), 0.01);
+        assert_eq!(c.get_usize("target_n", 0).unwrap(), 4000);
+        assert!(c.get_bool("quarantine", false).unwrap());
+        assert_eq!(c.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Config::parse("novalue\n").is_err());
+        let c = Config::parse("x = abc\n").unwrap();
+        assert!(c.get_f64("x", 0.0).is_err());
+        assert!(c.get_bool("x", false).is_err());
+    }
+
+    #[test]
+    fn env_override_wins() {
+        let c = Config::parse("seed = 1\n").unwrap();
+        std::env::set_var("D1HT_SEED", "42");
+        assert_eq!(c.get("seed").as_deref(), Some("42"));
+        std::env::remove_var("D1HT_SEED");
+        assert_eq!(c.get("seed").as_deref(), Some("1"));
+    }
+}

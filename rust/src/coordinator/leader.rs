@@ -1,0 +1,102 @@
+//! Experiment dispatch + report rendering.
+
+use anyhow::{bail, Result};
+
+use crate::experiments::{self, Fidelity};
+use crate::util::fmt::Table;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExperimentId {
+    Table1,
+    Fig3,
+    Fig4a,
+    Fig4b,
+    Fig5a,
+    Fig5b,
+    Fig6,
+    Fig7,
+    Fig8,
+    AblationAggregation,
+    AblationIdReuse,
+}
+
+impl ExperimentId {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "table1" => ExperimentId::Table1,
+            "fig3" => ExperimentId::Fig3,
+            "fig4a" => ExperimentId::Fig4a,
+            "fig4b" => ExperimentId::Fig4b,
+            "fig5a" => ExperimentId::Fig5a,
+            "fig5b" => ExperimentId::Fig5b,
+            "fig6" => ExperimentId::Fig6,
+            "fig7" => ExperimentId::Fig7,
+            "fig8" => ExperimentId::Fig8,
+            "ablation-aggregation" => ExperimentId::AblationAggregation,
+            "ablation-id-reuse" => ExperimentId::AblationIdReuse,
+            other => bail!(
+                "unknown experiment '{other}' (try: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8 ablation-aggregation ablation-id-reuse)"
+            ),
+        })
+    }
+
+    pub fn all() -> &'static [ExperimentId] {
+        &[
+            ExperimentId::Table1,
+            ExperimentId::Fig3,
+            ExperimentId::Fig4a,
+            ExperimentId::Fig4b,
+            ExperimentId::Fig5a,
+            ExperimentId::Fig5b,
+            ExperimentId::Fig6,
+            ExperimentId::Fig7,
+            ExperimentId::Fig8,
+        ]
+    }
+}
+
+/// Run one experiment and return its rendered tables.
+pub fn run_experiment(id: ExperimentId, fid: Fidelity) -> Result<Vec<Table>> {
+    Ok(match id {
+        ExperimentId::Table1 => vec![experiments::table1::run()],
+        ExperimentId::Fig3 => vec![experiments::fig3::run(fid)],
+        ExperimentId::Fig4a => vec![experiments::fig4::run(fid, 174.0)],
+        ExperimentId::Fig4b => vec![experiments::fig4::run(fid, 60.0)],
+        ExperimentId::Fig5a => vec![experiments::fig5::run(fid, false)],
+        ExperimentId::Fig5b => vec![experiments::fig5::run(fid, true)],
+        ExperimentId::Fig6 => vec![experiments::fig6::run(fid)],
+        ExperimentId::Fig7 => {
+            let via_artifact = crate::runtime::artifacts_available();
+            experiments::fig7::SESSIONS_MIN
+                .iter()
+                .map(|&s| experiments::fig7::run(s, via_artifact))
+                .collect::<Result<Vec<_>>>()?
+        }
+        ExperimentId::Fig8 => vec![experiments::fig8::run()],
+        ExperimentId::AblationAggregation => {
+            vec![experiments::ablations::aggregation(1024, 3600.0, 300.0)]
+        }
+        ExperimentId::AblationIdReuse => vec![experiments::ablations::id_reuse(256, 300.0)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(ExperimentId::parse("fig7").unwrap(), ExperimentId::Fig7);
+        assert_eq!(ExperimentId::parse("TABLE1").unwrap(), ExperimentId::Table1);
+        assert!(ExperimentId::parse("fig99").is_err());
+    }
+
+    #[test]
+    fn cheap_experiments_run() {
+        for id in [ExperimentId::Table1, ExperimentId::Fig8] {
+            let tables = run_experiment(id, Fidelity::Quick).unwrap();
+            assert!(!tables.is_empty());
+            assert!(!tables[0].rows.is_empty());
+        }
+    }
+}

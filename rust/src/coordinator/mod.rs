@@ -1,0 +1,7 @@
+//! The experiment leader: maps CLI experiment names onto drivers, runs
+//! them, and renders/persists the reports. This is the L3 entrypoint the
+//! `d1ht` binary delegates to.
+
+pub mod leader;
+
+pub use leader::{run_experiment, ExperimentId};

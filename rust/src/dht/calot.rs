@@ -1,0 +1,592 @@
+//! 1h-Calot [52] as a simulation world — the paper's main experimental
+//! baseline (§VII), reimplemented "after our D1HT code ... both systems
+//! share most of the code" (we share the engine, churn, network, metrics
+//! and table substrates; only the dissemination differs).
+//!
+//! Differences from D1HT (§II):
+//! * per-event propagation trees over ID intervals — **no buffering**:
+//!   every event costs one 48-byte message (+ ack) per peer;
+//! * explicit heartbeats (4/min to the successor, unacknowledged) for
+//!   failure detection, instead of piggybacking on maintenance traffic.
+
+use std::collections::BTreeMap;
+
+use crate::id::{space, Id};
+use crate::proto::messages::{Event, EventKind, Message, MessageBody};
+use crate::proto::sizes;
+use crate::routing::Table;
+use crate::sim::churn::{ChurnCfg, LeaveStyle, REJOIN_DELAY_SECS};
+use crate::sim::cpu::CpuModel;
+use crate::sim::engine::{Queue, World};
+use crate::sim::metrics::Metrics;
+use crate::sim::network::NetModel;
+use crate::util::rng::Rng;
+
+/// §VII.1: four heartbeats per minute.
+pub const HEARTBEAT_PERIOD_SECS: f64 = 15.0;
+/// Missed-heartbeat threshold before probing the predecessor.
+pub const MISSED_HEARTBEATS: f64 = 3.0;
+// (lookup retry timeout now lives in NetModel::lookup_retry_timeout)
+
+#[derive(Debug, Clone, Copy)]
+pub struct CalotCfg {
+    pub net: NetModel,
+    pub cpu: CpuModel,
+    pub churn: ChurnCfg,
+    pub lookup_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for CalotCfg {
+    fn default() -> Self {
+        CalotCfg {
+            net: NetModel::Hpc,
+            cpu: CpuModel::idle(1),
+            churn: ChurnCfg::none(),
+            lookup_rate: 1.0,
+            seed: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Ev {
+    Deliver { to: Id, msg: Message },
+    HeartbeatTick { peer: Id },
+    PredCheck { peer: Id },
+    Arrive,
+    SessionEnd { peer: Id },
+    Rejoin { label: u64 },
+    LookupTick,
+}
+
+struct Peer {
+    id: Id,
+    label: u64,
+    table: Table,
+    predecessor: Id,
+    last_pred_seen: f64,
+    metrics: Metrics,
+}
+
+pub struct CalotSim {
+    pub cfg: CalotCfg,
+    rng: Rng,
+    peers: BTreeMap<Id, Peer>,
+    truth: Table,
+    label_to_id: BTreeMap<u64, Id>,
+    next_label: u64,
+    recording: bool,
+    record_start: f64,
+    record_end: f64,
+}
+
+impl CalotSim {
+    pub fn new(cfg: CalotCfg) -> Self {
+        CalotSim {
+            rng: Rng::new(cfg.seed ^ 0xCA107),
+            cfg,
+            peers: BTreeMap::new(),
+            truth: Table::new(),
+            label_to_id: BTreeMap::new(),
+            next_label: 0,
+            recording: false,
+            record_start: 0.0,
+            record_end: 0.0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.truth.len()
+    }
+
+    pub fn bootstrap(&mut self, n: usize, q: &mut Queue<Ev>) {
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = self.next_label;
+            self.next_label += 1;
+            let id = self.fresh_id(label);
+            ids.push((label, id));
+        }
+        self.truth = Table::from_ids(ids.iter().map(|&(_, id)| id).collect());
+        for (label, id) in ids {
+            let peer = Peer {
+                id,
+                label,
+                table: self.truth.clone(),
+                predecessor: self.truth.predecessor_excl(id).unwrap_or(id),
+                last_pred_seen: q.now(),
+                metrics: Metrics::new(),
+            };
+            self.label_to_id.insert(label, id);
+            // stagger heartbeats uniformly
+            q.after(self.rng.next_f64() * HEARTBEAT_PERIOD_SECS, Ev::HeartbeatTick { peer: id });
+            q.after(MISSED_HEARTBEATS * HEARTBEAT_PERIOD_SECS, Ev::PredCheck { peer: id });
+            if self.cfg.churn.enabled() {
+                let s = self.cfg.churn.sample_session(&mut self.rng);
+                q.after(s, Ev::SessionEnd { peer: id });
+            }
+            self.peers.insert(id, peer);
+        }
+    }
+
+    pub fn start_growth(&mut self, target: usize, q: &mut Queue<Ev>) {
+        self.bootstrap(8.min(target), q);
+        for i in 0..target.saturating_sub(8) {
+            q.after(1.0 + i as f64, Ev::Arrive);
+        }
+    }
+
+    pub fn begin_recording(&mut self, now: f64) {
+        self.recording = true;
+        self.record_start = now;
+    }
+    pub fn end_recording(&mut self, now: f64) {
+        self.recording = false;
+        self.record_end = now;
+    }
+    pub fn start_lookups(&mut self, q: &mut Queue<Ev>) {
+        if self.cfg.lookup_rate > 0.0 {
+            q.after(0.0, Ev::LookupTick);
+        }
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        let mut all = Metrics::new();
+        for p in self.peers.values() {
+            all.merge(&p.metrics);
+        }
+        all.window_secs = (self.record_end - self.record_start).max(0.0);
+        all
+    }
+
+    pub fn per_peer_maintenance_bps(&self) -> f64 {
+        let m = self.metrics();
+        if self.peers.is_empty() {
+            0.0
+        } else {
+            m.maintenance.bps_out(m.window_secs) / self.peers.len() as f64
+        }
+    }
+
+    // ------------------------------------------------------------------
+
+    fn fresh_id(&mut self, label: u64) -> Id {
+        let mut id = space::peer_id_from_label(&format!("calot-{}-{label}", self.cfg.seed));
+        while self.truth.contains(id) || self.peers.contains_key(&id) {
+            id = Id(crate::util::rng::mix64(id.0 ^ 0xC0FFEE));
+        }
+        id
+    }
+
+    fn charge_send(&mut self, id: Id, bits: u64, maintenance: bool) {
+        if !self.recording {
+            return;
+        }
+        if let Some(p) = self.peers.get_mut(&id) {
+            if maintenance {
+                p.metrics.maintenance.send(bits);
+            }
+            p.metrics.total.send(bits);
+        }
+    }
+
+    fn charge_recv(&mut self, id: Id, bits: u64, maintenance: bool) {
+        if !self.recording {
+            return;
+        }
+        if let Some(p) = self.peers.get_mut(&id) {
+            if maintenance {
+                p.metrics.maintenance.recv(bits);
+            }
+            p.metrics.total.recv(bits);
+        }
+    }
+
+    /// 1h-Calot tree dissemination: `from` is responsible for informing
+    /// itself plus the next `range-1` successors; it repeatedly delegates
+    /// the *far half* of its range until only itself remains. Every peer
+    /// receives each event exactly once and sends O(log n) messages.
+    fn spread(&mut self, from: Id, ev: Event, range: u64, q: &mut Queue<Ev>) {
+        let mut k = range;
+        while k > 1 {
+            let far = k / 2; // delegate the far half [k-far, k)
+            let offset = (k - far) as usize;
+            let Some(peer) = self.peers.get(&from) else { return };
+            let target = match peer.table.succ(from, offset) {
+                Some(t) if t != from => t,
+                _ => break,
+            };
+            if !self.truth.contains(target) {
+                // stale entry: the real sender discovers this via the
+                // ack timeout, learns the leave, and re-routes (charged
+                // as the original send plus two retransmissions)
+                self.charge_send(from, 3 * sizes::V_C, true);
+                let peer = self.peers.get_mut(&from).unwrap();
+                peer.table.remove(target);
+                continue; // re-pick the slot occupant
+            }
+            let msg = Message {
+                from,
+                to: target,
+                seqno: 0,
+                body: MessageBody::CalotMaintenance { event: ev, range: far },
+            };
+            self.charge_send(from, sizes::V_C, true);
+            let delay = self.cfg.net.delay(&mut self.rng) + self.cfg.cpu.proc_delay();
+            q.after(delay, Ev::Deliver { to: target, msg });
+            k -= far;
+        }
+    }
+
+    fn deliver(&mut self, to: Id, msg: Message, q: &mut Queue<Ev>) {
+        let now = q.now();
+        if !self.peers.contains_key(&to) {
+            return;
+        }
+        match msg.body {
+            MessageBody::CalotMaintenance { event, range } => {
+                self.charge_recv(to, sizes::V_C, true);
+                // explicit ack, charged inline
+                self.charge_send(to, sizes::V_A, true);
+                self.charge_recv(msg.from, sizes::V_A, true);
+                let peer = self.peers.get_mut(&to).unwrap();
+                let fresh = peer.table.apply(&event);
+                match event.kind {
+                    EventKind::Leave if event.peer == peer.predecessor => {
+                        peer.predecessor = peer.table.predecessor_excl(peer.id).unwrap_or(peer.id);
+                    }
+                    EventKind::Join => {
+                        if event.peer.in_arc(peer.predecessor, peer.id) && event.peer != peer.id {
+                            peer.predecessor = event.peer;
+                            peer.last_pred_seen = now;
+                        }
+                    }
+                    _ => {}
+                }
+                // forward the delegated range even if the event was a
+                // duplicate for us (our subtree may still need it)
+                let _ = fresh;
+                self.spread(to, event, range, q);
+            }
+            MessageBody::Heartbeat => {
+                self.charge_recv(to, sizes::V_H, true);
+                let peer = self.peers.get_mut(&to).unwrap();
+                if msg.from == peer.predecessor {
+                    peer.last_pred_seen = now;
+                } else if !peer.table.contains(msg.from) {
+                    // learn from traffic
+                    peer.table.insert(msg.from);
+                    if msg.from.in_arc(peer.predecessor, peer.id) {
+                        peer.predecessor = msg.from;
+                        peer.last_pred_seen = now;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn heartbeat(&mut self, id: Id, q: &mut Queue<Ev>) {
+        let Some(peer) = self.peers.get(&id) else { return };
+        if let Some(succ) = peer.table.successor_excl(id) {
+            if succ != id {
+                let msg =
+                    Message { from: id, to: succ, seqno: 0, body: MessageBody::Heartbeat };
+                self.charge_send(id, sizes::V_H, true);
+                let delay = self.cfg.net.delay(&mut self.rng) + self.cfg.cpu.proc_delay();
+                q.after(delay, Ev::Deliver { to: succ, msg });
+            }
+        }
+        q.after(HEARTBEAT_PERIOD_SECS, Ev::HeartbeatTick { peer: id });
+    }
+
+    fn pred_check(&mut self, id: Id, q: &mut Queue<Ev>) {
+        let now = q.now();
+        let window = MISSED_HEARTBEATS * HEARTBEAT_PERIOD_SECS;
+        let Some(peer) = self.peers.get(&id) else { return };
+        let pred = peer.predecessor;
+        if now - peer.last_pred_seen > window && pred != id {
+            self.charge_send(id, sizes::V_A, true); // probe
+            if self.truth.contains(pred) {
+                self.charge_send(pred, sizes::V_A, true);
+                self.charge_recv(id, sizes::V_A, true);
+                if let Some(p) = self.peers.get_mut(&id) {
+                    p.last_pred_seen = now;
+                }
+            } else {
+                let n = self.truth.len().max(2) as u64;
+                let peer = self.peers.get_mut(&id).unwrap();
+                peer.table.remove(pred);
+                peer.predecessor = peer.table.predecessor_excl(id).unwrap_or(id);
+                peer.last_pred_seen = now;
+                self.spread(id, Event::leave(pred), n, q);
+            }
+        }
+        // half-window cadence keeps realized detection near the 3-missed
+        // heartbeat threshold instead of up to double it
+        q.after(window / 2.0, Ev::PredCheck { peer: id });
+    }
+
+    fn arrive(&mut self, q: &mut Queue<Ev>) {
+        let label = self.next_label;
+        self.next_label += 1;
+        self.insert_peer(label, q);
+    }
+
+    fn insert_peer(&mut self, label: u64, q: &mut Queue<Ev>) {
+        let now = q.now();
+        let id = match self.label_to_id.get(&label) {
+            Some(&id) if self.cfg.churn.reuse_ids => id,
+            _ => self.fresh_id(label),
+        };
+        if self.truth.contains(id) {
+            return;
+        }
+        let succ_id = self.truth.successor(id).unwrap_or(id);
+        let mut table = match self.peers.get(&succ_id) {
+            Some(s) => s.table.clone(),
+            None => self.truth.clone(),
+        };
+        if self.peers.contains_key(&succ_id) {
+            let bits = 320 + table.len() as u64 * 48;
+            self.charge_send(succ_id, bits, false);
+        }
+        table.insert(id);
+        let peer = Peer {
+            id,
+            label,
+            predecessor: table.predecessor_excl(id).unwrap_or(id),
+            last_pred_seen: now,
+            table,
+            metrics: Metrics::new(),
+        };
+        self.label_to_id.insert(label, id);
+        self.truth.insert(id);
+        let n = self.truth.len() as u64;
+        if let Some(s) = self.peers.get_mut(&succ_id) {
+            s.table.insert(id);
+            if id.in_arc(s.predecessor, s.id) {
+                s.predecessor = id;
+                s.last_pred_seen = now;
+            }
+        }
+        self.peers.insert(id, peer);
+        q.after(self.rng.next_f64() * HEARTBEAT_PERIOD_SECS, Ev::HeartbeatTick { peer: id });
+        q.after(MISSED_HEARTBEATS * HEARTBEAT_PERIOD_SECS, Ev::PredCheck { peer: id });
+        if self.cfg.churn.enabled() {
+            let s = self.cfg.churn.sample_session(&mut self.rng);
+            q.after(s, Ev::SessionEnd { peer: id });
+        }
+        // the successor announces the join to the whole system, one
+        // message per peer (no aggregation in 1h-Calot)
+        self.spread(succ_id, Event::join(id), n, q);
+    }
+
+    fn session_end(&mut self, id: Id, q: &mut Queue<Ev>) {
+        let Some(peer) = self.peers.remove(&id) else { return };
+        self.truth.remove(id);
+        let style = self.cfg.churn.sample_leave_style(&mut self.rng);
+        let n = self.truth.len().max(2) as u64;
+        if style == LeaveStyle::Graceful {
+            // the leaver's successor announces immediately
+            if let Some(sid) = peer.table.successor_excl(id).filter(|s| self.truth.contains(*s))
+            {
+                if let Some(s) = self.peers.get_mut(&sid) {
+                    s.table.remove(id);
+                    if s.predecessor == id {
+                        s.predecessor = s.table.predecessor_excl(s.id).unwrap_or(s.id);
+                    }
+                }
+                self.spread(sid, Event::leave(id), n, q);
+            }
+        }
+        // failures: detected later by the successor's heartbeat monitor
+        if self.cfg.churn.enabled() {
+            q.after(REJOIN_DELAY_SECS, Ev::Rejoin { label: peer.label });
+        }
+    }
+
+    fn lookup_tick(&mut self, q: &mut Queue<Ev>) {
+        let n = self.truth.len();
+        if n >= 2 {
+            let oi = self.rng.below(n as u64) as usize;
+            let origin = self.truth.ids()[oi];
+            let target = Id(self.rng.next_u64());
+            self.resolve_lookup(origin, target);
+        }
+        let rate = self.cfg.lookup_rate * n.max(1) as f64;
+        q.after(self.rng.exp(1.0 / rate.max(1e-9)), Ev::LookupTick);
+    }
+
+    fn resolve_lookup(&mut self, origin: Id, target: Id) {
+        let Some(owner) = self.truth.successor(target) else { return };
+        let mut latency = 0.0;
+        let guess = match self.peers.get(&origin) {
+            Some(p) => p.table.successor(target).unwrap_or(owner),
+            None => return,
+        };
+        let hop = |s: &mut Self| s.cfg.net.delay(&mut s.rng) + s.cfg.cpu.proc_delay();
+        latency += hop(self);
+        let one_hop = guess == owner;
+        if !one_hop {
+            if !self.truth.contains(guess) {
+                latency += self.cfg.net.lookup_retry_timeout() + hop(self);
+            } else {
+                latency += hop(self);
+            }
+        }
+        latency += hop(self);
+        if self.recording {
+            self.charge_send(origin, sizes::V_LOOKUP, false);
+            let p = self.peers.get_mut(&origin).unwrap();
+            if one_hop {
+                p.metrics.lookups_one_hop += 1;
+            } else {
+                p.metrics.lookups_retried += 1;
+            }
+            p.metrics.lookup_latency.record_secs(latency);
+        }
+    }
+}
+
+impl World for CalotSim {
+    type Ev = Ev;
+    fn handle(&mut self, _now: f64, ev: Ev, q: &mut Queue<Ev>) {
+        match ev {
+            Ev::Deliver { to, msg } => self.deliver(to, msg, q),
+            Ev::HeartbeatTick { peer } => self.heartbeat(peer, q),
+            Ev::PredCheck { peer } => self.pred_check(peer, q),
+            Ev::Arrive => self.arrive(q),
+            Ev::SessionEnd { peer } => self.session_end(peer, q),
+            Ev::Rejoin { label } => self.insert_peer(label, q),
+            Ev::LookupTick => self.lookup_tick(q),
+        }
+    }
+}
+
+impl super::SystemReport for CalotSim {
+    fn name(&self) -> &'static str {
+        "1h-Calot"
+    }
+    fn size(&self) -> usize {
+        self.truth.len()
+    }
+    fn metrics(&self) -> Metrics {
+        self.metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::run_until;
+
+    #[test]
+    fn spread_reaches_every_peer_exactly_once() {
+        // no churn, no lookups: inject one event by hand and count
+        let mut sim = CalotSim::new(CalotCfg { lookup_rate: 0.0, ..Default::default() });
+        let mut q = Queue::new();
+        sim.bootstrap(33, &mut q);
+        sim.begin_recording(0.0);
+        let ids: Vec<Id> = sim.truth.ids().to_vec();
+        let origin = ids[0];
+        let ev = Event::join(Id(0x1234_5678_9ABC));
+        let n = sim.truth.len() as u64;
+        sim.spread(origin, ev, n, &mut q);
+        run_until(&mut sim, &mut q, 5.0);
+        sim.end_recording(5.0);
+        // every peer but the origin applied the event exactly once
+        let have: usize = sim
+            .peers
+            .values()
+            .filter(|p| p.table.contains(Id(0x1234_5678_9ABC)))
+            .count();
+        assert_eq!(have, 32, "everyone except the origin's own table");
+        // message count: n-1 deliveries (each charged once at the wire)
+        let m = sim.metrics();
+        let maint_msgs = m.maintenance.msgs_out;
+        // 32 event messages + 32 acks (heartbeats excluded by t<15s? no:
+        // staggered heartbeats may fire) — so lower-bound the count
+        assert!(maint_msgs >= 64, "msgs {maint_msgs}");
+    }
+
+    #[test]
+    fn heartbeats_flow_without_churn() {
+        let mut sim = CalotSim::new(CalotCfg { lookup_rate: 0.0, ..Default::default() });
+        let mut q = Queue::new();
+        sim.bootstrap(16, &mut q);
+        sim.begin_recording(0.0);
+        run_until(&mut sim, &mut q, 60.0);
+        sim.end_recording(60.0);
+        let m = sim.metrics();
+        // 16 peers * 4/min => ~64 heartbeats
+        assert!(
+            (48..=90).contains(&(m.maintenance.msgs_out as i64)),
+            "heartbeats {}",
+            m.maintenance.msgs_out
+        );
+    }
+
+    #[test]
+    fn one_hop_ratio_above_99_under_churn() {
+        let mut sim = CalotSim::new(CalotCfg {
+            churn: ChurnCfg::exponential(174.0 * 60.0),
+            lookup_rate: 2.0,
+            ..Default::default()
+        });
+        let mut q = Queue::new();
+        sim.bootstrap(200, &mut q);
+        run_until(&mut sim, &mut q, 60.0);
+        sim.begin_recording(q.now());
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, 60.0 + 600.0);
+        sim.end_recording(q.now());
+        let m = sim.metrics();
+        assert!(m.lookups_total() > 10_000);
+        assert!(m.one_hop_ratio() > 0.99, "ratio {}", m.one_hop_ratio());
+    }
+
+    #[test]
+    fn costs_more_than_d1ht_under_same_churn() {
+        // NOTE on scale: Fig. 3 shows near-parity at 1K peers and a
+        // growing gap from 2K upward — the keep-alive floor dominates
+        // D1HT at small n, so the comparison must run at the paper's
+        // crossover-passed sizes (4,000 peers, S_avg = 60 min = Fig. 4b's
+        // most dynamic cell; analytics: calot ~1.5 kbps vs d1ht ~0.9).
+        use crate::dht::d1ht::{D1htCfg, D1htSim};
+        let savg = 60.0 * 60.0;
+        let n = 4000;
+
+        let mut cal = CalotSim::new(CalotCfg {
+            churn: ChurnCfg::exponential(savg),
+            lookup_rate: 0.0,
+            ..Default::default()
+        });
+        let mut qc = Queue::new();
+        cal.bootstrap(n, &mut qc);
+        run_until(&mut cal, &mut qc, 60.0);
+        cal.begin_recording(qc.now());
+        run_until(&mut cal, &mut qc, 60.0 + 240.0);
+        cal.end_recording(qc.now());
+
+        let mut d = D1htSim::new(D1htCfg {
+            churn: ChurnCfg::exponential(savg),
+            lookup_rate: 0.0,
+            ..Default::default()
+        });
+        let mut qd = Queue::new();
+        d.bootstrap(n, &mut qd);
+        run_until(&mut d, &mut qd, 60.0);
+        d.begin_recording(qd.now());
+        run_until(&mut d, &mut qd, 60.0 + 240.0);
+        d.end_recording(qd.now());
+
+        let c_bps = cal.per_peer_maintenance_bps();
+        let d_bps = d.per_peer_maintenance_bps();
+        assert!(
+            c_bps > d_bps,
+            "calot {c_bps:.1} bps must exceed d1ht {d_bps:.1} bps"
+        );
+    }
+}

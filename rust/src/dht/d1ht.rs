@@ -1,0 +1,932 @@
+//! The D1HT system as a simulation world (§III–§VI).
+//!
+//! Every peer keeps a full routing table and an [`Edra`] instance. The
+//! world drives: Θ-interval closes (maintenance dissemination), Rule-5
+//! predecessor monitoring, the §VII-A churn process (half SIGKILL-style
+//! failures that lose buffered events, half graceful leaves that flush),
+//! join via successor table transfer, the optional Quarantine gate, and
+//! the lookup workload.
+//!
+//! Lookup resolution is evaluated inline against the ground-truth
+//! membership: a lookup is *one-hop* iff the origin's routing table
+//! yields the true owner; otherwise it is charged the retry penalty
+//! (timeout on a departed peer, or a forward hop on a missed join) and
+//! counted against `f`. This keeps the event count tractable at the
+//! paper's 30 lookups/s/peer scale while measuring exactly the quantity
+//! the paper reports (the one-hop ratio and the latency distribution).
+
+use std::collections::BTreeMap;
+
+use crate::edra::Edra;
+use crate::id::{space, Id};
+use crate::proto::messages::{Event, Message, MessageBody};
+use crate::proto::sizes;
+use crate::routing::Table;
+use crate::sim::churn::{ChurnCfg, LeaveStyle, REJOIN_DELAY_SECS};
+use crate::sim::cpu::CpuModel;
+use crate::sim::engine::{Queue, World};
+use crate::sim::metrics::Metrics;
+use crate::sim::network::NetModel;
+use crate::util::rng::Rng;
+
+/// Retransmission timeout for lost maintenance messages (UDP + ack, §VI).
+pub const RTO_SECS: f64 = 1.0;
+/// Timeout before a lookup addressed to a departed peer is retried.
+// (lookup retry timeout now lives in NetModel::lookup_retry_timeout)
+
+#[derive(Debug, Clone, Copy)]
+pub struct D1htCfg {
+    pub f: f64,
+    pub net: NetModel,
+    pub cpu: CpuModel,
+    pub churn: ChurnCfg,
+    /// Quarantine period T_q (§V); None disables the mechanism.
+    pub quarantine_tq: Option<f64>,
+    /// Lookups per second per peer during measurement.
+    pub lookup_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for D1htCfg {
+    fn default() -> Self {
+        D1htCfg {
+            f: crate::DEFAULT_F,
+            net: NetModel::Hpc,
+            cpu: CpuModel::idle(1),
+            churn: ChurnCfg::none(),
+            quarantine_tq: None,
+            lookup_rate: 1.0,
+            seed: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Ev {
+    Deliver { to: Id, msg: Message },
+    /// A lost maintenance message re-sent after RTO (loss is resolved at
+    /// send time; the retransmission recharges the wire and re-samples).
+    Redeliver { to: Id, msg: Message, attempt: u8 },
+    IntervalClose { peer: Id, epoch: u64 },
+    PredCheck { peer: Id, epoch: u64 },
+    /// A brand-new peer arrives (growth phase or churn rejoin).
+    Arrive { label: u64 },
+    /// Quarantine served (or zero): the peer enters the overlay.
+    OverlayInsert { label: u64 },
+    SessionEnd { peer: Id },
+    Rejoin { label: u64 },
+    /// Global lookup generator (one stream, rate n·lookup_rate).
+    LookupTick,
+}
+
+struct Peer {
+    id: Id,
+    label: u64,
+    /// Incarnation counter: timers carry the epoch they were armed for,
+    /// so a same-ID rejoin does not resurrect the previous life's timer
+    /// chains (which would multiply keep-alives and probes).
+    epoch: u64,
+    table: Table,
+    edra: Edra,
+    predecessor: Id,
+    last_pred_seen: f64,
+    /// Events acknowledged recently: a peer acknowledges each event at
+    /// most once (§IV), independent of its table state. Entries expire
+    /// (EVENT_SEEN_EXPIRY) so a same-ID rejoin 3 minutes later is a new
+    /// event.
+    seen: std::collections::HashMap<Event, f64>,
+    /// §VI join protocol: joiners this peer admitted recently; they get
+    /// buffered events forwarded directly until the dissemination trees
+    /// include them.
+    recent_joiners: Vec<(Id, f64)>,
+    metrics: Metrics,
+}
+
+/// Grace period during which an admitting successor keeps feeding its
+/// joiner with events (§VI's "until p receives messages with all
+/// different TTLs", made time-bounded).
+const JOIN_GRACE_SECS: f64 = 30.0;
+
+/// Size bound for the per-peer acknowledged-event set; entries older
+/// than this are reclaimable on overflow (generous: far above any
+/// dissemination time).
+const EVENT_SEEN_EXPIRY: f64 = 3600.0;
+
+impl Peer {
+    /// True the first time `ev` is seen in the peer's *current view of
+    /// that peer's membership*: acknowledging join(X) clears any seen
+    /// leave(X) and vice versa, so a same-ID rejoin is a fresh event
+    /// while duplicate copies of one event are suppressed no matter how
+    /// slowly they travel (time-based expiry would let stragglers
+    /// recirculate — see the Rule-2 note in `deliver`).
+    fn first_ack(&mut self, ev: Event, now: f64) -> bool {
+        if self.seen.len() > 100_000 {
+            let cutoff = now - EVENT_SEEN_EXPIRY;
+            self.seen.retain(|_, &mut t| t > cutoff);
+        }
+        if self.seen.contains_key(&ev) {
+            return false;
+        }
+        let opposite = Event {
+            peer: ev.peer,
+            kind: match ev.kind {
+                crate::proto::messages::EventKind::Join => {
+                    crate::proto::messages::EventKind::Leave
+                }
+                crate::proto::messages::EventKind::Leave => {
+                    crate::proto::messages::EventKind::Join
+                }
+            },
+            default_port: ev.default_port,
+        };
+        self.seen.remove(&opposite);
+        self.seen.insert(ev, now);
+        true
+    }
+}
+
+pub struct D1htSim {
+    pub cfg: D1htCfg,
+    rng: Rng,
+    peers: BTreeMap<Id, Peer>,
+    /// Quarantined peers: label -> session time remaining at insertion.
+    quarantined: BTreeMap<u64, f64>,
+    /// Ground-truth overlay membership.
+    truth: Table,
+    label_to_id: BTreeMap<u64, Id>,
+    next_label: u64,
+    next_epoch: u64,
+    /// Metrics are recorded only inside the measurement window.
+    recording: bool,
+    record_start: f64,
+    record_end: f64,
+    pub events_lost_to_failures: u64,
+    /// Diagnostics: interval closes (timer-driven and cap-driven).
+    pub closes_timer: u64,
+    pub closes_cap: u64,
+    pub probes: u64,
+    /// Diagnostics: how often each event was locally detected (should be 1).
+    pub detect_counts: std::collections::HashMap<Event, u32>,
+}
+
+impl D1htSim {
+    pub fn new(cfg: D1htCfg) -> Self {
+        D1htSim {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            peers: BTreeMap::new(),
+            quarantined: BTreeMap::new(),
+            truth: Table::new(),
+            label_to_id: BTreeMap::new(),
+            next_label: 0,
+            next_epoch: 1,
+            recording: false,
+            record_start: 0.0,
+            record_end: 0.0,
+            events_lost_to_failures: 0,
+            closes_timer: 0,
+            closes_cap: 0,
+            probes: 0,
+            detect_counts: Default::default(),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.truth.len()
+    }
+    pub fn truth(&self) -> &Table {
+        &self.truth
+    }
+
+    /// Bootstrap `n` peers instantly with consistent tables (tests and
+    /// latency experiments start from steady state, as after a long
+    /// quiet period).
+    pub fn bootstrap(&mut self, n: usize, q: &mut Queue<Ev>) {
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = self.next_label;
+            self.next_label += 1;
+            let id = self.fresh_id(label);
+            ids.push((label, id));
+        }
+        self.truth = Table::from_ids(ids.iter().map(|&(_, id)| id).collect());
+        let rate_prior = self
+            .cfg
+            .churn
+            .savg_secs
+            .map(|s| 2.0 * n as f64 / s)
+            .unwrap_or(0.0);
+        for (label, id) in ids {
+            let mut edra = Edra::new(id, self.cfg.f, q.now());
+            edra.tuner = crate::edra::ThetaTuner::with_prior_rate(self.cfg.f, rate_prior);
+            self.next_epoch += 1;
+            let peer = Peer {
+                id,
+                label,
+                epoch: self.next_epoch,
+                table: self.truth.clone(),
+                edra,
+                predecessor: self.truth.predecessor_excl(id).unwrap_or(id),
+                last_pred_seen: q.now(),
+                seen: Default::default(),
+                recent_joiners: Vec::new(),
+                metrics: Metrics::new(),
+            };
+            self.label_to_id.insert(label, id);
+            self.schedule_peer_timers(&peer, q);
+            if self.cfg.churn.enabled() {
+                let s = self.cfg.churn.sample_session(&mut self.rng);
+                q.after(s, Ev::SessionEnd { peer: id });
+            }
+            self.peers.insert(id, peer);
+        }
+    }
+
+    /// Begin the §VII-A growth phase: 8 bootstrap peers, then one
+    /// arrival per second until the harness-selected target.
+    pub fn start_growth(&mut self, target: usize, q: &mut Queue<Ev>) {
+        self.bootstrap(8.min(target), q);
+        for i in 0..target.saturating_sub(8) {
+            q.after(1.0 + i as f64, Ev::Arrive { label: u64::MAX }); // label assigned on arrival
+        }
+    }
+
+    pub fn begin_recording(&mut self, now: f64) {
+        self.recording = true;
+        self.record_start = now;
+    }
+
+    pub fn end_recording(&mut self, now: f64) {
+        self.recording = false;
+        self.record_end = now;
+    }
+
+    /// Start the lookup workload (call at the top of the measurement
+    /// phase; ticks reschedule themselves).
+    pub fn start_lookups(&mut self, q: &mut Queue<Ev>) {
+        if self.cfg.lookup_rate > 0.0 {
+            q.after(0.0, Ev::LookupTick);
+        }
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        let mut all = Metrics::new();
+        for p in self.peers.values() {
+            all.merge(&p.metrics);
+        }
+        all.window_secs = (self.record_end - self.record_start).max(0.0);
+        all
+    }
+
+    /// Per-peer average outgoing maintenance bandwidth (bps).
+    pub fn per_peer_maintenance_bps(&self) -> f64 {
+        let m = self.metrics();
+        if self.peers.is_empty() {
+            0.0
+        } else {
+            m.maintenance.bps_out(m.window_secs) / self.peers.len() as f64
+        }
+    }
+
+    /// Diagnostics: one peer's raw tuner samples.
+    pub fn debug_one_tuner(&self) -> Vec<f64> {
+        self.peers.values().next().map(|p| p.edra.tuner.sample_times()).unwrap_or_default()
+    }
+
+    /// Diagnostics: per-peer observed event-rate distribution.
+    pub fn rate_spread(&self) -> (f64, f64, f64) {
+        let mut v: Vec<f64> = self.peers.values().map(|p| p.edra.tuner.observed_rate()).collect();
+        v.sort_by(f64::total_cmp);
+        if v.is_empty() { return (0.0, 0.0, 0.0); }
+        (v[0], v[v.len()/2], v[v.len()-1])
+    }
+
+    /// Diagnostics: per-peer tuned theta distribution (min, median, max).
+    pub fn theta_spread(&self) -> (f64, f64, f64) {
+        let n = self.truth.len().max(2);
+        let mut v: Vec<f64> = self.peers.values().map(|p| p.edra.tuner.theta(n)).collect();
+        v.sort_by(f64::total_cmp);
+        if v.is_empty() { return (0.0, 0.0, 0.0); }
+        (v[0], v[v.len()/2], v[v.len()-1])
+    }
+
+    /// Mean routing-table staleness vs ground truth (diagnostics).
+    pub fn sample_staleness(&mut self) {
+        let truth = self.truth.clone();
+        for p in self.peers.values_mut() {
+            p.metrics.staleness.push(p.table.staleness_vs(&truth));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    fn fresh_id(&mut self, label: u64) -> Id {
+        // Derived like the real system: hash of the (virtual) address.
+        let mut id = space::peer_id_from_label(&format!("peer-{}-{label}", self.cfg.seed));
+        while self.truth.contains(id) || self.peers.contains_key(&id) {
+            id = Id(crate::util::rng::mix64(id.0 ^ 0x9E3779B97F4A7C15));
+        }
+        id
+    }
+
+    fn schedule_peer_timers(&self, peer: &Peer, q: &mut Queue<Ev>) {
+        let n = self.truth.len().max(2);
+        q.after(peer.edra.tuner.theta(n), Ev::IntervalClose { peer: peer.id, epoch: peer.epoch });
+        q.after(peer.edra.t_detect(n), Ev::PredCheck { peer: peer.id, epoch: peer.epoch });
+    }
+
+    fn charge_send(&mut self, id: Id, bits: u64, maintenance: bool) {
+        if !self.recording {
+            return;
+        }
+        if let Some(p) = self.peers.get_mut(&id) {
+            if maintenance {
+                p.metrics.maintenance.send(bits);
+            }
+            p.metrics.total.send(bits);
+        }
+    }
+
+    fn charge_recv(&mut self, id: Id, bits: u64, maintenance: bool) {
+        if !self.recording {
+            return;
+        }
+        if let Some(p) = self.peers.get_mut(&id) {
+            if maintenance {
+                p.metrics.maintenance.recv(bits);
+            }
+            p.metrics.total.recv(bits);
+        }
+    }
+
+    /// Transmit a maintenance message with loss + ack + retransmit
+    /// semantics (acks are charged inline; losses recharge after RTO).
+    fn send_maintenance(&mut self, msg: Message, q: &mut Queue<Ev>, attempt: u8) {
+        let bits = msg.wire_bits();
+        self.charge_send(msg.from, bits, true);
+        if self.rng.chance(self.cfg.net.loss()) && attempt < 3 {
+            let to = msg.to;
+            q.after(RTO_SECS, Ev::Redeliver { to, msg, attempt: attempt + 1 });
+            return;
+        }
+        let delay = self.cfg.net.delay(&mut self.rng) + self.cfg.cpu.proc_delay();
+        q.after(delay, Ev::Deliver { to: msg.to, msg });
+    }
+
+    fn close_interval(&mut self, id: Id, epoch: u64, q: &mut Queue<Ev>) {
+        if self.peers.get(&id).map(|p| p.epoch) != Some(epoch) {
+            return; // timer from a previous incarnation
+        }
+        self.close_interval_inner(id, q, true)
+    }
+
+    fn close_interval_inner(&mut self, id: Id, q: &mut Queue<Ev>, schedule_next: bool) {
+        if schedule_next { self.closes_timer += 1 } else { self.closes_cap += 1 }
+        let now = q.now();
+        let n = self.truth.len().max(2);
+        let Some(peer) = self.peers.get_mut(&id) else { return };
+        // §VI: freshly admitted joiners receive every buffered event
+        // directly, covering disseminations whose trees predate them.
+        peer.recent_joiners.retain(|&(_, t)| now - t < JOIN_GRACE_SECS);
+        let grace: Vec<(Id, Vec<Event>)> = if peer.recent_joiners.is_empty() {
+            Vec::new()
+        } else {
+            let events = peer.edra.buffered_events();
+            if events.is_empty() {
+                Vec::new()
+            } else {
+                peer.recent_joiners.iter().map(|&(j, _)| (j, events.clone())).collect()
+            }
+        };
+        // split borrow: the table is read-only while EDRA drains
+        let Peer { table, edra, .. } = peer;
+        let outgoing = edra.close_interval(table, now);
+        if schedule_next {
+            let epoch = peer.epoch;
+            q.after(peer.edra.tuner.theta(n).max(1e-3), Ev::IntervalClose { peer: id, epoch });
+        }
+        let mut msgs = Vec::with_capacity(outgoing.len());
+        for out in outgoing {
+            msgs.push(Message {
+                from: id,
+                to: out.target,
+                seqno: 0,
+                body: MessageBody::Maintenance { ttl: out.ttl, events: out.events },
+            });
+        }
+        for msg in msgs {
+            self.send_maintenance(msg, q, 0);
+        }
+        for (joiner, events) in grace {
+            if self.peers.contains_key(&joiner) {
+                let msg = Message {
+                    from: id,
+                    to: joiner,
+                    seqno: 0,
+                    body: MessageBody::Maintenance { ttl: 0, events },
+                };
+                self.send_maintenance(msg, q, 0);
+            }
+        }
+    }
+
+    fn deliver(&mut self, to: Id, msg: Message, q: &mut Queue<Ev>) {
+        let now = q.now();
+        let bits = msg.wire_bits();
+        if self.peers.get(&to).is_none() {
+            // Recipient departed while the message was in flight. The
+            // sender's ack timeout fires (§III reliability): it learns
+            // the leave (§IV-C) and re-routes the maintenance message to
+            // the slot's new occupant so the subtree is not starved.
+            if let MessageBody::Maintenance { ttl, events } = msg.body {
+                let from = msg.from;
+                if self.peers.contains_key(&from) {
+                    // two timed-out retransmissions charged to the sender
+                    self.charge_send(from, 2 * bits, true);
+                    let sender = self.peers.get_mut(&from).unwrap();
+                    // §IV-C learning is LOCAL-ONLY: the sender cleans its
+                    // table but does not announce — Rule 5 designates one
+                    // announcer (the failed peer's successor), and
+                    // duplicate announcements would re-disseminate after
+                    // the dedup window and inflate every rate estimator.
+                    sender.table.remove(to);
+                    let _ = now;
+                    // re-target: same TTL slot, recomputed occupant
+                    let k = 1usize << ttl.min(62);
+                    let tlen = sender.table.len();
+                    if tlen > 1 {
+                        if let Some(new_target) = sender.table.succ(from, k % tlen) {
+                            if new_target != from && new_target != to {
+                                let retry = Message {
+                                    from,
+                                    to: new_target,
+                                    seqno: 0,
+                                    body: MessageBody::Maintenance { ttl, events },
+                                };
+                                q.after(RTO_SECS, Ev::Redeliver {
+                                    to: new_target,
+                                    msg: retry,
+                                    attempt: 0,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        self.charge_recv(to, bits, true);
+        match msg.body {
+            MessageBody::Maintenance { ttl, events } => {
+                // explicit UDP ack (Fig. 2): charged both ways, no event
+                self.charge_send(to, sizes::V_A, true);
+                self.charge_recv(msg.from, sizes::V_A, true);
+                let peer = self.peers.get_mut(&to).unwrap();
+                if ttl == 0 && msg.from == peer.predecessor {
+                    peer.last_pred_seen = now;
+                }
+                // A message from an unknown peer implies its insertion
+                // (§IV-C "learn from maintenance messages").
+                if !peer.table.contains(msg.from) {
+                    peer.table.insert(msg.from);
+                }
+                for ev in events {
+                    // Rule 2: each event is acknowledged — and hence
+                    // forwarded (Rule 3) — exactly once per peer,
+                    // independent of whether it is news to OUR table (a
+                    // recent joiner's snapshot already contains in-flight
+                    // events; dropping them would starve its subtree,
+                    // while re-acknowledging duplicates would circulate
+                    // events forever on transiently inconsistent rings).
+                    if peer.first_ack(ev, now) {
+                        peer.edra.acknowledge(ev, ttl, now);
+                    }
+                    if peer.table.apply(&ev) {
+                        if ev.peer == peer.predecessor
+                            && ev.kind == crate::proto::messages::EventKind::Leave
+                        {
+                            peer.predecessor =
+                                peer.table.predecessor_excl(peer.id).unwrap_or(peer.id);
+                        }
+                        if ev.kind == crate::proto::messages::EventKind::Join {
+                            // new predecessor?
+                            if ev.peer.in_arc(peer.predecessor, peer.id) && ev.peer != peer.id {
+                                peer.predecessor = ev.peer;
+                                peer.last_pred_seen = now;
+                            }
+                        }
+                    }
+                }
+                // §VII-B: intervals also close early when the buffered
+                // events hit the Eq. IV.4 cap (without disturbing the
+                // regular timer chain).
+                let n = self.truth.len().max(2);
+                if let Some(p) = self.peers.get(&to) {
+                    if p.edra.buffered() >= p.edra.tuner.event_cap(n) {
+                        self.close_interval_inner(to, q, false);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn pred_check(&mut self, id: Id, epoch: u64, q: &mut Queue<Ev>) {
+        let now = q.now();
+        let n = self.truth.len().max(2);
+        let Some(peer) = self.peers.get(&id) else { return };
+        if peer.epoch != epoch {
+            return; // timer from a previous incarnation
+        }
+        let pred = peer.predecessor;
+        let t_detect = peer.edra.t_detect(n);
+        let overdue = now - peer.last_pred_seen > t_detect && pred != id;
+        if overdue {
+            // Rule 5: probe, then report on silence.
+            self.probes += 1;
+            self.charge_send(id, sizes::V_A, true);
+            let pred_alive = self.truth.contains(pred);
+            if pred_alive {
+                self.charge_recv(pred, sizes::V_A, true);
+                self.charge_send(pred, sizes::V_A, true);
+                self.charge_recv(id, sizes::V_A, true);
+                if let Some(p) = self.peers.get_mut(&id) {
+                    p.last_pred_seen = now;
+                }
+            } else {
+                let peer = self.peers.get_mut(&id).unwrap();
+                peer.table.remove(pred);
+                let ev = Event::leave(pred);
+                if peer.first_ack(ev, now) {
+                    peer.edra.detect_local(ev, n, now);
+                    *self.detect_counts.entry(ev).or_insert(0) += 1;
+                }
+                let peer = self.peers.get_mut(&id).unwrap();
+                peer.predecessor = peer.table.predecessor_excl(peer.id).unwrap_or(peer.id);
+                peer.last_pred_seen = now;
+            }
+        }
+        if let Some(peer) = self.peers.get(&id) {
+            // check at twice the detection resolution so the realized
+            // delay matches the model's T_detect = 2Θ instead of adding
+            // a whole extra check period of quantization
+            let epoch = peer.epoch;
+            q.after((peer.edra.t_detect(n) / 2.0).max(0.25), Ev::PredCheck { peer: id, epoch });
+        }
+    }
+
+    fn arrive(&mut self, q: &mut Queue<Ev>) {
+        let label = self.next_label;
+        self.next_label += 1;
+        match self.cfg.quarantine_tq {
+            Some(tq) => {
+                // §V: wait T_q before entering the overlay; sessions that
+                // end earlier never produce events at all.
+                let s = if self.cfg.churn.enabled() {
+                    self.cfg.churn.sample_session(&mut self.rng)
+                } else {
+                    f64::INFINITY
+                };
+                if s <= tq {
+                    q.after(s + REJOIN_DELAY_SECS, Ev::Rejoin { label });
+                    return;
+                }
+                self.quarantined.insert(label, s - tq);
+                q.after(tq, Ev::OverlayInsert { label });
+            }
+            None => self.overlay_insert(label, q),
+        }
+    }
+
+    fn overlay_insert(&mut self, label: u64, q: &mut Queue<Ev>) {
+        let session_left = self.quarantined.remove(&label);
+        let now = q.now();
+        let id = match self.label_to_id.get(&label) {
+            Some(&id) if self.cfg.churn.reuse_ids => id,
+            _ => self.fresh_id(label),
+        };
+        if self.truth.contains(id) {
+            return; // stale double-insert
+        }
+        // join protocol (§VI): successor transfers its routing table
+        let succ_id = self.truth.successor(id).unwrap_or(id);
+        let (mut table, rate_prior) = match self.peers.get(&succ_id) {
+            Some(s) => (s.table.clone(), s.edra.tuner.observed_rate()),
+            None => (self.truth.clone(), 0.0),
+        };
+        if self.peers.contains_key(&succ_id) {
+            // table transfer over TCP: total traffic, not maintenance
+            let bits = 320 + table.len() as u64 * 48;
+            self.charge_send(succ_id, bits, false);
+        }
+        table.insert(id);
+        self.charge_recv(id, 320 + table.len() as u64 * 48, false);
+        let mut edra = Edra::new(id, self.cfg.f, now);
+        edra.tuner = crate::edra::ThetaTuner::with_prior_rate(self.cfg.f, rate_prior);
+        self.next_epoch += 1;
+        let peer = Peer {
+            id,
+            label,
+            epoch: self.next_epoch,
+            predecessor: table.predecessor_excl(id).unwrap_or(id),
+            last_pred_seen: now,
+            table,
+            edra,
+            seen: Default::default(),
+            recent_joiners: Vec::new(),
+            metrics: Metrics::new(),
+        };
+        self.label_to_id.insert(label, id);
+        self.truth.insert(id);
+        let n = self.truth.len();
+        // the successor detects and announces the join (Rule 6)
+        if let Some(s) = self.peers.get_mut(&succ_id) {
+            s.table.insert(id);
+            s.recent_joiners.push((id, now));
+            if s.first_ack(Event::join(id), now) {
+                s.edra.detect_local(Event::join(id), n, now);
+                *self.detect_counts.entry(Event::join(id)).or_insert(0) += 1;
+            }
+            if id.in_arc(s.predecessor, s.id) {
+                s.predecessor = id;
+                s.last_pred_seen = now;
+            }
+        }
+        self.schedule_peer_timers(&peer, q);
+        self.peers.insert(id, peer);
+        if self.cfg.churn.enabled() {
+            // a peer that passed through quarantine carries the remainder
+            // of the session it arrived with
+            let s = session_left
+                .filter(|s| s.is_finite())
+                .unwrap_or_else(|| self.cfg.churn.sample_session(&mut self.rng));
+            q.after(s, Ev::SessionEnd { peer: id });
+        }
+    }
+
+    fn session_end(&mut self, id: Id, q: &mut Queue<Ev>) {
+        let now = q.now();
+        let Some(mut peer) = self.peers.remove(&id) else { return };
+        self.truth.remove(id);
+        let style = self.cfg.churn.sample_leave_style(&mut self.rng);
+        let n = self.truth.len().max(2);
+        let succ_id = peer.table.successor_excl(id).filter(|s| self.truth.contains(*s));
+        match style {
+            LeaveStyle::Graceful => {
+                // §VII-A: graceful leavers warn the successor and flush
+                // buffered events to it.
+                if let Some(sid) = succ_id {
+                    let buffered = {
+                        let Peer { table, edra, .. } = &mut peer;
+                        edra.close_interval(table, now)
+                    };
+                    let flushed: u64 =
+                        buffered.iter().map(|o| o.events.len() as u64).sum();
+                    let bits = sizes::V_M + flushed * sizes::M_EVENT_AVG;
+                    self.charge_send(id, bits, true);
+                    self.charge_recv(sid, bits, true);
+                    if let Some(s) = self.peers.get_mut(&sid) {
+                        for o in &buffered {
+                            for ev in &o.events {
+                                s.table.apply(ev);
+                                if s.first_ack(*ev, now) {
+                                    s.edra.acknowledge(*ev, o.ttl, now);
+                                }
+                            }
+                        }
+                        s.table.remove(id);
+                        let lv = Event::leave(id);
+                        if s.first_ack(lv, now) {
+                            s.edra.detect_local(lv, n, now);
+                            *self.detect_counts.entry(lv).or_insert(0) += 1;
+                        }
+                        if s.predecessor == id {
+                            s.predecessor = s.table.predecessor_excl(s.id).unwrap_or(s.id);
+                        }
+                    }
+                }
+            }
+            LeaveStyle::Failure => {
+                // SIGKILL: buffered events die with the peer (§IV-C).
+                self.events_lost_to_failures += peer.edra.buffered() as u64;
+                // detection happens via PredCheck at the successor
+            }
+        }
+        if self.cfg.churn.enabled() {
+            q.after(REJOIN_DELAY_SECS, Ev::Rejoin { label: peer.label });
+        }
+    }
+
+    fn lookup_tick(&mut self, q: &mut Queue<Ev>) {
+        let n = self.truth.len();
+        if n >= 2 {
+            // random origin, random target (§III: uniform targets)
+            let oi = self.rng.below(n as u64) as usize;
+            let origin = self.truth.ids()[oi];
+            let target = Id(self.rng.next_u64());
+            self.resolve_lookup(origin, target, q.now());
+        }
+        let rate = self.cfg.lookup_rate * n.max(1) as f64;
+        q.after(self.rng.exp(1.0 / rate.max(1e-9)), Ev::LookupTick);
+    }
+
+    /// Inline lookup resolution against ground truth (see module docs).
+    fn resolve_lookup(&mut self, origin: Id, target: Id, _now: f64) {
+        let Some(owner) = self.truth.successor(target) else { return };
+        let rtt_half =
+            |s: &mut Self| s.cfg.net.delay(&mut s.rng) + s.cfg.cpu.proc_delay();
+        let mut latency = 0.0;
+        let guess = match self.peers.get(&origin) {
+            Some(p) => p.table.successor(target).unwrap_or(owner),
+            None => return,
+        };
+        latency += rtt_half(self); // request
+        let one_hop = guess == owner;
+        if !one_hop {
+            if !self.truth.contains(guess) {
+                // stale entry: the target is gone — timeout, then retry
+                latency += self.cfg.net.lookup_retry_timeout() + rtt_half(self);
+            } else {
+                // missed join: the old owner forwards one extra hop
+                latency += rtt_half(self);
+            }
+        }
+        latency += rtt_half(self); // response
+        if self.recording {
+            self.charge_send(origin, sizes::V_LOOKUP, false);
+            let p = self.peers.get_mut(&origin).unwrap();
+            if one_hop {
+                p.metrics.lookups_one_hop += 1;
+            } else {
+                p.metrics.lookups_retried += 1;
+            }
+            p.metrics.lookup_latency.record_secs(latency);
+        }
+    }
+}
+
+impl World for D1htSim {
+    type Ev = Ev;
+
+    fn handle(&mut self, _now: f64, ev: Ev, q: &mut Queue<Ev>) {
+        match ev {
+            Ev::Deliver { to, msg } => self.deliver(to, msg, q),
+            Ev::Redeliver { to: _, msg, attempt } => self.send_maintenance(msg, q, attempt),
+            Ev::IntervalClose { peer, epoch } => self.close_interval(peer, epoch, q),
+            Ev::PredCheck { peer, epoch } => self.pred_check(peer, epoch, q),
+            Ev::Arrive { .. } => self.arrive(q),
+            Ev::OverlayInsert { label } => self.overlay_insert(label, q),
+            Ev::SessionEnd { peer } => self.session_end(peer, q),
+            Ev::Rejoin { label } => {
+                if let Some(tq) = self.cfg.quarantine_tq {
+                    // re-enter through the quarantine gate
+                    let session = self.cfg.churn.sample_session(&mut self.rng);
+                    if session <= tq {
+                        q.after(session + REJOIN_DELAY_SECS, Ev::Rejoin { label });
+                    } else {
+                        self.quarantined.insert(label, session - tq);
+                        q.after(tq, Ev::OverlayInsert { label });
+                    }
+                } else {
+                    self.overlay_insert(label, q);
+                }
+            }
+            Ev::LookupTick => self.lookup_tick(q),
+        }
+    }
+}
+
+impl super::SystemReport for D1htSim {
+    fn name(&self) -> &'static str {
+        "D1HT"
+    }
+    fn size(&self) -> usize {
+        self.truth.len()
+    }
+    fn metrics(&self) -> Metrics {
+        self.metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::run_until;
+
+    fn quiet_world(n: usize) -> (D1htSim, Queue<Ev>) {
+        let cfg = D1htCfg { lookup_rate: 0.0, ..Default::default() };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(n, &mut q);
+        (sim, q)
+    }
+
+    #[test]
+    fn bootstrap_consistent_tables() {
+        let (sim, _q) = quiet_world(64);
+        assert_eq!(sim.size(), 64);
+        for p in sim.peers.values() {
+            assert_eq!(p.table.staleness_vs(&sim.truth), 0.0);
+            assert_eq!(sim.truth.predecessor_excl(p.id), Some(p.predecessor));
+        }
+    }
+
+    #[test]
+    fn quiet_system_only_ttl0_keepalives() {
+        let (mut sim, mut q) = quiet_world(32);
+        sim.begin_recording(0.0);
+        run_until(&mut sim, &mut q, 300.0);
+        sim.end_recording(300.0);
+        let m = sim.metrics();
+        assert!(m.maintenance.msgs_out > 0, "keepalives must flow (Rule 4)");
+        // no events => no join/leave propagation, tables stay perfect
+        for p in sim.peers.values() {
+            assert_eq!(p.table.staleness_vs(&sim.truth), 0.0);
+        }
+    }
+
+    #[test]
+    fn join_propagates_to_all_tables() {
+        let (mut sim, mut q) = quiet_world(32);
+        // force short theta so the test converges quickly
+        q.after(1.0, Ev::Arrive { label: u64::MAX });
+        run_until(&mut sim, &mut q, 800.0);
+        assert_eq!(sim.size(), 33);
+        let stale: Vec<_> = sim
+            .peers
+            .values()
+            .filter(|p| p.table.staleness_vs(&sim.truth) > 0.0)
+            .map(|p| p.id)
+            .collect();
+        assert!(stale.is_empty(), "stale tables after join: {stale:?}");
+    }
+
+    #[test]
+    fn lookups_all_one_hop_without_churn() {
+        let cfg = D1htCfg { lookup_rate: 5.0, ..Default::default() };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(100, &mut q);
+        sim.begin_recording(0.0);
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, 30.0);
+        sim.end_recording(30.0);
+        let m = sim.metrics();
+        assert!(m.lookups_total() > 1000, "{}", m.lookups_total());
+        assert_eq!(m.one_hop_ratio(), 1.0);
+        // HPC base latency ~0.14ms
+        let p50 = m.lookup_latency.quantile_ns(0.5) as f64 / 1e6;
+        assert!((0.10..0.20).contains(&p50), "p50 {p50} ms");
+    }
+
+    #[test]
+    fn churn_keeps_one_hop_above_99pct() {
+        let cfg = D1htCfg {
+            churn: ChurnCfg::exponential(174.0 * 60.0),
+            lookup_rate: 2.0,
+            ..Default::default()
+        };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(200, &mut q);
+        run_until(&mut sim, &mut q, 120.0); // warm-up: tune theta
+        sim.begin_recording(q.now());
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, 120.0 + 600.0);
+        sim.end_recording(q.now());
+        let m = sim.metrics();
+        assert!(m.lookups_total() > 10_000);
+        assert!(
+            m.one_hop_ratio() > 0.99,
+            "one-hop ratio {} (paper: >99%)",
+            m.one_hop_ratio()
+        );
+        assert!(sim.size() > 150, "population roughly maintained: {}", sim.size());
+    }
+
+    #[test]
+    fn quarantine_blocks_short_sessions() {
+        let cfg = D1htCfg {
+            churn: ChurnCfg::heavy_tailed(169.0 * 60.0, 0.24),
+            quarantine_tq: Some(600.0),
+            lookup_rate: 0.0,
+            ..Default::default()
+        };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(64, &mut q);
+        let before = sim.size();
+        for _ in 0..50 {
+            q.after(1.0, Ev::Arrive { label: u64::MAX });
+        }
+        run_until(&mut sim, &mut q, 300.0); // < T_q: nobody inserted yet
+        // churn removes some bootstrap peers, but no arrival may enter
+        let at_300 = sim.size();
+        assert!(at_300 <= before, "no arrival enters before T_q");
+        assert!(!sim.quarantined.is_empty(), "survivors are waiting");
+        run_until(&mut sim, &mut q, 1200.0);
+        assert!(sim.size() > at_300, "survivors inserted after T_q");
+    }
+}

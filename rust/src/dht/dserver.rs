@@ -1,0 +1,163 @@
+//! Dserver — the central directory-server baseline (§VII-D).
+//!
+//! The paper builds Dserver as "essentially a D1HT system with just one
+//! peer": every client sends its lookups to one server, which resolves
+//! them from its (complete) table. The scalability limit is the server's
+//! CPU: the paper's first host (a Cluster B node) saturated at 1,600
+//! clients × 30 lookups/s; they then moved to a faster Cluster F node,
+//! which lags at 3,200 peers (+120% latency) and collapses at 4,000
+//! (one order of magnitude).
+//!
+//! We model the server as an M/G/1 queue with exponential service times
+//! calibrated to those two datums (service rate scales with the host
+//! cluster's `speed`), driven in virtual time.
+
+use crate::sim::clusters;
+use crate::sim::cpu::CpuModel;
+use crate::sim::metrics::Metrics;
+use crate::sim::network::NetModel;
+use crate::util::rng::Rng;
+
+/// Cluster-B saturation at 48k lookups/s (1600 peers × 30/s) implies a
+/// mean service time of ~20.8 µs on that host.
+pub const CLUSTER_B_SERVICE_SECS: f64 = 1.0 / 48_000.0;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DserverCfg {
+    pub net: NetModel,
+    pub cpu: CpuModel,
+    /// Which cluster hosts the server ("B" first, then "F" in the paper).
+    pub host_cluster: &'static str,
+    pub seed: u64,
+}
+
+impl Default for DserverCfg {
+    fn default() -> Self {
+        DserverCfg { net: NetModel::Hpc, cpu: CpuModel::idle(1), host_cluster: "F", seed: 1 }
+    }
+}
+
+pub struct Dserver {
+    cfg: DserverCfg,
+    service_mean: f64,
+    /// Virtual time at which the server frees up.
+    server_free_at: f64,
+    busy_time: f64,
+    rng: Rng,
+    pub metrics: Metrics,
+}
+
+impl Dserver {
+    pub fn new(cfg: DserverCfg) -> Self {
+        let speed = clusters::by_name(cfg.host_cluster).map(|c| c.speed).unwrap_or(1.0);
+        let speed_b = clusters::by_name("B").map(|c| c.speed).unwrap_or(1.1);
+        let mut service_mean = CLUSTER_B_SERVICE_SECS * speed_b / speed;
+        if cfg.cpu.busy {
+            // the server host is also pinned at 100% CPU
+            service_mean *= 2.0;
+        }
+        Dserver {
+            service_mean,
+            server_free_at: 0.0,
+            busy_time: 0.0,
+            rng: Rng::new(cfg.seed ^ 0xD5EE),
+            cfg,
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn service_mean(&self) -> f64 {
+        self.service_mean
+    }
+
+    /// Serve one lookup arriving (at the client) at `now`; returns the
+    /// client-observed latency.
+    pub fn serve(&mut self, now: f64) -> f64 {
+        let to_server = self.cfg.net.delay(&mut self.rng) + self.cfg.cpu.proc_delay();
+        let arrival = now + to_server;
+        let start = arrival.max(self.server_free_at);
+        let service = self.rng.exp(self.service_mean);
+        self.server_free_at = start + service;
+        self.busy_time += service;
+        let back = self.cfg.net.delay(&mut self.rng) + self.cfg.cpu.proc_delay();
+        let done = self.server_free_at + back;
+        let latency = done - now;
+        self.metrics.lookups_one_hop += 1;
+        self.metrics.lookup_latency.record_secs(latency);
+        latency
+    }
+
+    /// Drive an open-loop Poisson workload: `n_clients` peers at
+    /// `rate_per_client` lookups/s for `secs` of virtual time.
+    pub fn run_workload(&mut self, n_clients: usize, rate_per_client: f64, secs: f64) {
+        let rate = n_clients as f64 * rate_per_client;
+        let mut t = 0.0;
+        loop {
+            t += self.rng.exp(1.0 / rate);
+            if t > secs {
+                break;
+            }
+            self.serve(t);
+        }
+        self.metrics.window_secs = secs;
+    }
+
+    /// Server CPU utilization over the workload window.
+    pub fn utilization(&self, window_secs: f64) -> f64 {
+        (self.busy_time / window_secs).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p50_ms(d: &Dserver) -> f64 {
+        d.metrics.lookup_latency.quantile_ns(0.5) as f64 / 1e6
+    }
+
+    #[test]
+    fn small_system_matches_single_hop_latency() {
+        // Fig. 5a: Dserver ≈ single-hop DHTs at small sizes (~0.14 ms)
+        let mut d = Dserver::new(DserverCfg::default());
+        d.run_workload(800, 30.0, 30.0);
+        let p50 = p50_ms(&d);
+        assert!((0.12..0.25).contains(&p50), "p50 {p50} ms");
+    }
+
+    #[test]
+    fn cluster_b_saturates_at_1600_clients() {
+        // §VII-D: the Cluster-B host "reached 100% CPU load when serving
+        // lookups from 1,600 peers"
+        let mut d = Dserver::new(DserverCfg { host_cluster: "B", ..Default::default() });
+        d.run_workload(1600, 30.0, 20.0);
+        assert!(d.utilization(20.0) > 0.95, "util {}", d.utilization(20.0));
+    }
+
+    #[test]
+    fn cluster_f_lags_at_3200_and_collapses_at_4000() {
+        // Fig. 5a shape: +120% at 3,200; order of magnitude at 4,000
+        let mut base = Dserver::new(DserverCfg::default());
+        base.run_workload(1600, 30.0, 20.0);
+        let b = p50_ms(&base);
+
+        let mut mid = Dserver::new(DserverCfg::default());
+        mid.run_workload(3200, 30.0, 20.0);
+        let m = p50_ms(&mid);
+
+        let mut hi = Dserver::new(DserverCfg::default());
+        hi.run_workload(4000, 30.0, 20.0);
+        let h = p50_ms(&hi);
+
+        assert!(m > 1.5 * b, "3200 peers: {m} ms vs base {b} ms");
+        assert!(h > 8.0 * b, "4000 peers: {h} ms vs base {b} ms");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut d = Dserver::new(DserverCfg::default());
+        d.run_workload(100, 1.0, 5.0);
+        let u = d.utilization(5.0);
+        assert!((0.0..=1.0).contains(&u));
+    }
+}

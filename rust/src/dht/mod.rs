@@ -1,0 +1,30 @@
+//! The DHT systems under evaluation, as simulation worlds over
+//! [`crate::sim::engine`]:
+//!
+//! * [`d1ht`] — the paper's system: EDRA dissemination + optional
+//!   Quarantine (§III–§VI).
+//! * [`calot`] — 1h-Calot [52]: per-event propagation trees + heartbeats.
+//! * [`onehop`] — OneHop [17] topology helpers (slices/units); its
+//!   bandwidth is evaluated analytically, as in the paper (§VIII).
+//! * [`multihop`] — a Pastry-like base-4 prefix-routing DHT, standing in
+//!   for Chimera in the latency comparison (Figs. 5, 6).
+//! * [`dserver`] — the central directory server baseline (Dserver).
+//! * [`quarantine`] — the Quarantine admission gate (§V).
+
+pub mod calot;
+pub mod d1ht;
+pub mod dserver;
+pub mod multihop;
+pub mod onehop;
+pub mod quarantine;
+
+use crate::sim::metrics::Metrics;
+
+/// What every simulated system reports to the harness.
+pub trait SystemReport {
+    fn name(&self) -> &'static str;
+    /// Live overlay size.
+    fn size(&self) -> usize;
+    /// Aggregated metrics over the measurement window.
+    fn metrics(&self) -> Metrics;
+}

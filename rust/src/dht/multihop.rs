@@ -1,0 +1,215 @@
+//! A Pastry-like multi-hop DHT (base 4) — the stand-in for Chimera in the
+//! latency comparison (§VII-D, Figs. 5–6).
+//!
+//! Pastry routing resolves one base-4 digit of the target per hop: from
+//! `current`, route to a peer sharing a strictly longer digit-prefix with
+//! the target, until the numerically responsible peer is reached. With
+//! full membership knowledge per prefix row (the steady-state routing
+//! table), hop counts are exactly Pastry's `O(log_4 n)`.
+//!
+//! The experiment reports both the *simulated* latency (per-hop network
+//! delay + endpoint processing, like the other systems) and the paper's
+//! "expected Chimera" series (`hops × 0.14 ms`).
+
+use crate::id::Id;
+use crate::routing::Table;
+use crate::sim::cpu::CpuModel;
+use crate::sim::metrics::Metrics;
+use crate::sim::network::NetModel;
+use crate::util::rng::Rng;
+
+/// Digits are 2 bits (base 4), most-significant first, as Chimera uses.
+pub const DIGIT_BITS: u32 = 2;
+pub const NUM_DIGITS: u32 = 64 / DIGIT_BITS;
+
+/// Length (in digits) of the common prefix of `a` and `b`.
+#[inline]
+pub fn common_prefix_digits(a: Id, b: Id) -> u32 {
+    let x = a.0 ^ b.0;
+    if x == 0 {
+        NUM_DIGITS
+    } else {
+        x.leading_zeros() / DIGIT_BITS
+    }
+}
+
+/// A static multi-hop overlay over a fixed membership.
+pub struct MultiHop {
+    table: Table,
+}
+
+impl MultiHop {
+    pub fn new(ids: Vec<Id>) -> Self {
+        MultiHop { table: Table::from_ids(ids) }
+    }
+
+    pub fn from_labels(n: usize, seed: u64) -> Self {
+        let ids = (0..n)
+            .map(|i| crate::id::space::peer_id_from_label(&format!("pastry-{seed}-{i}")))
+            .collect();
+        Self::new(ids)
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// The peer responsible for `target` (successor semantics, as in the
+    /// other systems, so latency comparisons resolve the same owner).
+    pub fn owner(&self, target: Id) -> Option<Id> {
+        self.table.successor(target)
+    }
+
+    /// Count prefix-routing hops from `origin` to the owner of `target`.
+    /// Each hop moves to a peer whose prefix match with `target` is
+    /// strictly longer (or terminates at the owner).
+    pub fn route_hops(&self, origin: Id, target: Id) -> u32 {
+        let owner = match self.owner(target) {
+            Some(o) => o,
+            None => return 0,
+        };
+        let mut current = origin;
+        let mut hops = 0u32;
+        while current != owner {
+            hops += 1;
+            let cur_lcp = common_prefix_digits(current, target);
+            let next = self.best_next(current, target, cur_lcp);
+            match next {
+                Some(n) if n != current => current = n,
+                // no strictly better peer: last hop goes numerically
+                _ => current = owner,
+            }
+            if hops > NUM_DIGITS + 2 {
+                break; // defensive: cannot happen with consistent tables
+            }
+        }
+        hops
+    }
+
+    /// Best next hop *from `current`*: the routing-table entry for row
+    /// `cur_lcp`, digit `target[cur_lcp]` — i.e. some peer sharing
+    /// exactly one more digit with the target. A real Pastry node holds
+    /// one (arbitrary, proximity-chosen) peer per (row, digit) slot, so
+    /// each hop advances the prefix by one digit; we model that slot as a
+    /// deterministic pseudo-random member of the prefix range keyed by
+    /// `current` (every node has its own table).
+    fn best_next(&self, current: Id, target: Id, cur_lcp: u32) -> Option<Id> {
+        // Peers sharing >= cur_lcp+1 digits with target form a contiguous
+        // id range [prefix*, prefix* + span); search the sorted table.
+        let keep = (cur_lcp + 1) * DIGIT_BITS;
+        if keep >= 64 {
+            return self.owner(target);
+        }
+        let span = 1u64 << (64 - keep);
+        let base = target.0 & !(span - 1);
+        let ids = self.table.ids();
+        let lo = ids.partition_point(|p| p.0 < base);
+        let hi = ids.partition_point(|p| p.0 <= base | (span - 1));
+        let slice = &ids[lo..hi];
+        if slice.is_empty() {
+            return None;
+        }
+        // the slot `current` happens to hold: pseudo-random in the range
+        let pick = crate::util::rng::mix64(current.0 ^ base) as usize % slice.len();
+        Some(slice[pick])
+    }
+
+    /// Run a latency workload: `count` random lookups from random
+    /// origins; returns metrics (simulated latency) and the mean hop
+    /// count (for the "expected" series).
+    pub fn run_lookups(
+        &self,
+        count: usize,
+        net: NetModel,
+        cpu: CpuModel,
+        seed: u64,
+    ) -> (Metrics, f64) {
+        let mut rng = Rng::new(seed ^ 0x9A57);
+        let mut m = Metrics::new();
+        let mut hop_sum = 0u64;
+        let ids = self.table.ids();
+        for _ in 0..count {
+            let origin = ids[rng.below(ids.len() as u64) as usize];
+            let target = Id(rng.next_u64());
+            let hops = self.route_hops(origin, target).max(1);
+            hop_sum += hops as u64;
+            // each hop = one message: delay + endpoint processing; plus
+            // the final response back to the origin
+            let mut lat = 0.0;
+            for _ in 0..=hops {
+                lat += net.delay(&mut rng) + cpu.proc_delay();
+            }
+            m.lookup_latency.record_secs(lat);
+            if hops <= 1 {
+                m.lookups_one_hop += 1;
+            } else {
+                m.lookups_retried += 1;
+            }
+        }
+        (m, hop_sum as f64 / count.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_digits() {
+        assert_eq!(common_prefix_digits(Id(0), Id(0)), 32);
+        assert_eq!(common_prefix_digits(Id(0), Id(1)), 31);
+        assert_eq!(common_prefix_digits(Id(0), Id(1 << 62)), 0);
+        assert_eq!(common_prefix_digits(Id(0b01_00 << 60), Id(0b01_01 << 60)), 1);
+    }
+
+    #[test]
+    fn routes_terminate_at_owner() {
+        let mh = MultiHop::from_labels(500, 42);
+        let mut rng = Rng::new(9);
+        for _ in 0..2000 {
+            let ids = { mh.table.ids() };
+            let origin = ids[rng.below(ids.len() as u64) as usize];
+            let target = Id(rng.next_u64());
+            let hops = mh.route_hops(origin, target);
+            assert!(hops <= NUM_DIGITS, "hops {hops}");
+        }
+    }
+
+    #[test]
+    fn hop_count_scales_log4() {
+        // expected ~log_4(n) hops: n=1024 -> ~5
+        let mh = MultiHop::from_labels(1024, 7);
+        let (_, mean_hops) = mh.run_lookups(4000, NetModel::Ideal, CpuModel::idle(1), 3);
+        assert!(
+            (3.0..7.5).contains(&mean_hops),
+            "mean hops {mean_hops}, expected around log4(1024)=5"
+        );
+        // larger system, more hops
+        let mh2 = MultiHop::from_labels(4096, 7);
+        let (_, mean2) = mh2.run_lookups(4000, NetModel::Ideal, CpuModel::idle(1), 3);
+        assert!(mean2 > mean_hops, "{mean2} vs {mean_hops}");
+    }
+
+    #[test]
+    fn lookup_to_self_region_is_cheap() {
+        let mh = MultiHop::from_labels(64, 1);
+        let ids = mh.table.ids().to_vec();
+        for &p in &ids {
+            // target exactly at a member: owner is that member
+            assert_eq!(mh.owner(p), Some(p));
+            assert!(mh.route_hops(p, p) == 0);
+        }
+    }
+
+    #[test]
+    fn multihop_slower_than_single_hop() {
+        let mh = MultiHop::from_labels(2000, 5);
+        let (m, mean_hops) = mh.run_lookups(3000, NetModel::Hpc, CpuModel::idle(5), 11);
+        let p50_ms = m.lookup_latency.quantile_ns(0.5) as f64 / 1e6;
+        // one-hop systems do ~0.14ms; Pastry should be several-fold that
+        assert!(p50_ms > 0.3, "p50 {p50_ms} ms at {mean_hops} hops");
+    }
+}

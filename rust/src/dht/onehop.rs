@@ -1,0 +1,146 @@
+//! OneHop [17] topology: the three-level hierarchy (slices / units /
+//! ordinary nodes) that the paper contrasts with D1HT's flat ring.
+//!
+//! The D1HT paper evaluates OneHop analytically (§VIII, using the
+//! validated analysis from [17]) — as do we (`analysis::onehop`). This
+//! module supplies the concrete topology math that the analysis (and the
+//! load-imbalance experiment) relies on: slice/unit assignment of ring
+//! IDs and leader election (the node closest to the slice/unit midpoint).
+
+use crate::id::Id;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub k: u32, // slices
+    pub u: u32, // units per slice
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    SliceLeader,
+    UnitLeader,
+    Ordinary,
+}
+
+impl Topology {
+    pub fn new(k: u32, u: u32) -> Self {
+        assert!(k > 0 && u > 0);
+        Topology { k, u }
+    }
+
+    /// Slice index of a ring point (equal ID-space partitions).
+    pub fn slice_of(&self, id: Id) -> u32 {
+        // k equal arcs over [0, 2^64)
+        ((id.0 as u128 * self.k as u128) >> 64) as u32
+    }
+
+    /// Unit index within the slice.
+    pub fn unit_of(&self, id: Id) -> u32 {
+        let k = self.k as u128;
+        let u = self.u as u128;
+        let within = (id.0 as u128 * k) & ((1u128 << 64) - 1); // frac within slice
+        ((within * u) >> 64) as u32
+    }
+
+    /// Midpoint of a slice (its leader is the live node closest to it).
+    pub fn slice_mid(&self, slice: u32) -> Id {
+        let span = (1u128 << 64) / self.k as u128;
+        Id((slice as u128 * span + span / 2) as u64)
+    }
+
+    pub fn unit_mid(&self, slice: u32, unit: u32) -> Id {
+        let slice_span = (1u128 << 64) / self.k as u128;
+        let unit_span = slice_span / self.u as u128;
+        Id((slice as u128 * slice_span + unit as u128 * unit_span + unit_span / 2) as u64)
+    }
+
+    /// Assign roles over a live membership (sorted ids).
+    pub fn roles(&self, ids: &[Id]) -> Vec<(Id, Role)> {
+        let mut roles: Vec<(Id, Role)> = ids.iter().map(|&i| (i, Role::Ordinary)).collect();
+        let closest = |target: Id| -> Option<usize> {
+            if ids.is_empty() {
+                return None;
+            }
+            let pos = ids.partition_point(|p| p.0 < target.0);
+            let cands = [pos.checked_sub(1), Some(pos % ids.len())];
+            cands
+                .into_iter()
+                .flatten()
+                .map(|i| i % ids.len())
+                .min_by_key(|&i| ids[i].0.abs_diff(target.0))
+        };
+        for s in 0..self.k {
+            for un in 0..self.u {
+                if let Some(i) = closest(self.unit_mid(s, un)) {
+                    roles[i].1 = Role::UnitLeader;
+                }
+            }
+        }
+        for s in 0..self.k {
+            if let Some(i) = closest(self.slice_mid(s)) {
+                roles[i].1 = Role::SliceLeader;
+            }
+        }
+        roles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::id::space;
+
+    fn members(n: usize) -> Vec<Id> {
+        let mut ids: Vec<Id> =
+            (0..n).map(|i| space::peer_id_from_label(&format!("oh-{i}"))).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    #[test]
+    fn slices_partition_uniformly() {
+        let t = Topology::new(16, 4);
+        let ids = members(16_000);
+        let mut counts = vec![0u32; 16];
+        for &id in &ids {
+            counts[t.slice_of(id) as usize] += 1;
+        }
+        let expect = ids.len() as f64 / 16.0;
+        for c in counts {
+            assert!((c as f64 - expect).abs() < 0.15 * expect, "{c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn unit_within_range() {
+        let t = Topology::new(8, 5);
+        for &id in &members(1000) {
+            assert!(t.slice_of(id) < 8);
+            assert!(t.unit_of(id) < 5);
+        }
+    }
+
+    #[test]
+    fn leader_counts() {
+        let t = Topology::new(8, 4);
+        let ids = members(4000);
+        let roles = t.roles(&ids);
+        let sl = roles.iter().filter(|(_, r)| *r == Role::SliceLeader).count();
+        let ul = roles.iter().filter(|(_, r)| *r == Role::UnitLeader).count();
+        assert_eq!(sl, 8, "one leader per slice");
+        // unit leaders: k*u minus those midpoints claimed by slice leaders
+        assert!(ul >= 8 * 4 - 8 && ul <= 8 * 4, "unit leaders {ul}");
+    }
+
+    #[test]
+    fn mid_points_in_their_slice() {
+        let t = Topology::new(10, 3);
+        for s in 0..10 {
+            assert_eq!(t.slice_of(t.slice_mid(s)), s);
+            for u in 0..3 {
+                assert_eq!(t.slice_of(t.unit_mid(s, u)), s, "slice {s} unit {u}");
+                assert_eq!(t.unit_of(t.unit_mid(s, u)), u);
+            }
+        }
+    }
+}

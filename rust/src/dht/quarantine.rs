@@ -1,0 +1,139 @@
+//! Quarantine (§V): the admission gate that keeps volatile peers from
+//! generating overlay events.
+//!
+//! A joining peer is held for `T_q`; while quarantined it performs its
+//! lookups *through* gateway peers (two logical hops), and only on
+//! surviving the gate does it enter the ring (its join then disseminated
+//! as usual). The mechanics live in `dht::d1ht` (`quarantine_tq`); this
+//! module provides the gateway-lookup cost model and the admission
+//! bookkeeping shared by the simulator and the socket runtime, plus the
+//! flash-crowd throttle the paper suggests (§V last paragraph).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct QuarantineGate {
+    /// Quarantine period (s) — 10 min in the paper's evaluation.
+    pub t_q: f64,
+    /// Event-rate ceiling above which T_q is raised (flash-crowd guard).
+    pub rate_ceiling: Option<f64>,
+    /// Multiplier applied to T_q while the ceiling is exceeded.
+    pub backoff: f64,
+    admitted: u64,
+    filtered: u64,
+}
+
+impl QuarantineGate {
+    pub fn new(t_q: f64) -> Self {
+        QuarantineGate { t_q, rate_ceiling: None, backoff: 2.0, admitted: 0, filtered: 0 }
+    }
+
+    pub fn with_flash_crowd_guard(mut self, ceiling: f64, backoff: f64) -> Self {
+        self.rate_ceiling = Some(ceiling);
+        self.backoff = backoff;
+        self
+    }
+
+    /// Effective T_q given the currently observed event rate.
+    pub fn effective_tq(&self, observed_rate: f64) -> f64 {
+        match self.rate_ceiling {
+            Some(c) if observed_rate > c => self.t_q * self.backoff,
+            _ => self.t_q,
+        }
+    }
+
+    /// Decide a peer's fate given its (eventual) session length; returns
+    /// the remaining session if admitted.
+    pub fn admit(&mut self, session_secs: f64, observed_rate: f64) -> Option<f64> {
+        let tq = self.effective_tq(observed_rate);
+        if session_secs > tq {
+            self.admitted += 1;
+            Some(session_secs - tq)
+        } else {
+            self.filtered += 1;
+            None
+        }
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+    pub fn filtered(&self) -> u64 {
+        self.filtered
+    }
+
+    /// Fraction of arrivals filtered so far (tends to the short-session
+    /// fraction of the workload: 24% KAD / 31% Gnutella).
+    pub fn filtered_fraction(&self) -> f64 {
+        let t = self.admitted + self.filtered;
+        if t == 0 {
+            0.0
+        } else {
+            self.filtered as f64 / t as f64
+        }
+    }
+}
+
+/// Latency of a gateway lookup while quarantined: one extra (nearby) hop
+/// to the gateway, then the gateway's one-hop resolution (§V argues the
+/// extra hop is low-latency because the gateway is chosen nearby).
+pub fn gateway_lookup_latency(
+    net: crate::sim::network::NetModel,
+    cpu: crate::sim::cpu::CpuModel,
+    rng: &mut Rng,
+) -> f64 {
+    let hop = |rng: &mut Rng| net.delay(rng) + cpu.proc_delay();
+    // client -> gateway -> owner -> gateway -> client
+    hop(rng) + hop(rng) + hop(rng) + hop(rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::churn::ChurnCfg;
+    use crate::sim::cpu::CpuModel;
+    use crate::sim::network::NetModel;
+
+    #[test]
+    fn filters_short_sessions() {
+        let mut g = QuarantineGate::new(600.0);
+        assert!(g.admit(599.0, 0.0).is_none());
+        assert_eq!(g.admit(1200.0, 0.0), Some(600.0));
+        assert_eq!(g.admitted(), 1);
+        assert_eq!(g.filtered(), 1);
+        assert!((g.filtered_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kad_workload_filters_about_24pct() {
+        let cfg = ChurnCfg::heavy_tailed(169.0 * 60.0, 0.24);
+        let mut g = QuarantineGate::new(600.0);
+        let mut rng = Rng::new(5);
+        for _ in 0..50_000 {
+            let s = cfg.sample_session(&mut rng);
+            g.admit(s, 0.0);
+        }
+        let f = g.filtered_fraction();
+        assert!((0.22..0.33).contains(&f), "filtered {f}");
+    }
+
+    #[test]
+    fn flash_crowd_raises_tq() {
+        let g = QuarantineGate::new(600.0).with_flash_crowd_guard(100.0, 3.0);
+        assert_eq!(g.effective_tq(50.0), 600.0);
+        assert_eq!(g.effective_tq(150.0), 1800.0);
+    }
+
+    #[test]
+    fn gateway_lookup_costs_two_round_trips() {
+        let mut rng = Rng::new(1);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            sum += gateway_lookup_latency(NetModel::Hpc, CpuModel::idle(1), &mut rng);
+        }
+        let mean_ms = sum / n as f64 * 1e3;
+        // two round trips ~ 2 x 0.14ms
+        assert!((0.24..0.34).contains(&mean_ms), "mean {mean_ms} ms");
+    }
+}

@@ -1,0 +1,110 @@
+//! The per-interval event buffer (Rule 3's "events acknowledged during
+//! the ending Θ interval", stratified by acknowledgment TTL).
+
+use std::collections::HashMap;
+
+use crate::proto::messages::Event;
+
+/// Events acknowledged during the current Θ interval, with the TTL each
+/// was acknowledged at. An event re-acknowledged within one interval
+/// keeps the *highest* TTL (widest report set — see `Edra::acknowledge`).
+#[derive(Debug, Clone, Default)]
+pub struct EventBuffer {
+    // Keyed by the event identity (peer + kind); values are ack TTLs.
+    slots: HashMap<Event, u8>,
+    // Ack order for deterministic drains.
+    order: Vec<Event>,
+}
+
+impl EventBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ev: Event, ttl: u8) {
+        match self.slots.get_mut(&ev) {
+            Some(t) => *t = (*t).max(ttl),
+            None => {
+                self.slots.insert(ev, ttl);
+                self.order.push(ev);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Non-destructive snapshot of buffered events, in ack order.
+    pub fn peek_events(&self) -> Vec<Event> {
+        self.order.clone()
+    }
+
+    /// Drain in acknowledgment order, yielding `(event, ack_ttl)`.
+    pub fn drain(&mut self) -> Vec<(Event, u8)> {
+        let out = self
+            .order
+            .drain(..)
+            .map(|ev| {
+                let ttl = self.slots.remove(&ev).expect("order/slots in sync");
+                (ev, ttl)
+            })
+            .collect();
+        debug_assert!(self.slots.is_empty());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::id::Id;
+
+    #[test]
+    fn push_drain_in_order() {
+        let mut b = EventBuffer::new();
+        b.push(Event::join(Id(3)), 2);
+        b.push(Event::leave(Id(1)), 0);
+        b.push(Event::join(Id(2)), 5);
+        let out = b.drain();
+        assert_eq!(
+            out,
+            vec![
+                (Event::join(Id(3)), 2),
+                (Event::leave(Id(1)), 0),
+                (Event::join(Id(2)), 5)
+            ]
+        );
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn duplicate_keeps_max_ttl() {
+        let mut b = EventBuffer::new();
+        b.push(Event::join(Id(7)), 1);
+        b.push(Event::join(Id(7)), 4);
+        b.push(Event::join(Id(7)), 2);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.drain(), vec![(Event::join(Id(7)), 4)]);
+    }
+
+    #[test]
+    fn join_and_leave_are_distinct_events() {
+        let mut b = EventBuffer::new();
+        b.push(Event::join(Id(7)), 1);
+        b.push(Event::leave(Id(7)), 1);
+        assert_eq!(b.len(), 2, "rejoin after leave is a separate event");
+    }
+
+    #[test]
+    fn drain_resets_for_next_interval() {
+        let mut b = EventBuffer::new();
+        b.push(Event::join(Id(1)), 0);
+        b.drain();
+        b.push(Event::join(Id(1)), 3);
+        assert_eq!(b.drain(), vec![(Event::join(Id(1)), 3)]);
+    }
+}

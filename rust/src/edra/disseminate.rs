@@ -1,0 +1,175 @@
+//! Message planning: EDRA Rules 1–4, 7, 8 turned into concrete
+//! `(target, TTL, events)` triples at interval close.
+//!
+//! * Rule 1/4: up to `ρ = ⌈log2 n⌉` messages; `M(0)` always goes out,
+//!   `M(l>0)` only if it carries events.
+//! * Rule 3: `M(l)` carries every event acknowledged with TTL > l during
+//!   the ending interval; events acknowledged with TTL=0 are not
+//!   forwarded.
+//! * Rule 7: `M(l)` is addressed to `succ(p, 2^l)`.
+//! * Rule 8: before sending to `succ(p, k)`, discharge events about peers
+//!   in `stretch(p, k)` — they (and their subtrees) are covered by the
+//!   lower-TTL messages, and forwarding them again would wrap the ring
+//!   and double-acknowledge (Figure 1's dashed-arrow discussion).
+//!
+//! Theorem 1 (exactly-once, full coverage) and Theorem 2 (|S| = 2^(ρ-l))
+//! are verified against this planner in `rust/tests/prop_invariants.rs`
+//! by simulating whole-disseminations on randomized rings.
+
+use crate::id::Id;
+use crate::proto::messages::Event;
+use crate::routing::Table;
+
+/// `ρ = ⌈log2 n⌉` (Rule 1); 0 for degenerate 0/1-peer systems.
+#[inline]
+pub fn rho_for(n: usize) -> u8 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u8 // ceil(log2 n)
+    }
+}
+
+/// One planned maintenance message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Outgoing {
+    pub target: Id,
+    pub ttl: u8,
+    pub events: Vec<Event>,
+}
+
+/// Plan the interval-close messages for peer `me` given its routing table
+/// and the drained `(event, ack_ttl)` buffer.
+pub fn plan_messages(me: Id, table: &Table, acked: &[(Event, u8)]) -> Vec<Outgoing> {
+    let n = table.len();
+    if n <= 1 {
+        return Vec::new(); // alone on the ring: no one to notify
+    }
+    let rho = rho_for(n);
+    let mut out = Vec::with_capacity(rho as usize);
+    for l in 0..rho {
+        let k = 1usize << l;
+        let Some(target) = table.succ(me, k % n) else { break };
+        if target == me {
+            continue; // tiny ring: 2^l wrapped onto ourselves
+        }
+        // Rule 3: events acknowledged with TTL > l.
+        let mut events: Vec<Event> =
+            acked.iter().filter(|(_, t)| *t > l).map(|(e, _)| *e).collect();
+        // Rule 8: discharge events about peers within stretch(me, 2^l).
+        events.retain(|e| !in_stretch(me, table, k, e.peer));
+        if l == 0 || !events.is_empty() {
+            out.push(Outgoing { target, ttl: l, events });
+        }
+    }
+    out
+}
+
+/// Is `peer` within `stretch(me, k)` = { succ(me, 0) ..= succ(me, k) }?
+///
+/// Computed geometrically (arc membership) rather than by walking k
+/// successors: `peer ∈ stretch(me, k)` iff the clockwise arc (me, succ_k]
+/// contains it, or it equals `me`. Leave-events reference peers already
+/// absent from the table, so the geometric test is the right one — it
+/// asks "would this peer's slot fall inside the covered arc", which is
+/// exactly what Rule 8 needs to prevent wrap-around double-acks.
+fn in_stretch(me: Id, table: &Table, k: usize, peer: Id) -> bool {
+    if peer == me {
+        return true;
+    }
+    let n = table.len();
+    if k >= n {
+        return true; // stretch covers the whole ring
+    }
+    let Some(end) = table.succ(me, k) else { return false };
+    peer.in_arc(me, end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(ids: &[u64]) -> Table {
+        Table::from_ids(ids.iter().map(|&x| Id(x)).collect())
+    }
+
+    #[test]
+    fn rho_values() {
+        assert_eq!(rho_for(0), 0);
+        assert_eq!(rho_for(1), 0);
+        assert_eq!(rho_for(2), 1);
+        assert_eq!(rho_for(3), 2);
+        assert_eq!(rho_for(4), 2);
+        assert_eq!(rho_for(5), 3);
+        assert_eq!(rho_for(11), 4, "paper's Figure-1 system");
+        assert_eq!(rho_for(1024), 10);
+        assert_eq!(rho_for(1025), 11);
+        assert_eq!(rho_for(1_000_000), 20);
+    }
+
+    #[test]
+    fn rule7_targets_are_power_of_two_successors() {
+        let ids: Vec<u64> = (0..16).map(|i| i * 100).collect();
+        let t = table(&ids);
+        // one event acked at max TTL so every message carries it
+        let acked = vec![(Event::join(Id(9999)), rho_for(16))];
+        let msgs = plan_messages(Id(0), &t, &acked);
+        let targets: Vec<Id> = msgs.iter().map(|m| m.target).collect();
+        assert_eq!(targets, vec![Id(100), Id(200), Id(400), Id(800)]);
+        let ttls: Vec<u8> = msgs.iter().map(|m| m.ttl).collect();
+        assert_eq!(ttls, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rule3_ttl_filtering() {
+        let ids: Vec<u64> = (0..16).map(|i| i * 100).collect();
+        let t = table(&ids);
+        let e_hi = Event::join(Id(5_000_000)); // far away: no rule-8 discharge for low l
+        let e_lo = Event::leave(Id(5_000_001));
+        let acked = vec![(e_hi, 4u8), (e_lo, 1u8)];
+        let msgs = plan_messages(Id(0), &t, &acked);
+        // M(0) gets both (ttl>0); M(1) only e_hi (ttl>1); M(2), M(3) only e_hi
+        let m0 = msgs.iter().find(|m| m.ttl == 0).unwrap();
+        assert!(m0.events.contains(&e_hi) && m0.events.contains(&e_lo));
+        let m1 = msgs.iter().find(|m| m.ttl == 1).unwrap();
+        assert!(m1.events.contains(&e_hi) && !m1.events.contains(&e_lo));
+    }
+
+    #[test]
+    fn rule4_empty_high_ttl_messages_suppressed() {
+        let ids: Vec<u64> = (0..16).map(|i| i * 100).collect();
+        let t = table(&ids);
+        // only a TTL=0-acked event: nothing to forward (Rule 3), so only M(0)
+        let acked = vec![(Event::join(Id(7777)), 0u8)];
+        let msgs = plan_messages(Id(0), &t, &acked);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].ttl, 0);
+        assert!(msgs[0].events.is_empty(), "TTL=0-acked events are not forwarded");
+    }
+
+    #[test]
+    fn rule8_discharges_covered_arc() {
+        let ids: Vec<u64> = (0..16).map(|i| i * 100).collect();
+        let t = table(&ids);
+        // event about peer id=150, between succ(0,1)=100 and succ(0,2)=200:
+        // inside stretch(0, 2) and stretch(0, 4) etc, so discharged from
+        // M(1).. but kept in M(0) (stretch(0,1) = (0,100] misses it).
+        let ev = Event::leave(Id(150));
+        let acked = vec![(ev, 4u8)];
+        let msgs = plan_messages(Id(0), &t, &acked);
+        let m0 = msgs.iter().find(|m| m.ttl == 0).unwrap();
+        assert!(m0.events.contains(&ev));
+        for m in msgs.iter().filter(|m| m.ttl > 0) {
+            assert!(!m.events.contains(&ev), "ttl={} must discharge", m.ttl);
+        }
+    }
+
+    #[test]
+    fn single_and_two_peer_systems() {
+        assert!(plan_messages(Id(0), &table(&[0]), &[]).is_empty());
+        let t = table(&[0, 500]);
+        let msgs = plan_messages(Id(0), &t, &[]);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].target, Id(500));
+    }
+}

@@ -1,0 +1,195 @@
+//! Θ self-tuning (§IV-D).
+//!
+//! Each peer observes every event in the system (EDRA delivers all events
+//! to all peers), so it can estimate the global event rate `r` locally and
+//! set the buffering interval without any coordination:
+//!
+//! * Eq. III.1:  `r = 2 n / S_avg`  ⇒  `S_avg = 2 n / r`
+//! * Eq. IV.3:  `Θ = 4 f S_avg / (16 + 3 ρ)`  (with the δ = Θ/4 overestimate)
+//! * Eq. IV.4:  `E = 8 f n / (16 + 3 ρ)` — the burst cap on buffered events.
+//!
+//! Rate estimation: sliding-window count over the last `WINDOW` seconds
+//! with an EWMA fallback while the window is cold. The window length is a
+//! few Θ's worth of Gnutella-scale traffic; the estimator is deliberately
+//! simple — the paper only requires that peers *adapt* to the observed
+//! rate, and the experiments churn at a constant Eq.-III.1 rate.
+
+use std::collections::VecDeque;
+
+use super::disseminate::rho_for;
+
+const WINDOW_SECS: f64 = 120.0;
+const MAX_SAMPLES: usize = 100_000;
+
+/// Bounds keep Θ sane for tiny test systems and cold starts.
+pub const THETA_MIN_SECS: f64 = 0.05;
+pub const THETA_MAX_SECS: f64 = 60.0;
+
+#[derive(Debug, Clone)]
+pub struct ThetaTuner {
+    f: f64,
+    /// Event timestamps within the sliding window.
+    times: VecDeque<f64>,
+    /// Fallback rate estimate used before the window has 2+ events.
+    prior_rate: f64,
+}
+
+impl ThetaTuner {
+    pub fn new(f: f64) -> Self {
+        ThetaTuner { f, times: VecDeque::new(), prior_rate: 0.0 }
+    }
+
+    /// Pre-seed the rate estimate (a joining peer can bootstrap from its
+    /// successor's estimate instead of starting cold).
+    pub fn with_prior_rate(f: f64, rate: f64) -> Self {
+        ThetaTuner { f, times: VecDeque::new(), prior_rate: rate.max(0.0) }
+    }
+
+    pub fn f(&self) -> f64 {
+        self.f
+    }
+
+    pub fn observe_event(&mut self, now: f64) {
+        self.times.push_back(now);
+        if self.times.len() > MAX_SAMPLES {
+            self.times.pop_front();
+        }
+        self.expire(now);
+    }
+
+    /// Age out stale samples; in a quieting system the prior decays too,
+    /// so Θ relaxes toward its maximum instead of freezing at the last
+    /// busy-period estimate (which would sustain needless keep-alives).
+    pub fn expire(&mut self, now: f64) {
+        while let Some(&t) = self.times.front() {
+            if now - t > WINDOW_SECS {
+                self.times.pop_front();
+            } else {
+                break;
+            }
+        }
+        if self.times.len() < 2 {
+            self.prior_rate *= 0.5;
+            if self.prior_rate < 1e-6 {
+                self.prior_rate = 0.0;
+            }
+        }
+    }
+
+    /// Raw sample timestamps (diagnostics).
+    pub fn sample_times(&self) -> Vec<f64> {
+        self.times.iter().copied().collect()
+    }
+
+    /// Locally observed system event rate `r` (events/sec).
+    ///
+    /// Count over the fixed window rather than `(len-1)/span`: events
+    /// arrive in Θ-interval batches, so span-based estimates are wildly
+    /// noisy (spreads of 40x across peers were observed), and Rule 5's
+    /// `T_detect = 2Θ` assumes *uniform* Θ — a peer whose Θ undershoots
+    /// its predecessor's keep-alive period probes it continuously.
+    pub fn observed_rate(&self) -> f64 {
+        if self.times.len() >= 2 {
+            let span = self.times.back().unwrap() - self.times.front().unwrap();
+            // until the window fills, fall back to the span estimate
+            // blended toward the conservative (longer-Θ) side
+            let horizon = span.max(WINDOW_SECS);
+            return self.times.len() as f64 / horizon;
+        }
+        self.prior_rate
+    }
+
+    /// Tuned Θ for the current system size (Eq. IV.3 via Eq. III.1).
+    pub fn theta(&self, n: usize) -> f64 {
+        let rho = rho_for(n) as f64;
+        let r = self.observed_rate();
+        if r <= 1e-12 {
+            // No churn observed: buffering cost is zero, so use the cap —
+            // TTL=0 keepalives (Rule 4) still flow at 1/Θ.
+            return THETA_MAX_SECS;
+        }
+        let savg = 2.0 * n as f64 / r; // Eq. III.1 inverted
+        let theta = 4.0 * self.f * savg / (16.0 + 3.0 * rho); // Eq. IV.3
+        theta.clamp(THETA_MIN_SECS, THETA_MAX_SECS)
+    }
+
+    /// Eq. IV.4 burst cap. E equals the *expected* events per Θ interval
+    /// (substituting Eq. III.1 into IV.3 gives E = r·Θ exactly), so the
+    /// early-close trigger applies a 2x burst factor — §V's "overestimate
+    /// the maximum number of events it may buffer" — lest steady-state
+    /// fluctuations halve Θ and double the message rate.
+    pub fn event_cap(&self, n: usize) -> usize {
+        let rho = rho_for(n) as f64;
+        let e = 8.0 * self.f * n as f64 / (16.0 + 3.0 * rho);
+        ((2.0 * e).ceil() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the tuner at the Eq.-III.1 rate for (n, savg) and return Θ.
+    fn tuned_theta(n: usize, savg_secs: f64) -> f64 {
+        let mut t = ThetaTuner::new(0.01);
+        let r = 2.0 * n as f64 / savg_secs;
+        let dt = 1.0 / r;
+        let mut now = 0.0;
+        for _ in 0..2000 {
+            now += dt;
+            t.observe_event(now);
+        }
+        t.theta(n)
+    }
+
+    #[test]
+    fn matches_eq_iv3_at_gnutella_rate() {
+        // n=4000, Savg=174 min: rho=12, Θ = 4·0.01·10440/(16+36) = 8.03 s
+        let theta = tuned_theta(4000, 174.0 * 60.0);
+        let expect = 4.0 * 0.01 * (174.0 * 60.0) / (16.0 + 3.0 * 12.0);
+        assert!((theta - expect).abs() / expect < 0.05, "theta={theta} expect={expect}");
+    }
+
+    #[test]
+    fn more_churn_means_shorter_theta() {
+        let slow = tuned_theta(4000, 174.0 * 60.0);
+        let fast = tuned_theta(4000, 60.0 * 60.0);
+        assert!(fast < slow);
+    }
+
+    #[test]
+    fn cold_start_uses_max() {
+        let t = ThetaTuner::new(0.01);
+        assert_eq!(t.theta(1000), THETA_MAX_SECS);
+    }
+
+    #[test]
+    fn prior_rate_bootstrap() {
+        let n = 4000;
+        let savg = 174.0 * 60.0;
+        let r = 2.0 * n as f64 / savg;
+        let t = ThetaTuner::with_prior_rate(0.01, r);
+        let expect = 4.0 * 0.01 * savg / (16.0 + 3.0 * 12.0);
+        assert!((t.theta(n) - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn event_cap_matches_eq_iv4() {
+        let t = ThetaTuner::new(0.01);
+        // n = 10^6: rho=20, E = 8·0.01·1e6/76 = 1052.6; cap = 2E -> 2106
+        assert_eq!(t.event_cap(1_000_000), 2106);
+        assert!(t.event_cap(8) >= 1);
+    }
+
+    #[test]
+    fn window_expires_old_events() {
+        let mut t = ThetaTuner::new(0.01);
+        for i in 0..10 {
+            t.observe_event(i as f64);
+        }
+        let r_then = t.observed_rate();
+        // long quiet gap: window empties, falls back to prior (0)
+        t.observe_event(10_000.0);
+        assert!(t.observed_rate() < r_then);
+    }
+}

@@ -1,0 +1,64 @@
+//! Shared experiment plumbing.
+
+use crate::sim::harness::{ExperimentCfg, Phase};
+use crate::sim::churn::ChurnCfg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Paper-faithful (§VII-A): growth phase, 30-min measurement, 3 seeds.
+    Paper,
+    /// Shrunk for smoke tests and CI.
+    Quick,
+}
+
+impl Fidelity {
+    pub fn measure_secs(self) -> f64 {
+        match self {
+            Fidelity::Paper => 1800.0,
+            Fidelity::Quick => 240.0,
+        }
+    }
+
+    pub fn seeds(self) -> Vec<u64> {
+        match self {
+            Fidelity::Paper => vec![1, 2, 3],
+            Fidelity::Quick => vec![1],
+        }
+    }
+
+    pub fn growth(self) -> Phase {
+        match self {
+            Fidelity::Paper => Phase::Growth,
+            Fidelity::Quick => Phase::Bootstrap,
+        }
+    }
+
+    /// System size for a paper-sized cell. Quick mode keeps the paper's
+    /// n (the sims are cheap in release; shrinking n below ~1000 would
+    /// leave the Eq. IV.4 cap at 1 event and distort the aggregation
+    /// behavior the figures measure) and economizes on windows/seeds
+    /// instead.
+    pub fn scale_n(self, n: usize) -> usize {
+        n
+    }
+
+    /// Lookup rate for the latency experiments (30/s in the paper).
+    pub fn latency_lookup_rate(self) -> f64 {
+        match self {
+            Fidelity::Paper => 30.0,
+            Fidelity::Quick => 5.0,
+        }
+    }
+}
+
+pub fn base_cfg(fid: Fidelity, n: usize, savg_secs: f64) -> ExperimentCfg {
+    ExperimentCfg {
+        target_n: fid.scale_n(n),
+        churn: ChurnCfg::exponential(savg_secs),
+        growth: fid.growth(),
+        settle_secs: 120.0,
+        measure_secs: fid.measure_secs(),
+        seeds: fid.seeds(),
+        ..Default::default()
+    }
+}

@@ -1,0 +1,59 @@
+//! Figure 4: HPC-datacenter aggregate outgoing maintenance bandwidth,
+//! D1HT vs 1h-Calot, n ∈ {1000..4000}: (a) S_avg = 174 min,
+//! (b) S_avg = 60 min. Measured (simulated switched-Ethernet testbed) +
+//! analytical.
+
+use crate::analysis::{calot::CalotModel, d1ht::D1htModel};
+use crate::experiments::common::{base_cfg, Fidelity};
+use crate::sim::harness::{run_calot, run_d1ht};
+use crate::sim::network::NetModel;
+use crate::util::fmt::{bps, Table};
+
+pub fn run(fid: Fidelity, savg_mins: f64) -> Table {
+    let savg = savg_mins * 60.0;
+    let mut t = Table::new(
+        format!("Fig. 4 — HPC aggregate outgoing maintenance bandwidth (Savg={savg_mins}min)"),
+        &["system", "peers", "measured (sum)", "analytical (sum)", "one-hop %"],
+    );
+    let sizes: &[usize] = match fid {
+        Fidelity::Paper => &[1000, 2000, 3000, 4000],
+        Fidelity::Quick => &[1000, 2000],
+    };
+    for &n in sizes {
+        let mut cfg = base_cfg(fid, n, savg);
+        cfg.net = NetModel::Hpc;
+        cfg.lookup_rate = 1.0; // §VII-C: one lookup/s per peer
+
+        let d = run_d1ht(&cfg);
+        let dm = D1htModel { delta_avg: NetModel::Hpc.delta_avg(), ..Default::default() };
+        t.row(vec![
+            "D1HT".into(),
+            d.n.to_string(),
+            bps(d.aggregate_bps),
+            bps(dm.bandwidth_bps(d.n as f64, savg) * d.n as f64),
+            format!("{:.2}%", d.one_hop_ratio * 100.0),
+        ]);
+
+        let c = run_calot(&cfg);
+        t.row(vec![
+            "1h-Calot".into(),
+            c.n.to_string(),
+            bps(c.aggregate_bps),
+            bps(CalotModel.bandwidth_bps(c.n as f64, savg) * c.n as f64),
+            format!("{:.2}%", c.one_hop_ratio * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig4a_shape() {
+        let t = run(Fidelity::Quick, 174.0);
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.title.contains("174"));
+    }
+}

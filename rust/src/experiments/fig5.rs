@@ -1,0 +1,95 @@
+//! Figure 5: lookup latencies in the HPC environment — D1HT, 1h-Calot,
+//! Pastry (measured + "expected" at 0.14 ms/hop), and Dserver, with 400
+//! physical nodes and 2–10 peers per node (800–4,000 peers);
+//! (a) idle nodes, (b) nodes at 100% CPU.
+
+use crate::dht::dserver::{Dserver, DserverCfg};
+use crate::dht::multihop::MultiHop;
+use crate::experiments::common::{base_cfg, Fidelity};
+use crate::sim::cpu::CpuModel;
+use crate::sim::harness::{run_calot, run_d1ht};
+use crate::sim::network::NetModel;
+use crate::util::fmt::Table;
+
+pub const NODES: usize = 400;
+pub const HOP_MS: f64 = 0.14; // measured one-hop base (§VII-D)
+
+pub fn run(fid: Fidelity, busy: bool) -> Table {
+    let title = format!(
+        "Fig. 5{} — lookup latency, HPC, {} nodes ({} CPU)",
+        if busy { "b" } else { "a" },
+        NODES,
+        if busy { "100% busy" } else { "idle" }
+    );
+    let mut t = Table::new(
+        title,
+        &["peers", "ppn", "D1HT (ms)", "1h-Calot (ms)", "Pastry (ms)", "Pastry expected (ms)", "Dserver (ms)"],
+    );
+    let ppns: &[u32] = match fid {
+        Fidelity::Paper => &[2, 4, 6, 8, 10],
+        Fidelity::Quick => &[2, 8],
+    };
+    for &ppn in ppns {
+        let n = NODES * ppn as usize;
+        let cpu = if busy { CpuModel::busy(ppn) } else { CpuModel::idle(ppn) };
+
+        // single-hop DHTs, churned at Savg=174min (§VII-D)
+        let mut cfg = base_cfg(fid, n, 174.0 * 60.0);
+        cfg.target_n = n; // latency plots use the exact population
+        cfg.net = NetModel::Hpc;
+        cfg.cpu = cpu;
+        cfg.lookup_rate = fid.latency_lookup_rate();
+        cfg.measure_secs = cfg.measure_secs.min(120.0); // latency converges fast
+        cfg.growth = crate::sim::harness::Phase::Bootstrap;
+        let d = run_d1ht(&cfg);
+        let c = run_calot(&cfg);
+
+        // Pastry: not churned in the paper
+        let mh = MultiHop::from_labels(n, 42);
+        let lookups = match fid {
+            Fidelity::Paper => 20_000,
+            Fidelity::Quick => 3_000,
+        };
+        let (pm, hops) = mh.run_lookups(lookups, NetModel::Hpc, cpu, 17);
+        let pastry_ms = pm.lookup_latency.mean_ns() / 1e6;
+        let pastry_expected = hops * HOP_MS;
+
+        // Dserver: not churned; host on Cluster F (§VII-D)
+        let mut ds = Dserver::new(DserverCfg {
+            net: NetModel::Hpc,
+            cpu,
+            host_cluster: "F",
+            seed: 11,
+        });
+        ds.run_workload(n, fid.latency_lookup_rate(), 30.0);
+        let ds_ms = ds.metrics.lookup_latency.mean_ns() / 1e6;
+
+        t.row(vec![
+            n.to_string(),
+            ppn.to_string(),
+            format!("{:.3}", d.latency_avg_ms),
+            format!("{:.3}", c.latency_avg_ms),
+            format!("{:.3}", pastry_ms),
+            format!("{:.3}", pastry_expected),
+            format!("{:.3}", ds_ms),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig5a_ordering() {
+        let t = run(Fidelity::Quick, false);
+        assert_eq!(t.rows.len(), 2);
+        // at the smallest size: D1HT ~ Dserver ~ 0.14ms, Pastry slower
+        let row = &t.rows[0];
+        let d1: f64 = row[2].parse().unwrap();
+        let pa: f64 = row[4].parse().unwrap();
+        assert!(d1 < 0.3, "D1HT {d1} ms");
+        assert!(pa > d1 * 2.0, "Pastry {pa} vs D1HT {d1}");
+    }
+}

@@ -1,0 +1,62 @@
+//! Figure 6: D1HT lookup latency vs peers-per-node on busy nodes, with
+//! 200 vs 400 physical nodes — the experiment showing latency tracks
+//! *peers per node*, not system size.
+
+use crate::experiments::common::{base_cfg, Fidelity};
+use crate::sim::cpu::CpuModel;
+use crate::sim::harness::{run_d1ht, Phase};
+use crate::sim::network::NetModel;
+use crate::util::fmt::Table;
+
+pub fn run(fid: Fidelity) -> Table {
+    let mut t = Table::new(
+        "Fig. 6 — D1HT latency on busy nodes: 200 vs 400 physical nodes",
+        &["ppn", "200 nodes: peers", "200 nodes: ms", "400 nodes: peers", "400 nodes: ms"],
+    );
+    let ppns: &[u32] = match fid {
+        Fidelity::Paper => &[2, 4, 6, 8, 10],
+        Fidelity::Quick => &[4, 8],
+    };
+    for &ppn in ppns {
+        let mut cells = vec![ppn.to_string()];
+        for nodes in [200usize, 400] {
+            let n = nodes * ppn as usize;
+            let mut cfg = base_cfg(fid, n, 174.0 * 60.0);
+            cfg.target_n = n;
+            cfg.net = NetModel::Hpc;
+            cfg.cpu = CpuModel::busy(ppn);
+            cfg.lookup_rate = fid.latency_lookup_rate();
+            cfg.measure_secs = cfg.measure_secs.min(120.0);
+            cfg.growth = Phase::Bootstrap;
+            let r = run_d1ht(&cfg);
+            cells.push(n.to_string());
+            cells.push(format!("{:.3}", r.latency_avg_ms));
+        }
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_depends_on_ppn_not_n() {
+        let t = run(Fidelity::Quick);
+        // same ppn, 2x the system size -> nearly equal latency
+        for row in &t.rows {
+            let at200: f64 = row[2].parse().unwrap();
+            let at400: f64 = row[4].parse().unwrap();
+            assert!(
+                (at200 - at400).abs() / at200 < 0.15,
+                "ppn={} 200n={at200}ms 400n={at400}ms",
+                row[0]
+            );
+        }
+        // higher ppn -> higher latency
+        let lo: f64 = t.rows[0][2].parse().unwrap();
+        let hi: f64 = t.rows[t.rows.len() - 1][2].parse().unwrap();
+        assert!(hi > lo, "{hi} vs {lo}");
+    }
+}

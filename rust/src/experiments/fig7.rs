@@ -1,0 +1,104 @@
+//! Figure 7: analytical per-peer maintenance bandwidth, 10^4..10^7
+//! peers, sessions {60, 169 (KAD), 174 (Gnutella), 780 (BitTorrent)}
+//! minutes: D1HT vs 1h-Calot vs OneHop (ordinary node = best case,
+//! slice leader = worst case).
+//!
+//! The D1HT/1h-Calot series can be produced either natively
+//! (`analysis::*`) or through the AOT analytics artifact
+//! (`runtime::analytics`) — the `via_artifact` flag selects; both paths
+//! are cross-checked in tests.
+
+use crate::analysis::{calot::CalotModel, d1ht::D1htModel, onehop::OneHopModel};
+use crate::util::fmt::{bps, Table};
+
+pub const SESSIONS_MIN: [f64; 4] = [60.0, 169.0, 174.0, 780.0];
+
+pub fn sizes() -> Vec<f64> {
+    // log-spaced, 3 points per decade over 1e4..1e7
+    let mut v = Vec::new();
+    for exp in 4..=6 {
+        for m in [1.0, 2.0, 5.0] {
+            v.push(m * 10f64.powi(exp));
+        }
+    }
+    v.push(1e7);
+    v
+}
+
+pub fn run(savg_mins: f64, via_artifact: bool) -> anyhow::Result<Table> {
+    let savg = savg_mins * 60.0;
+    let mut t = Table::new(
+        format!("Fig. 7 — analytical per-peer maintenance bandwidth (Savg={savg_mins}min)"),
+        &["peers", "D1HT", "1h-Calot", "OneHop ordinary", "OneHop slice leader"],
+    );
+    let ns = sizes();
+
+    let (d_series, c_series) = if via_artifact {
+        let grid = crate::runtime::analytics::AnalyticsGrid::load()?;
+        let pts: Vec<(f64, f64)> = ns.iter().map(|&n| (n, savg)).collect();
+        let r = grid.eval(&pts)?;
+        (r.d1ht_bps, r.calot_bps)
+    } else {
+        let dm = D1htModel::default();
+        (
+            ns.iter().map(|&n| dm.bandwidth_bps(n, savg)).collect(),
+            ns.iter().map(|&n| CalotModel.bandwidth_bps(n, savg)).collect(),
+        )
+    };
+
+    let oh = OneHopModel::default();
+    for (i, &n) in ns.iter().enumerate() {
+        let o = oh.optimal(n, savg);
+        t.row(vec![
+            format!("{n:.0}"),
+            bps(d_series[i]),
+            bps(c_series[i]),
+            bps(o.ordinary_bps),
+            bps(o.slice_leader_bps),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_series_shape() {
+        let t = run(169.0, false).unwrap();
+        assert_eq!(t.rows.len(), sizes().len());
+        // headline: D1HT < 1h-Calot at every size in the Fig. 7 range
+        // (all sizes >= 1e4 are beyond the Fig. 3 crossover)
+        for row in &t.rows {
+            let d = parse_bps(&row[1]);
+            let c = parse_bps(&row[2]);
+            assert!(d < c, "{}: d1ht {d} calot {c}", row[0]);
+        }
+    }
+
+    fn parse_bps(s: &str) -> f64 {
+        let (num, unit) = s.split_once(' ').unwrap();
+        let v: f64 = num.parse().unwrap();
+        match unit {
+            "bps" => v,
+            "kbps" => v * 1e3,
+            "Mbps" => v * 1e6,
+            u => panic!("unit {u}"),
+        }
+    }
+
+    #[test]
+    fn artifact_series_matches_native() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let nat = run(174.0, false).unwrap();
+        let art = run(174.0, true).unwrap();
+        for (a, b) in nat.rows.iter().zip(&art.rows) {
+            let (x, y) = (parse_bps(&a[1]), parse_bps(&b[1]));
+            assert!((x - y).abs() / x < 0.05, "{} vs {}", a[1], b[1]);
+        }
+    }
+}

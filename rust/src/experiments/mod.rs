@@ -1,0 +1,19 @@
+//! One driver per paper table/figure (the index lives in DESIGN.md §3).
+//!
+//! Every driver returns a [`crate::util::fmt::Table`] whose rows are the
+//! series the paper plots, at two fidelities: `Fidelity::Paper` uses the
+//! §VII methodology verbatim (growth phase, 30-min windows, 3 seeds —
+//! minutes of wall time); `Fidelity::Quick` shrinks windows and sizes for
+//! smoke runs and CI. The benches drive these same functions.
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+
+pub use common::Fidelity;

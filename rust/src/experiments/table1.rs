@@ -1,0 +1,26 @@
+//! Table I: the HPC testbed inventory, rendered from `sim::clusters`.
+
+use crate::sim::clusters::CLUSTERS;
+use crate::util::fmt::Table;
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table I — clusters used in the experiments (each node has two CPUs)",
+        &["Cluster", "# nodes", "CPU", "OS"],
+    );
+    for c in CLUSTERS {
+        t.row(vec![c.name.into(), c.nodes.to_string(), c.cpu.into(), c.os.into()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_five_clusters() {
+        let t = super::run();
+        assert_eq!(t.rows.len(), 5);
+        assert!(t.render().contains("731"));
+        assert!(t.render().contains("E5470"));
+    }
+}

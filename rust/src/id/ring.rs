@@ -1,0 +1,181 @@
+//! The identifier ring `[0 : 2^64)` and its modular geometry.
+//!
+//! Everything here is the substrate of §III–§IV: clockwise distance,
+//! the half-open arc membership test used for key ownership and for
+//! EDRA's Rule 8 `stretch(p, k)` discharge.
+
+use std::fmt;
+
+/// A point on the identifier ring (peer ID or key ID).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Id(pub u64);
+
+impl Id {
+    pub const ZERO: Id = Id(0);
+    pub const MAX: Id = Id(u64::MAX);
+
+    /// Clockwise distance from `self` to `to` (0 if equal).
+    #[inline]
+    pub fn distance_to(self, to: Id) -> u64 {
+        to.0.wrapping_sub(self.0)
+    }
+
+    /// True iff `self` lies on the half-open clockwise arc `(from, to]`.
+    ///
+    /// This is the ownership test: key `k` belongs to the first peer `p`
+    /// with `k ∈ (pred(p), p]` (Chord/consistent-hashing successor
+    /// semantics). Degenerate arc (`from == to`) covers the whole ring.
+    #[inline]
+    pub fn in_arc(self, from: Id, to: Id) -> bool {
+        if from == to {
+            return true; // single-peer system owns everything
+        }
+        from.distance_to(self) <= from.distance_to(to) && self != from
+    }
+
+    /// Midpoint of the clockwise arc from `self` to `to`.
+    pub fn arc_midpoint(self, to: Id) -> Id {
+        Id(self.0.wrapping_add(self.distance_to(to) / 2))
+    }
+}
+
+impl fmt::Display for Id {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// A sorted view of live peer IDs with ring-successor queries; the
+/// reference implementation the Pallas kernel and `routing::Table` are
+/// checked against.
+#[derive(Debug, Clone, Default)]
+pub struct RingView {
+    ids: Vec<Id>, // sorted ascending
+}
+
+impl RingView {
+    pub fn from_ids(mut ids: Vec<Id>) -> Self {
+        ids.sort_unstable();
+        ids.dedup();
+        RingView { ids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+    pub fn ids(&self) -> &[Id] {
+        &self.ids
+    }
+
+    /// The successor of `k`: first peer clockwise from `k` (inclusive).
+    pub fn successor(&self, k: Id) -> Option<Id> {
+        if self.ids.is_empty() {
+            return None;
+        }
+        match self.ids.binary_search(&k) {
+            Ok(i) => Some(self.ids[i]),
+            Err(i) if i == self.ids.len() => Some(self.ids[0]), // wrap
+            Err(i) => Some(self.ids[i]),
+        }
+    }
+
+    /// The i-th successor of peer `p` (paper's `succ(p, i)`); `p` must be
+    /// a member. `succ(p, 0) = p`, indices wrap mod n.
+    pub fn succ(&self, p: Id, i: usize) -> Id {
+        let pos = self.ids.binary_search(&p).expect("succ() of non-member");
+        self.ids[(pos + i) % self.ids.len()]
+    }
+
+    /// The i-th predecessor (paper's `pred(p, i)`).
+    pub fn pred(&self, p: Id, i: usize) -> Id {
+        let pos = self.ids.binary_search(&p).expect("pred() of non-member");
+        let n = self.ids.len();
+        self.ids[(pos + n - (i % n)) % n]
+    }
+
+    /// The paper's `stretch(p, k)`: peers `succ(p, 0) ..= succ(p, k)`.
+    pub fn stretch(&self, p: Id, k: usize) -> Vec<Id> {
+        (0..=k.min(self.ids.len().saturating_sub(1)))
+            .map(|i| self.succ(p, i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(ids: &[u64]) -> RingView {
+        RingView::from_ids(ids.iter().map(|&x| Id(x)).collect())
+    }
+
+    #[test]
+    fn distance_wraps() {
+        assert_eq!(Id(10).distance_to(Id(20)), 10);
+        assert_eq!(Id(20).distance_to(Id(10)), u64::MAX - 9);
+        assert_eq!(Id(5).distance_to(Id(5)), 0);
+    }
+
+    #[test]
+    fn arc_membership() {
+        // plain arc
+        assert!(Id(15).in_arc(Id(10), Id(20)));
+        assert!(Id(20).in_arc(Id(10), Id(20))); // closed at 'to'
+        assert!(!Id(10).in_arc(Id(10), Id(20))); // open at 'from'
+        assert!(!Id(25).in_arc(Id(10), Id(20)));
+        // wrapping arc
+        assert!(Id(u64::MAX).in_arc(Id(u64::MAX - 10), Id(5)));
+        assert!(Id(3).in_arc(Id(u64::MAX - 10), Id(5)));
+        assert!(!Id(100).in_arc(Id(u64::MAX - 10), Id(5)));
+        // degenerate arc covers ring
+        assert!(Id(42).in_arc(Id(7), Id(7)));
+    }
+
+    #[test]
+    fn successor_semantics() {
+        let r = ring(&[10, 20, 30]);
+        assert_eq!(r.successor(Id(5)), Some(Id(10)));
+        assert_eq!(r.successor(Id(10)), Some(Id(10))); // inclusive
+        assert_eq!(r.successor(Id(11)), Some(Id(20)));
+        assert_eq!(r.successor(Id(31)), Some(Id(10))); // wrap
+        assert_eq!(ring(&[]).successor(Id(1)), None);
+    }
+
+    #[test]
+    fn succ_pred_inverse() {
+        let r = ring(&[1, 5, 9, 100, 2000]);
+        for &p in r.ids() {
+            for i in 0..10 {
+                let s = r.succ(p, i);
+                assert_eq!(r.pred(s, i), p, "pred(succ(p,{i}),{i}) = p");
+            }
+        }
+    }
+
+    #[test]
+    fn succ_wraps_mod_n() {
+        let r = ring(&[10, 20, 30]);
+        assert_eq!(r.succ(Id(10), 0), Id(10));
+        assert_eq!(r.succ(Id(10), 3), Id(10));
+        assert_eq!(r.succ(Id(30), 1), Id(10));
+    }
+
+    #[test]
+    fn stretch_covers_whole_ring_at_n_minus_1() {
+        let r = ring(&[3, 14, 15, 92, 65]);
+        let s = r.stretch(Id(3), r.len() - 1);
+        let mut all: Vec<Id> = s.clone();
+        all.sort_unstable();
+        assert_eq!(all, r.ids().to_vec(), "stretch(p, n-1) = D (paper §IV)");
+    }
+
+    #[test]
+    fn arc_midpoint_wrapping() {
+        assert_eq!(Id(0).arc_midpoint(Id(10)), Id(5));
+        let m = Id(u64::MAX - 4).arc_midpoint(Id(5));
+        assert_eq!(m, Id(u64::MAX.wrapping_add(1))); // wraps to 0
+    }
+}

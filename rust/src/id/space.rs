@@ -1,0 +1,102 @@
+//! ID derivation: peer addresses and key values -> ring IDs.
+//!
+//! Peer IDs are SHA-1(ip:port) truncated to 64 bits (paper §III); key IDs
+//! are SHA-1 of the key bytes. The AOT data path additionally maps 64-bit
+//! keys onto the Pallas kernel's u32 ring via the SplitMix64 finalizer —
+//! `mix64` here is bit-identical to `python/compile/kernels/hash.py`.
+
+use std::net::SocketAddr;
+
+use super::ring::Id;
+use super::sha1::sha1;
+use crate::util::rng::mix64;
+
+/// Peer ID from a socket address, exactly as the paper: hash of the IP
+/// address (+ port so many simulated peers can share one host).
+pub fn peer_id(addr: &SocketAddr) -> Id {
+    let s = addr.to_string();
+    digest_to_id(&sha1(s.as_bytes()))
+}
+
+/// Peer ID from an arbitrary label (simulator peers have no real socket).
+pub fn peer_id_from_label(label: &str) -> Id {
+    digest_to_id(&sha1(label.as_bytes()))
+}
+
+/// Key ID from the key's bytes.
+pub fn key_id(key: &[u8]) -> Id {
+    digest_to_id(&sha1(key))
+}
+
+/// Top 8 bytes of the SHA-1 digest, big-endian (uniform over the ring).
+fn digest_to_id(d: &[u8; 20]) -> Id {
+    Id(u64::from_be_bytes([d[0], d[1], d[2], d[3], d[4], d[5], d[6], d[7]]))
+}
+
+/// The AOT kernel's u32 ring mapping: top 32 bits of SplitMix64(key).
+/// Mirrors `hash.key_to_ring32` (python); cross-checked in tests.
+#[inline]
+pub fn key_to_ring32(key: u64) -> u32 {
+    (mix64(key) >> 32) as u32
+}
+
+/// Project a 64-bit ring ID to the kernel's u32 ring, preserving order.
+/// Used when snapshotting a routing table for the PJRT batch-lookup path.
+#[inline]
+pub fn id_to_ring32(id: Id) -> u32 {
+    (id.0 >> 32) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peer_ids_deterministic_and_distinct() {
+        let a: SocketAddr = "10.0.0.1:4000".parse().unwrap();
+        let b: SocketAddr = "10.0.0.2:4000".parse().unwrap();
+        assert_eq!(peer_id(&a), peer_id(&a));
+        assert_ne!(peer_id(&a), peer_id(&b));
+        // port participates (several peers per physical node, §VII-A)
+        let c: SocketAddr = "10.0.0.1:4001".parse().unwrap();
+        assert_ne!(peer_id(&a), peer_id(&c));
+    }
+
+    #[test]
+    fn ids_roughly_uniform() {
+        // bucket the top 3 bits of 4096 sequential peer labels
+        let mut counts = [0u32; 8];
+        for i in 0..4096 {
+            let id = peer_id_from_label(&format!("peer-{i}"));
+            counts[(id.0 >> 61) as usize] += 1;
+        }
+        let expect = 4096.0 / 8.0;
+        for c in counts {
+            assert!((c as f64 - expect).abs() < 0.2 * expect, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn ring32_matches_mix64_top_bits() {
+        for k in [0u64, 1, 0xDEADBEEF, u64::MAX] {
+            assert_eq!(key_to_ring32(k), (mix64(k) >> 32) as u32);
+        }
+    }
+
+    #[test]
+    fn id_to_ring32_preserves_order() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut ids: Vec<Id> = (0..1000).map(|_| Id(rng.next_u64())).collect();
+        ids.sort_unstable();
+        let projected: Vec<u32> = ids.iter().map(|&i| id_to_ring32(i)).collect();
+        let mut sorted = projected.clone();
+        sorted.sort_unstable();
+        assert_eq!(projected, sorted);
+    }
+
+    #[test]
+    fn key_id_stable() {
+        assert_eq!(key_id(b"hello"), key_id(b"hello"));
+        assert_ne!(key_id(b"hello"), key_id(b"world"));
+    }
+}

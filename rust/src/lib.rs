@@ -1,0 +1,43 @@
+//! # d1ht — an effective single-hop DHT (Monnerat & Amorim, CCPE 2014)
+//!
+//! Full reproduction of the paper's system and evaluation:
+//!
+//! * [`edra`] — the Event Detection and Report Algorithm (§IV): Θ-interval
+//!   event buffering, TTL-stratified dissemination to `succ(p, 2^l)`,
+//!   self-tuned buffering (Eqs. IV.2–IV.4).
+//! * [`dht`] — peer state machines: D1HT (+ Quarantine, §V), and every
+//!   baseline the paper evaluates: 1h-Calot, OneHop, a Pastry-like
+//!   multi-hop DHT (the paper's Chimera), and a central directory server.
+//! * [`sim`] — deterministic discrete-event simulator standing in for the
+//!   paper's PlanetLab / HPC testbeds (DESIGN.md §4 lists substitutions).
+//! * [`net`] — a *real* D1HT over UDP/TCP sockets (std::net + threads).
+//! * [`analysis`] — the closed-form maintenance-bandwidth models (§VIII).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   lookup and analytics graphs (`artifacts/*.hlo.txt`).
+//! * [`experiments`] — one driver per paper table/figure.
+//!
+//! Layering: python (JAX + Pallas) runs only at build time (`make
+//! artifacts`); this crate is self-contained at run time.
+
+pub mod analysis;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dht;
+pub mod edra;
+pub mod experiments;
+pub mod id;
+pub mod net;
+pub mod proto;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// The paper's target fraction of lookups that may take more than one hop
+/// (`f`, §IV-D). 1% throughout the evaluation.
+pub const DEFAULT_F: f64 = 0.01;
+
+/// Average one-way maintenance-message delay assumed by the analytical
+/// results of §VIII (an overestimate per the paper's own [49] citation).
+pub const DEFAULT_DELTA_AVG_SECS: f64 = 0.25;

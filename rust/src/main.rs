@@ -1,0 +1,1 @@
+fn main() -> anyhow::Result<()> { d1ht::cli::main() }

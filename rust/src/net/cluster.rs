@@ -1,0 +1,161 @@
+//! In-process peer clusters: spin up N real socket peers, drive a lookup
+//! workload with churn, and report the paper's headline metrics — the
+//! machinery behind `examples/real_network.rs` and the e2e integration
+//! test.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::net::peer::{spawn, NetPeerCfg, PeerHandle};
+use crate::util::rng::Rng;
+use crate::util::stats::LatencyHist;
+
+pub struct Cluster {
+    pub peers: Vec<PeerHandle>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadReport {
+    pub lookups: u64,
+    pub resolved: u64,
+    pub one_hop: u64,
+    pub latency: LatencyHist,
+    pub wall: Duration,
+    /// Aggregate maintenance traffic across peers (bits out).
+    pub maintenance_bits_out: u64,
+}
+
+impl WorkloadReport {
+    pub fn one_hop_ratio(&self) -> f64 {
+        if self.lookups == 0 {
+            1.0
+        } else {
+            self.one_hop as f64 / self.lookups as f64
+        }
+    }
+    pub fn throughput(&self) -> f64 {
+        self.lookups as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+impl Cluster {
+    /// Boot a cluster of `n` peers on loopback (first peer founds the
+    /// system; the rest join through it). Joins are paced so each join's
+    /// dissemination settles before the next — the §VII-A growth phase
+    /// paced joins at one per second for the same reason; on loopback a
+    /// far smaller gap suffices.
+    pub fn start(n: usize, f: f64) -> Result<Cluster> {
+        Self::start_paced(n, f, Duration::from_millis(100))
+    }
+
+    pub fn start_paced(n: usize, f: f64, spacing: Duration) -> Result<Cluster> {
+        assert!(n >= 1);
+        let mut peers = Vec::with_capacity(n);
+        let boot = spawn(NetPeerCfg { f, ..Default::default() })?;
+        let boot_addr = boot.addr;
+        peers.push(boot);
+        for _ in 1..n {
+            std::thread::sleep(spacing);
+            peers.push(spawn(NetPeerCfg {
+                f,
+                bootstrap: Some(boot_addr),
+                ..Default::default()
+            })?);
+        }
+        Ok(Cluster { peers })
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    /// Wait until every peer's table has converged to the full size (or
+    /// the timeout passes); returns convergence status.
+    pub fn await_convergence(&self, timeout: Duration) -> bool {
+        let n = self.peers.len();
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            let ok = self
+                .peers
+                .iter()
+                .all(|p| p.stats().map(|s| s.table_size == n).unwrap_or(false));
+            if ok {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        false
+    }
+
+    /// Closed-loop lookup workload from random origins.
+    pub fn run_lookups(&self, count: usize, seed: u64) -> WorkloadReport {
+        let mut rng = Rng::new(seed);
+        let mut rep = WorkloadReport::default();
+        let t0 = Instant::now();
+        for _ in 0..count {
+            let origin = &self.peers[rng.below(self.peers.len() as u64) as usize];
+            let target = rng.next_u64();
+            if let Ok(out) = origin.lookup(target) {
+                rep.lookups += 1;
+                if out.owner.is_some() {
+                    rep.resolved += 1;
+                }
+                if out.hops <= 1 {
+                    rep.one_hop += 1;
+                }
+                rep.latency.record_ns(out.latency.as_nanos() as u64);
+            }
+        }
+        rep.wall = t0.elapsed();
+        for p in &self.peers {
+            if let Ok(s) = p.stats() {
+                rep.maintenance_bits_out += s.traffic.bits_out;
+            }
+        }
+        rep
+    }
+
+    /// Kill (SIGKILL-style) one random peer and gracefully leave another,
+    /// as in the §VII-A half/half churn. Returns how many were removed.
+    pub fn churn_step(&mut self, seed: u64) -> usize {
+        let mut rng = Rng::new(seed);
+        let mut removed = 0;
+        if self.peers.len() > 2 {
+            let i = 1 + rng.below((self.peers.len() - 1) as u64) as usize;
+            self.peers.remove(i).kill();
+            removed += 1;
+        }
+        if self.peers.len() > 2 {
+            let i = 1 + rng.below((self.peers.len() - 1) as u64) as usize;
+            self.peers.remove(i).leave();
+            removed += 1;
+        }
+        removed
+    }
+
+    pub fn shutdown(self) {
+        for p in self.peers {
+            p.kill();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_cluster_end_to_end() {
+        let cluster = Cluster::start(5, 0.01).expect("start");
+        assert!(cluster.await_convergence(Duration::from_secs(10)), "tables converge");
+        let rep = cluster.run_lookups(100, 7);
+        assert_eq!(rep.lookups, 100);
+        assert!(rep.resolved >= 99, "resolved {}", rep.resolved);
+        assert!(rep.one_hop_ratio() > 0.99, "one-hop {}", rep.one_hop_ratio());
+        cluster.shutdown();
+    }
+}

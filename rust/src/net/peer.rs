@@ -1,0 +1,612 @@
+//! A real D1HT peer: one thread, one UDP socket, full routing table,
+//! EDRA maintenance (§VI).
+//!
+//! Control surface: [`PeerHandle`] issues lookups, graceful/abrupt stops
+//! and stat snapshots over mpsc channels; the peer thread multiplexes
+//! those with the socket.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddrV4;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::edra::Edra;
+use crate::id::{space, Id};
+use crate::net::transport::Transport;
+use crate::net::wire::NetMsg;
+use crate::proto::messages::Event;
+use crate::routing::Table;
+use crate::util::stats::Traffic;
+
+#[derive(Debug, Clone)]
+pub struct NetPeerCfg {
+    pub f: f64,
+    /// Known member to join through; None = found a new system.
+    pub bootstrap: Option<SocketAddrV4>,
+    /// Main-loop tick (drives interval close / retransmit checks).
+    /// Request latency is bounded by ~2 ticks (origin dequeues the
+    /// command, target polls its socket), so this is the latency floor
+    /// of the runtime — see EXPERIMENTS.md §Perf iteration 1.
+    pub tick: Duration,
+}
+
+impl Default for NetPeerCfg {
+    fn default() -> Self {
+        NetPeerCfg { f: crate::DEFAULT_F, bootstrap: None, tick: Duration::from_millis(1) }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PeerStats {
+    pub id: u64,
+    pub table_size: usize,
+    pub traffic: Traffic,
+    pub lookups_sent: u64,
+    pub lookups_one_hop: u64,
+    pub lookups_retried: u64,
+    pub uptime: Duration,
+}
+
+enum Cmd {
+    Lookup { target: u64, reply: Sender<LookupOutcome> },
+    Stats { reply: Sender<PeerStats> },
+    /// Graceful leave (notify successor) then stop.
+    Leave,
+    /// SIGKILL-style stop: no flush, no notice.
+    Kill,
+}
+
+#[derive(Debug, Clone)]
+pub struct LookupOutcome {
+    pub owner: Option<SocketAddrV4>,
+    pub latency: Duration,
+    pub hops: u32,
+}
+
+pub struct PeerHandle {
+    pub id: Id,
+    pub addr: SocketAddrV4,
+    cmd: Sender<Cmd>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl PeerHandle {
+    pub fn lookup(&self, target: u64) -> Result<LookupOutcome> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd.send(Cmd::Lookup { target, reply: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
+    pub fn stats(&self) -> Result<PeerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd.send(Cmd::Stats { reply: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
+    pub fn leave(mut self) {
+        let _ = self.cmd.send(Cmd::Leave);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Abrupt failure (the experiment's SIGKILL half).
+    pub fn kill(mut self) {
+        let _ = self.cmd.send(Cmd::Kill);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for PeerHandle {
+    fn drop(&mut self) {
+        let _ = self.cmd.send(Cmd::Kill);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn a peer thread; blocks until it has joined (received its table).
+pub fn spawn(cfg: NetPeerCfg) -> Result<PeerHandle> {
+    let transport = Transport::bind_local()?;
+    let addr = transport.addr();
+    let id = space::peer_id(&std::net::SocketAddr::V4(addr));
+    let (cmd_tx, cmd_rx) = mpsc::channel();
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let thread = std::thread::Builder::new()
+        .name(format!("d1ht-{}", addr.port()))
+        .spawn(move || run_peer(cfg, transport, id, cmd_rx, ready_tx))?;
+    // wait for join completion
+    ready_rx.recv_timeout(Duration::from_secs(15))??;
+    Ok(PeerHandle { id, addr, cmd: cmd_tx, thread: Some(thread) })
+}
+
+struct PeerState {
+    me: Id,
+    addr: SocketAddrV4,
+    /// id -> address (the paper's ~6-byte-per-peer table, §VI).
+    members: BTreeMap<Id, SocketAddrV4>,
+    table: Table,
+    edra: Edra,
+    predecessor: Id,
+    last_pred_seen: Instant,
+    started: Instant,
+    /// §VI join protocol: freshly admitted joiners we keep forwarding
+    /// events to until they are woven into the dissemination trees.
+    recent_joiners: Vec<(SocketAddrV4, Instant)>,
+    /// Last-known addresses of departed peers: leave events travel as
+    /// addresses on the wire (Fig. 2's m), so we must still be able to
+    /// serialize a leave after dropping the member.
+    departed: BTreeMap<Id, SocketAddrV4>,
+    lookups_sent: u64,
+    lookups_one_hop: u64,
+    lookups_retried: u64,
+}
+
+/// How long an admitting successor keeps directly forwarding events to a
+/// fresh joiner (covers in-flight disseminations whose trees predate it).
+const JOIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Application lookup timeout before the target is presumed departed
+/// (the §IV-C "learn from routing failures" trigger).
+const LOOKUP_TIMEOUT: Duration = Duration::from_millis(500);
+
+impl PeerState {
+    fn insert(&mut self, addr: SocketAddrV4) -> bool {
+        let id = space::peer_id(&std::net::SocketAddr::V4(addr));
+        if self.table.insert(id) {
+            self.members.insert(id, addr);
+            if id.in_arc(self.predecessor, self.me) && id != self.me {
+                self.predecessor = id;
+                self.last_pred_seen = Instant::now();
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    fn remove(&mut self, addr: SocketAddrV4) -> bool {
+        let id = space::peer_id(&std::net::SocketAddr::V4(addr));
+        let had = self.table.remove(id);
+        self.members.remove(&id);
+        self.departed.insert(id, addr);
+        if self.departed.len() > 10_000 {
+            self.departed.clear(); // bounded memory; stale by then anyway
+        }
+        if had && id == self.predecessor {
+            self.predecessor = self.table.predecessor_excl(self.me).unwrap_or(self.me);
+            self.last_pred_seen = Instant::now();
+        }
+        had
+    }
+
+    fn owner_of(&self, target: Id) -> Option<(Id, SocketAddrV4)> {
+        let id = self.table.successor(target)?;
+        Some((id, *self.members.get(&id)?))
+    }
+
+    fn now_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+fn run_peer(
+    cfg: NetPeerCfg,
+    mut tr: Transport,
+    me: Id,
+    cmd_rx: Receiver<Cmd>,
+    ready: Sender<Result<()>>,
+) {
+    let addr = tr.addr();
+    let mut st = PeerState {
+        me,
+        addr,
+        members: BTreeMap::from([(me, addr)]),
+        table: Table::from_ids(vec![me]),
+        edra: Edra::new(me, cfg.f, 0.0),
+        predecessor: me,
+        last_pred_seen: Instant::now(),
+        started: Instant::now(),
+        recent_joiners: Vec::new(),
+        departed: BTreeMap::new(),
+        lookups_sent: 0,
+        lookups_one_hop: 0,
+        lookups_retried: 0,
+    };
+
+    // ---- join protocol (§VI): ask bootstrap, successor sends table ----
+    if let Some(boot) = cfg.bootstrap {
+        tr.send(boot, &NetMsg::JoinReq { joiner: addr }).ok();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut joined = false;
+        while Instant::now() < deadline && !joined {
+            for (_, msg) in tr.poll() {
+                if let NetMsg::Table { addrs, .. } = msg {
+                    for a in addrs {
+                        st.insert(a);
+                    }
+                    joined = true;
+                }
+            }
+            tr.tick_retransmit();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if !joined {
+            let _ = ready.send(Err(anyhow::anyhow!("join timed out")));
+            return;
+        }
+    }
+    let _ = ready.send(Ok(()));
+
+    // ---- main loop ----
+    // nonce -> (sent_at, reply channel, target key, hops so far, peer asked)
+    let mut pending_lookups: BTreeMap<u32, (Instant, Sender<LookupOutcome>, u64, u32, SocketAddrV4)> =
+        BTreeMap::new();
+    let mut nonce = 0u32;
+    loop {
+        // 1. control commands — drain everything queued this tick
+        let mut first = true;
+        loop {
+            let cmd = if first {
+                first = false;
+                match cmd_rx.recv_timeout(cfg.tick) {
+                    Ok(c) => c,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            } else {
+                match cmd_rx.try_recv() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                }
+            };
+            match cmd {
+            Cmd::Lookup { target, reply } => {
+                nonce = nonce.wrapping_add(1).max(1);
+                let tid = Id(target);
+                if let Some((oid, oaddr)) = st.owner_of(tid) {
+                    if oid == st.me {
+                        let _ = reply.send(LookupOutcome {
+                            owner: Some(addr),
+                            latency: Duration::ZERO,
+                            hops: 0,
+                        });
+                    } else {
+                        tr.send(oaddr, &NetMsg::Lookup { nonce, target }).ok();
+                        st.lookups_sent += 1;
+                        pending_lookups.insert(nonce, (Instant::now(), reply, target, 0, oaddr));
+                    }
+                } else {
+                    let _ = reply.send(LookupOutcome {
+                        owner: None,
+                        latency: Duration::ZERO,
+                        hops: 0,
+                    });
+                }
+            }
+            Cmd::Stats { reply } => {
+                let _ = reply.send(PeerStats {
+                    id: st.me.0,
+                    table_size: st.table.len(),
+                    traffic: tr.traffic,
+                    lookups_sent: st.lookups_sent,
+                    lookups_one_hop: st.lookups_one_hop,
+                    lookups_retried: st.lookups_retried,
+                    uptime: st.started.elapsed(),
+                });
+            }
+            Cmd::Leave => {
+                // graceful: tell the successor so it can announce
+                if let Some(sid) = st.table.successor_excl(st.me) {
+                    if sid != st.me {
+                        if let Some(&sa) = st.members.get(&sid) {
+                            let seq = tr.fresh_seq();
+                            tr.send(sa, &NetMsg::LeaveNotice { seq, leaver: addr }).ok();
+                            // give the ack a moment
+                            let end = Instant::now() + Duration::from_millis(300);
+                            while Instant::now() < end && tr.pending_count() > 0 {
+                                tr.poll();
+                                tr.tick_retransmit();
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                        }
+                    }
+                }
+                return;
+            }
+            Cmd::Kill => return,
+            }
+        }
+
+        // 2. socket
+        for (from, msg) in tr.poll() {
+            handle_msg(&cfg, &mut st, &mut tr, &mut pending_lookups, from, msg);
+        }
+
+        // 3. retransmission + failure inference. Rule 5 designates one
+        // announcer per failure — the failed peer's successor (that is
+        // us iff the dead peer was our predecessor). Everyone else only
+        // learns locally (§IV-C).
+        for dead in tr.tick_retransmit() {
+            let dead_id = space::peer_id(&std::net::SocketAddr::V4(dead));
+            let was_pred = dead_id == st.predecessor;
+            if st.remove(dead) && was_pred {
+                let ev = Event::leave(dead_id);
+                let n = st.table.len().max(2);
+                let now = st.now_secs();
+                st.edra.detect_local(ev, n, now);
+            }
+        }
+
+        // 4. EDRA interval close
+        let n = st.table.len().max(2);
+        let now = st.now_secs();
+        if st.edra.interval_due(n, now) {
+            // §VI: fresh joiners get every buffered event directly until
+            // the dissemination trees include them
+            st.recent_joiners.retain(|(_, t)| t.elapsed() < JOIN_GRACE);
+            if !st.recent_joiners.is_empty() {
+                let events = st.edra.buffered_events();
+                if !events.is_empty() {
+                    let (mut joins, mut leaves) = (Vec::new(), Vec::new());
+                    for ev in &events {
+                        if let Some(a) = event_addr(&st, ev) {
+                            match ev.kind {
+                                crate::proto::messages::EventKind::Join => joins.push(a),
+                                crate::proto::messages::EventKind::Leave => leaves.push(a),
+                            }
+                        }
+                    }
+                    let joiners: Vec<SocketAddrV4> =
+                        st.recent_joiners.iter().map(|(a, _)| *a).collect();
+                    for j in joiners {
+                        let seq = tr.fresh_seq();
+                        tr.send(
+                            j,
+                            &NetMsg::Maintenance {
+                                seq,
+                                ttl: 0,
+                                joins: joins.clone(),
+                                leaves: leaves.clone(),
+                            },
+                        )
+                        .ok();
+                    }
+                }
+            }
+            let outgoing = st.edra.close_interval(&st.table, now);
+            for out in outgoing {
+                let Some(&target) = st.members.get(&out.target) else { continue };
+                let (mut joins, mut leaves) = (Vec::new(), Vec::new());
+                for ev in &out.events {
+                    // events carry addresses on the wire; we track them
+                    // in the member map (leaves keep last-known addr)
+                    if let Some(a) = event_addr(&st, ev) {
+                        match ev.kind {
+                            crate::proto::messages::EventKind::Join => joins.push(a),
+                            crate::proto::messages::EventKind::Leave => leaves.push(a),
+                        }
+                    }
+                }
+                let seq = tr.fresh_seq();
+                tr.send(target, &NetMsg::Maintenance { seq, ttl: out.ttl, joins, leaves })
+                    .ok();
+            }
+        }
+
+        // 5. predecessor liveness (Rule 5)
+        let t_detect = Duration::from_secs_f64(st.edra.t_detect(n).clamp(0.5, 30.0));
+        if st.predecessor != st.me && st.last_pred_seen.elapsed() > 2 * t_detect {
+            if let Some(&pa) = st.members.get(&st.predecessor) {
+                nonce = nonce.wrapping_add(1).max(1);
+                tr.send(pa, &NetMsg::Probe { nonce }).ok();
+            }
+            // silence is concluded via retransmit-death of maintenance
+            // traffic; reset the clock so we do not spam probes
+            st.last_pred_seen = Instant::now();
+        }
+
+        // 6. lookup timeouts -> retry against refreshed table
+        let now_i = Instant::now();
+        let expired: Vec<u32> = pending_lookups
+            .iter()
+            .filter(|(_, (t0, _, _, _, _))| now_i.duration_since(*t0) > LOOKUP_TIMEOUT)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in expired {
+            let (t0, reply, target, hops, asked) = pending_lookups.remove(&k).unwrap();
+            // §IV-C: routing failures provide information about peers
+            // that have left — the asker learns locally (it is not the
+            // Rule-5 announcer unless the target was its predecessor).
+            let was_pred = id_of(asked) == st.predecessor;
+            if st.remove(asked) && was_pred {
+                let n = st.table.len().max(2);
+                let now = st.now_secs();
+                st.edra.detect_local(Event::leave(id_of(asked)), n, now);
+            }
+            if hops < 3 {
+                if let Some((oid, oaddr)) = st.owner_of(Id(target)) {
+                    if oid != st.me {
+                        nonce = nonce.wrapping_add(1).max(1);
+                        tr.send(oaddr, &NetMsg::Lookup { nonce, target }).ok();
+                        pending_lookups.insert(nonce, (t0, reply, target, hops + 1, oaddr));
+                        continue;
+                    } else {
+                        // after learning, we own the key ourselves
+                        let _ = reply.send(LookupOutcome {
+                            owner: Some(st.addr),
+                            latency: t0.elapsed(),
+                            hops: hops + 1,
+                        });
+                        continue;
+                    }
+                }
+            }
+            let _ = reply.send(LookupOutcome {
+                owner: None,
+                latency: t0.elapsed(),
+                hops: hops + 1,
+            });
+        }
+    }
+}
+
+fn event_addr(st: &PeerState, ev: &Event) -> Option<SocketAddrV4> {
+    st.members
+        .get(&ev.peer)
+        .copied()
+        .or_else(|| st.departed.get(&ev.peer).copied())
+}
+
+fn handle_msg(
+    _cfg: &NetPeerCfg,
+    st: &mut PeerState,
+    tr: &mut Transport,
+    pending_lookups: &mut BTreeMap<u32, (Instant, Sender<LookupOutcome>, u64, u32, SocketAddrV4)>,
+    from: SocketAddrV4,
+    msg: NetMsg,
+) {
+    let from_id = space::peer_id(&std::net::SocketAddr::V4(from));
+    match msg {
+        NetMsg::Maintenance { ttl, joins, leaves, .. } => {
+            if ttl == 0 && from_id == st.predecessor {
+                st.last_pred_seen = Instant::now();
+            }
+            // learn from traffic (§IV-C)
+            st.insert(from);
+            let n = st.table.len().max(2);
+            let now = st.now_secs();
+            // Rule 2/3: acknowledge (=> forward) every carried event even
+            // if it is already reflected in our table — a recent joiner's
+            // snapshot contains in-flight events, and dropping them here
+            // would starve its dissemination subtree.
+            for a in joins {
+                st.edra.acknowledge(Event::join(id_of(a)), ttl, now);
+                st.insert(a);
+            }
+            for a in leaves {
+                st.edra.acknowledge(Event::leave(id_of(a)), ttl, now);
+                st.remove(a);
+            }
+            let _ = n;
+        }
+        NetMsg::Lookup { nonce, target } => {
+            // we are (believed to be) the owner; answer with ourselves or
+            // with the better owner we know (routing-failure recovery)
+            let owner = st
+                .owner_of(Id(target))
+                .map(|(_, a)| a)
+                .unwrap_or(st.addr);
+            tr.send(from, &NetMsg::LookupResp { nonce, owner }).ok();
+        }
+        NetMsg::LookupResp { nonce, owner } => {
+            if let Some((t0, reply, _target, hops, _asked)) = pending_lookups.remove(&nonce) {
+                // one hop iff our first guess answered AND it is the owner
+                if hops == 0 && owner == from {
+                    st.lookups_one_hop += 1;
+                } else {
+                    st.lookups_retried += 1;
+                }
+                let _ = reply.send(LookupOutcome {
+                    owner: Some(owner),
+                    latency: t0.elapsed(),
+                    hops: hops + 1,
+                });
+            }
+        }
+        NetMsg::JoinReq { joiner } => {
+            let jid = id_of(joiner);
+            // route to the joiner's successor (one forward max with a
+            // fresh table); if that is us, admit
+            match st.table.successor(jid) {
+                Some(sid) if sid == st.me || st.members.get(&sid).is_none() => {
+                    admit(st, tr, joiner);
+                }
+                Some(sid) => {
+                    let &sa = st.members.get(&sid).unwrap();
+                    tr.send(sa, &NetMsg::JoinReq { joiner }).ok();
+                }
+                None => admit(st, tr, joiner),
+            }
+        }
+        NetMsg::Table { .. } => { /* only meaningful during join */ }
+        NetMsg::LeaveNotice { leaver, .. } => {
+            if st.remove(leaver) {
+                let n = st.table.len().max(2);
+                let now = st.now_secs();
+                st.edra.detect_local(Event::leave(id_of(leaver)), n, now);
+            }
+        }
+        NetMsg::Probe { nonce } => {
+            tr.send(from, &NetMsg::ProbeReply { nonce }).ok();
+        }
+        NetMsg::ProbeReply { .. } => {
+            if from_id == st.predecessor {
+                st.last_pred_seen = Instant::now();
+            }
+        }
+        NetMsg::Ack { .. } => {}
+    }
+}
+
+fn id_of(a: SocketAddrV4) -> Id {
+    space::peer_id(&std::net::SocketAddr::V4(a))
+}
+
+fn admit(st: &mut PeerState, tr: &mut Transport, joiner: SocketAddrV4) {
+    let jid = id_of(joiner);
+    // transfer the routing table (single loopback datagram; see mod docs)
+    let addrs: Vec<SocketAddrV4> = st.members.values().copied().collect();
+    let seq = tr.fresh_seq();
+    tr.send(joiner, &NetMsg::Table { seq, addrs }).ok();
+    if st.insert(joiner) {
+        let n = st.table.len().max(2);
+        let now = st.now_secs();
+        st.edra.detect_local(Event::join(jid), n, now);
+        // §VI: keep the joiner fed with events for a grace period
+        st.recent_joiners.push((joiner, Instant::now()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_peer_owns_everything() {
+        let p = spawn(NetPeerCfg::default()).expect("spawn");
+        let out = p.lookup(12345).expect("lookup");
+        assert_eq!(out.owner, Some(p.addr));
+        assert_eq!(out.hops, 0);
+        let s = p.stats().unwrap();
+        assert_eq!(s.table_size, 1);
+        p.kill();
+    }
+
+    #[test]
+    fn three_peers_resolve_one_hop() {
+        let boot = spawn(NetPeerCfg::default()).expect("boot");
+        let cfg = NetPeerCfg { bootstrap: Some(boot.addr), ..Default::default() };
+        let p2 = spawn(cfg.clone()).expect("p2");
+        let p3 = spawn(cfg).expect("p3");
+        // allow the join announcements to propagate
+        std::thread::sleep(Duration::from_millis(1500));
+        let s1 = boot.stats().unwrap();
+        let s3 = p3.stats().unwrap();
+        assert_eq!(s1.table_size, 3, "boot sees all");
+        assert_eq!(s3.table_size, 3, "latest joiner got the table");
+        // lookups resolve (owner is consistent across askers)
+        let o_a = boot.lookup(999).unwrap().owner.unwrap();
+        let o_b = p2.lookup(999).unwrap().owner.unwrap();
+        assert_eq!(o_a, o_b, "consistent ownership");
+        p3.leave();
+        p2.kill();
+        boot.kill();
+    }
+}

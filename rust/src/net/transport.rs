@@ -1,0 +1,238 @@
+//! Reliable-UDP transport: seq/ack + retransmission over a non-blocking
+//! socket (§III: "any message should be acknowledged to allow for
+//! retransmissions ... implemented over an unreliable protocol like
+//! UDP").
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, SocketAddrV4, UdpSocket};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::net::wire::{decode, encode, NetMsg};
+use crate::util::stats::Traffic;
+
+pub const RTO: Duration = Duration::from_millis(250);
+pub const MAX_RETRIES: u32 = 4;
+
+struct Pending {
+    to: SocketAddrV4,
+    bytes: Vec<u8>,
+    sent_at: Instant,
+    retries: u32,
+}
+
+/// One peer's socket endpoint with reliability bookkeeping.
+pub struct Transport {
+    sock: UdpSocket,
+    addr: SocketAddrV4,
+    next_seq: u32,
+    pending: HashMap<u32, Pending>,
+    /// Recently-seen reliable seqs per source, to drop duplicates caused
+    /// by retransmitted-but-acked messages.
+    seen: HashMap<(SocketAddrV4, u32), Instant>,
+    pub traffic: Traffic,
+    recv_buf: Vec<u8>,
+}
+
+impl Transport {
+    /// Bind to an ephemeral loopback port.
+    pub fn bind_local() -> Result<Self> {
+        let sock = UdpSocket::bind("127.0.0.1:0").context("bind")?;
+        sock.set_nonblocking(true).context("nonblocking")?;
+        let addr = match sock.local_addr()? {
+            SocketAddr::V4(a) => a,
+            _ => unreachable!("bound v4"),
+        };
+        Ok(Transport {
+            sock,
+            addr,
+            next_seq: 1,
+            pending: HashMap::new(),
+            seen: HashMap::new(),
+            traffic: Traffic::default(),
+            recv_buf: vec![0u8; 65536],
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddrV4 {
+        self.addr
+    }
+
+    pub fn fresh_seq(&mut self) -> u32 {
+        self.next_seq = self.next_seq.wrapping_add(1).max(1);
+        self.next_seq
+    }
+
+    /// Send a message; reliable ones are tracked for retransmission.
+    pub fn send(&mut self, to: SocketAddrV4, msg: &NetMsg) -> Result<()> {
+        let bytes = encode(msg);
+        // charge the Figure-2 style wire size (payload + ipv4/udp headers)
+        self.traffic.send((bytes.len() as u64 + 28) * 8);
+        let _ = self.sock.send_to(&bytes, to); // best-effort; RTO covers loss
+        if let Some(seq) = msg.reliable_seq() {
+            self.pending.insert(
+                seq,
+                Pending { to, bytes, sent_at: Instant::now(), retries: 0 },
+            );
+        }
+        Ok(())
+    }
+
+    /// Drain the socket; acks are consumed internally, everything else is
+    /// returned (with duplicates of reliable messages suppressed and
+    /// auto-acked).
+    pub fn poll(&mut self) -> Vec<(SocketAddrV4, NetMsg)> {
+        let mut out = Vec::new();
+        loop {
+            match self.sock.recv_from(&mut self.recv_buf) {
+                Ok((len, SocketAddr::V4(from))) => {
+                    self.traffic.recv((len as u64 + 28) * 8);
+                    let Ok(msg) = decode(&self.recv_buf[..len]) else { continue };
+                    match msg {
+                        NetMsg::Ack { of_seq } => {
+                            self.pending.remove(&of_seq);
+                        }
+                        other => {
+                            if let Some(seq) = other.reliable_seq() {
+                                // ack immediately; drop duplicates
+                                let ack = encode(&NetMsg::Ack { of_seq: seq });
+                                self.traffic.send((ack.len() as u64 + 28) * 8);
+                                let _ = self.sock.send_to(&ack, from);
+                                let key = (from, seq);
+                                let now = Instant::now();
+                                self.seen.retain(|_, t| now.duration_since(*t) < Duration::from_secs(30));
+                                if self.seen.insert(key, now).is_some() {
+                                    continue; // duplicate delivery
+                                }
+                            }
+                            out.push((from, other));
+                        }
+                    }
+                }
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Retransmit overdue reliable messages; returns destinations that
+    /// exhausted their retries (presumed dead).
+    pub fn tick_retransmit(&mut self) -> Vec<SocketAddrV4> {
+        let now = Instant::now();
+        let mut dead = Vec::new();
+        let mut drop_seqs = Vec::new();
+        for (&seq, p) in self.pending.iter_mut() {
+            if now.duration_since(p.sent_at) >= RTO {
+                if p.retries >= MAX_RETRIES {
+                    dead.push(p.to);
+                    drop_seqs.push(seq);
+                } else {
+                    p.retries += 1;
+                    p.sent_at = now;
+                    self.traffic.send((p.bytes.len() as u64 + 28) * 8);
+                    let _ = self.sock.send_to(&p.bytes, p.to);
+                }
+            }
+        }
+        for s in drop_seqs {
+            self.pending.remove(&s);
+        }
+        dead
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_transports_exchange_and_ack() {
+        let mut a = Transport::bind_local().unwrap();
+        let mut b = Transport::bind_local().unwrap();
+        let seq = a.fresh_seq();
+        a.send(
+            b.addr(),
+            &NetMsg::Maintenance { seq, ttl: 0, joins: vec![], leaves: vec![] },
+        )
+        .unwrap();
+        assert_eq!(a.pending_count(), 1);
+        // b receives + auto-acks
+        let mut got = Vec::new();
+        for _ in 0..100 {
+            got = b.poll();
+            if !got.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(got.len(), 1);
+        // a consumes the ack
+        for _ in 0..100 {
+            a.poll();
+            if a.pending_count() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(a.pending_count(), 0, "ack clears pending");
+    }
+
+    #[test]
+    fn unreliable_messages_not_tracked() {
+        let mut a = Transport::bind_local().unwrap();
+        let b = Transport::bind_local().unwrap();
+        a.send(b.addr(), &NetMsg::Lookup { nonce: 1, target: 42 }).unwrap();
+        assert_eq!(a.pending_count(), 0);
+    }
+
+    #[test]
+    fn retransmit_gives_up_on_dead_destination() {
+        let mut a = Transport::bind_local().unwrap();
+        // unbound destination: nothing will ack
+        let dead_dst = {
+            let tmp = Transport::bind_local().unwrap();
+            tmp.addr()
+        }; // socket dropped here
+        let seq = a.fresh_seq();
+        a.send(dead_dst, &NetMsg::LeaveNotice { seq, leaver: dead_dst }).unwrap();
+        let mut dead = Vec::new();
+        for _ in 0..(MAX_RETRIES + 2) {
+            std::thread::sleep(RTO);
+            dead = a.tick_retransmit();
+            a.poll();
+            if !dead.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(dead, vec![dead_dst]);
+        assert_eq!(a.pending_count(), 0);
+    }
+
+    #[test]
+    fn duplicate_reliable_delivery_suppressed() {
+        let mut a = Transport::bind_local().unwrap();
+        let mut b = Transport::bind_local().unwrap();
+        let msg = NetMsg::Maintenance { seq: 77, ttl: 1, joins: vec![], leaves: vec![] };
+        a.send(b.addr(), &msg).unwrap();
+        a.send(b.addr(), &msg).unwrap(); // manual duplicate
+        std::thread::sleep(Duration::from_millis(30));
+        let got = b.poll();
+        assert_eq!(got.len(), 1, "duplicate dropped");
+    }
+
+    #[test]
+    fn traffic_counters_move() {
+        let mut a = Transport::bind_local().unwrap();
+        let b = Transport::bind_local().unwrap();
+        a.send(b.addr(), &NetMsg::Probe { nonce: 1 }).unwrap();
+        assert!(a.traffic.bits_out > 0);
+        assert_eq!(a.traffic.msgs_out, 1);
+    }
+}

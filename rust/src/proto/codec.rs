@@ -1,0 +1,232 @@
+//! Binary codec for the real socket runtime (`net/`).
+//!
+//! Layout follows Figure 2's field order: Type(1) SeqNo(4) PortNo(2)
+//! SystemID(4), then the body. IDs travel as 8-byte big-endian ring
+//! points. (The simulator never serializes — it charges `wire_bits()`
+//! directly — so this codec is exercised only by `net/` and its tests.)
+
+use anyhow::{bail, Context, Result};
+
+use crate::id::Id;
+use crate::proto::messages::{Event, EventKind, Message, MessageBody};
+
+pub const SYSTEM_ID: u32 = 0xD1B7_2014; // discard cross-system traffic (§VI)
+
+const T_MAINT: u8 = 1;
+const T_CALOT: u8 = 2;
+const T_ACK: u8 = 3;
+const T_HEARTBEAT: u8 = 4;
+const T_LOOKUP: u8 = 5;
+const T_LOOKUP_RESP: u8 = 6;
+const T_JOIN_REQ: u8 = 7;
+const T_TABLE: u8 = 8;
+const T_PROBE: u8 = 9;
+const T_PROBE_REPLY: u8 = 10;
+
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    buf.push(type_tag(&msg.body));
+    buf.extend_from_slice(&msg.seqno.to_be_bytes());
+    buf.extend_from_slice(&0u16.to_be_bytes()); // PortNo (default)
+    buf.extend_from_slice(&SYSTEM_ID.to_be_bytes());
+    buf.extend_from_slice(&msg.from.0.to_be_bytes());
+    buf.extend_from_slice(&msg.to.0.to_be_bytes());
+    match &msg.body {
+        MessageBody::Maintenance { ttl, events } => {
+            buf.push(*ttl);
+            buf.extend_from_slice(&(events.len() as u32).to_be_bytes());
+            for e in events {
+                push_event(&mut buf, e);
+            }
+        }
+        MessageBody::CalotMaintenance { event, range } => {
+            push_event(&mut buf, event);
+            buf.extend_from_slice(&range.to_be_bytes());
+        }
+        MessageBody::Ack { of_seqno } => buf.extend_from_slice(&of_seqno.to_be_bytes()),
+        MessageBody::Heartbeat | MessageBody::Probe | MessageBody::ProbeReply => {}
+        MessageBody::Lookup { target } => buf.extend_from_slice(&target.0.to_be_bytes()),
+        MessageBody::LookupResp { target, owner, terminal } => {
+            buf.extend_from_slice(&target.0.to_be_bytes());
+            buf.extend_from_slice(&owner.0.to_be_bytes());
+            buf.push(*terminal as u8);
+        }
+        MessageBody::JoinRequest { joiner } => buf.extend_from_slice(&joiner.0.to_be_bytes()),
+        MessageBody::TableTransfer { ids } => {
+            buf.extend_from_slice(&(ids.len() as u32).to_be_bytes());
+            for id in ids {
+                buf.extend_from_slice(&id.0.to_be_bytes());
+            }
+        }
+    }
+    buf
+}
+
+pub fn decode(buf: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf, pos: 0 };
+    let tag = r.u8()?;
+    let seqno = r.u32()?;
+    let _port = r.u16()?;
+    let system = r.u32()?;
+    if system != SYSTEM_ID {
+        bail!("foreign SystemID {system:#x} — discarding (paper §VI)");
+    }
+    let from = Id(r.u64()?);
+    let to = Id(r.u64()?);
+    let body = match tag {
+        T_MAINT => {
+            let ttl = r.u8()?;
+            let n = r.u32()? as usize;
+            if n > 1_000_000 {
+                bail!("implausible event count {n}");
+            }
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                events.push(r.event()?);
+            }
+            MessageBody::Maintenance { ttl, events }
+        }
+        T_CALOT => MessageBody::CalotMaintenance { event: r.event()?, range: r.u64()? },
+        T_ACK => MessageBody::Ack { of_seqno: r.u32()? },
+        T_HEARTBEAT => MessageBody::Heartbeat,
+        T_LOOKUP => MessageBody::Lookup { target: Id(r.u64()?) },
+        T_LOOKUP_RESP => MessageBody::LookupResp {
+            target: Id(r.u64()?),
+            owner: Id(r.u64()?),
+            terminal: r.u8()? != 0,
+        },
+        T_JOIN_REQ => MessageBody::JoinRequest { joiner: Id(r.u64()?) },
+        T_TABLE => {
+            let n = r.u32()? as usize;
+            if n > 50_000_000 {
+                bail!("implausible table size {n}");
+            }
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(Id(r.u64()?));
+            }
+            MessageBody::TableTransfer { ids }
+        }
+        T_PROBE => MessageBody::Probe,
+        T_PROBE_REPLY => MessageBody::ProbeReply,
+        t => bail!("unknown message type {t}"),
+    };
+    Ok(Message { from, to, seqno, body })
+}
+
+fn type_tag(body: &MessageBody) -> u8 {
+    match body {
+        MessageBody::Maintenance { .. } => T_MAINT,
+        MessageBody::CalotMaintenance { .. } => T_CALOT,
+        MessageBody::Ack { .. } => T_ACK,
+        MessageBody::Heartbeat => T_HEARTBEAT,
+        MessageBody::Lookup { .. } => T_LOOKUP,
+        MessageBody::LookupResp { .. } => T_LOOKUP_RESP,
+        MessageBody::JoinRequest { .. } => T_JOIN_REQ,
+        MessageBody::TableTransfer { .. } => T_TABLE,
+        MessageBody::Probe => T_PROBE,
+        MessageBody::ProbeReply => T_PROBE_REPLY,
+    }
+}
+
+fn push_event(buf: &mut Vec<u8>, e: &Event) {
+    buf.push(match e.kind {
+        EventKind::Join => 1,
+        EventKind::Leave => 0,
+    } | ((e.default_port as u8) << 1));
+    buf.extend_from_slice(&e.peer.0.to_be_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated message at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().context("u16")?))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().context("u32")?))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().context("u64")?))
+    }
+    fn event(&mut self) -> Result<Event> {
+        let flags = self.u8()?;
+        Ok(Event {
+            kind: if flags & 1 != 0 { EventKind::Join } else { EventKind::Leave },
+            default_port: flags & 2 != 0,
+            peer: Id(self.u64()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(body: MessageBody) {
+        let m = Message { from: Id(11), to: Id(22), seqno: 33, body };
+        let enc = encode(&m);
+        let dec = decode(&enc).expect("decode");
+        assert_eq!(m, dec);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(MessageBody::Maintenance {
+            ttl: 3,
+            events: vec![Event::join(Id(1)), Event::leave(Id(u64::MAX))],
+        });
+        roundtrip(MessageBody::CalotMaintenance { event: Event::leave(Id(5)), range: 1 << 40 });
+        roundtrip(MessageBody::Ack { of_seqno: 99 });
+        roundtrip(MessageBody::Heartbeat);
+        roundtrip(MessageBody::Lookup { target: Id(123) });
+        roundtrip(MessageBody::LookupResp { target: Id(1), owner: Id(2), terminal: true });
+        roundtrip(MessageBody::JoinRequest { joiner: Id(77) });
+        roundtrip(MessageBody::TableTransfer { ids: (0..100).map(Id).collect() });
+        roundtrip(MessageBody::Probe);
+        roundtrip(MessageBody::ProbeReply);
+    }
+
+    #[test]
+    fn foreign_system_id_rejected() {
+        let m = Message { from: Id(1), to: Id(2), seqno: 0, body: MessageBody::Heartbeat };
+        let mut enc = encode(&m);
+        enc[7] ^= 0xFF; // corrupt SystemID
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected_not_panicking() {
+        let m = Message {
+            from: Id(1),
+            to: Id(2),
+            seqno: 0,
+            body: MessageBody::TableTransfer { ids: (0..10).map(Id).collect() },
+        };
+        let enc = encode(&m);
+        for cut in 0..enc.len() {
+            let _ = decode(&enc[..cut]); // must not panic
+        }
+    }
+
+    #[test]
+    fn event_flags_roundtrip() {
+        let mut e = Event::join(Id(42));
+        e.default_port = false;
+        roundtrip(MessageBody::Maintenance { ttl: 0, events: vec![e] });
+    }
+}

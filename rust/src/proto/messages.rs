@@ -1,0 +1,149 @@
+//! Logical message types shared by the simulator and the socket runtime.
+//!
+//! `wire_bits()` charges each message its exact Figure-2 size so that
+//! simulated traffic and the analytical models are directly comparable.
+
+use crate::id::Id;
+use crate::proto::sizes;
+
+/// A membership change: the `events` of §II footnote 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Event {
+    pub peer: Id,
+    pub kind: EventKind,
+    /// Default-port peers cost 32 bits on the wire, others 48 (Fig. 2).
+    pub default_port: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    Join,
+    Leave,
+}
+
+impl Event {
+    pub fn join(peer: Id) -> Self {
+        Event { peer, kind: EventKind::Join, default_port: true }
+    }
+    pub fn leave(peer: Id) -> Self {
+        Event { peer, kind: EventKind::Leave, default_port: true }
+    }
+    pub fn wire_bits(&self) -> u64 {
+        if self.default_port {
+            sizes::M_EVENT_DEFAULT_PORT
+        } else {
+            sizes::M_EVENT_CUSTOM_PORT
+        }
+    }
+}
+
+/// A protocol message between two peers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub from: Id,
+    pub to: Id,
+    pub seqno: u32,
+    pub body: MessageBody,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MessageBody {
+    /// D1HT EDRA maintenance message `M(ttl)` (Rules 1–4, 7).
+    Maintenance { ttl: u8, events: Vec<Event> },
+    /// 1h-Calot maintenance message: exactly one event + propagation range.
+    CalotMaintenance { event: Event, range: u64 },
+    /// Explicit acknowledgment (UDP reliability, Fig. 2 four-field format).
+    Ack { of_seqno: u32 },
+    /// 1h-Calot heartbeat (not acknowledged).
+    Heartbeat,
+    /// Lookup request for a key.
+    Lookup { target: Id },
+    /// Lookup answer: the owner (or a better next hop for multi-hop DHTs).
+    LookupResp { target: Id, owner: Id, terminal: bool },
+    /// Join protocol: ask successor for admission + table (§VI).
+    JoinRequest { joiner: Id },
+    /// Join protocol: routing-table transfer (TCP in the real runtime).
+    TableTransfer { ids: Vec<Id> },
+    /// Predecessor-liveness probe (Rule 5) and its reply.
+    Probe,
+    ProbeReply,
+}
+
+impl Message {
+    /// Exact Figure-2 wire size in bits (IPv4+UDP headers included).
+    pub fn wire_bits(&self) -> u64 {
+        match &self.body {
+            MessageBody::Maintenance { events, .. } => {
+                let custom = events.iter().filter(|e| !e.default_port).count();
+                sizes::d1ht_msg_bits(events.len() - custom, custom)
+            }
+            MessageBody::CalotMaintenance { .. } => sizes::V_C,
+            MessageBody::Ack { .. } => sizes::V_A,
+            MessageBody::Heartbeat => sizes::V_H,
+            MessageBody::Lookup { .. } | MessageBody::LookupResp { .. } => sizes::V_LOOKUP,
+            MessageBody::JoinRequest { .. } => sizes::V_M,
+            // Bulk transfer: 6 B per entry (§VI memory layout) + TCP-ish
+            // 40 B framing, expressed in bits.
+            MessageBody::TableTransfer { ids } => 320 + ids.len() as u64 * 48,
+            MessageBody::Probe | MessageBody::ProbeReply => sizes::V_A,
+        }
+    }
+
+    /// Does this message require an acknowledgment? (§III: any message
+    /// should be acknowledged, except heartbeats [52] and acks themselves;
+    /// lookups are acknowledged by their response.)
+    pub fn needs_ack(&self) -> bool {
+        matches!(
+            self.body,
+            MessageBody::Maintenance { .. } | MessageBody::CalotMaintenance { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(body: MessageBody) -> Message {
+        Message { from: Id(1), to: Id(2), seqno: 7, body }
+    }
+
+    #[test]
+    fn maintenance_size_scales_with_events() {
+        let empty = msg(MessageBody::Maintenance { ttl: 0, events: vec![] });
+        assert_eq!(empty.wire_bits(), sizes::V_M);
+        let three = msg(MessageBody::Maintenance {
+            ttl: 2,
+            events: vec![Event::join(Id(1)), Event::leave(Id(2)), Event::join(Id(3))],
+        });
+        assert_eq!(three.wire_bits(), sizes::V_M + 3 * 32);
+    }
+
+    #[test]
+    fn custom_port_events_cost_more() {
+        let mut e = Event::join(Id(9));
+        e.default_port = false;
+        let m = msg(MessageBody::Maintenance { ttl: 0, events: vec![e] });
+        assert_eq!(m.wire_bits(), sizes::V_M + 48);
+    }
+
+    #[test]
+    fn fixed_sizes() {
+        assert_eq!(msg(MessageBody::Heartbeat).wire_bits(), sizes::V_H);
+        assert_eq!(msg(MessageBody::Ack { of_seqno: 0 }).wire_bits(), sizes::V_A);
+        assert_eq!(
+            msg(MessageBody::CalotMaintenance { event: Event::join(Id(1)), range: 4 }).wire_bits(),
+            sizes::V_C
+        );
+    }
+
+    #[test]
+    fn ack_policy() {
+        assert!(msg(MessageBody::Maintenance { ttl: 0, events: vec![] }).needs_ack());
+        assert!(msg(MessageBody::CalotMaintenance { event: Event::join(Id(1)), range: 1 })
+            .needs_ack());
+        assert!(!msg(MessageBody::Heartbeat).needs_ack());
+        assert!(!msg(MessageBody::Ack { of_seqno: 1 }).needs_ack());
+        assert!(!msg(MessageBody::Lookup { target: Id(5) }).needs_ack());
+    }
+}

@@ -1,0 +1,9 @@
+//! Wire formats of the paper's Figure 2: message layouts, their exact bit
+//! sizes (the ground truth for all bandwidth accounting, simulated and
+//! analytical), and a binary codec used by the real socket runtime.
+
+pub mod codec;
+pub mod messages;
+pub mod sizes;
+
+pub use messages::{Event, EventKind, Message, MessageBody};

@@ -1,0 +1,60 @@
+//! Exact message sizes from Figure 2 of the paper (bits, including the
+//! 28-byte IPv4 + UDP headers). Single source of truth — mirrored by
+//! `python/compile/model.py`; every bandwidth number in the repo derives
+//! from these constants.
+
+/// D1HT / OneHop maintenance message fixed part: 40 bytes
+/// (Type, SeqNo, PortNo, SystemID, TTL, counters + IPv4/UDP headers).
+pub const V_M: u64 = 320;
+
+/// Acknowledgment message (Type, SeqNo, PortNo, SystemID + headers): 36 B.
+pub const V_A: u64 = 288;
+
+/// 1h-Calot heartbeat — same four-field layout as an ack: 36 B.
+pub const V_H: u64 = 288;
+
+/// 1h-Calot maintenance message (carries exactly one event): 48 B.
+pub const V_C: u64 = 384;
+
+/// Bits to describe one event for a peer on the default port (IPv4 only).
+pub const M_EVENT_DEFAULT_PORT: u64 = 32;
+
+/// Bits for an event whose peer uses a non-default port (IPv4 + port).
+pub const M_EVENT_CUSTOM_PORT: u64 = 48;
+
+/// Expected average event size (§VI: "the average m value will be around
+/// 32 bits" — most peers use the default port).
+pub const M_EVENT_AVG: u64 = M_EVENT_DEFAULT_PORT;
+
+/// Lookup request/response (not maintenance traffic; §VII-A excludes it
+/// from the bandwidth figures but the simulator still models its latency):
+/// four common fields + 20-byte target/answer.
+pub const V_LOOKUP: u64 = V_A + 160;
+
+/// A D1HT maintenance message carrying `k` default-port events.
+#[inline]
+pub fn d1ht_msg_bits(events_default: usize, events_custom: usize) -> u64 {
+    V_M + events_default as u64 * M_EVENT_DEFAULT_PORT
+        + events_custom as u64 * M_EVENT_CUSTOM_PORT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_byte_values() {
+        // paper states: 40 B fixed part, 36 B ack/heartbeat, 48 B calot msg
+        assert_eq!(V_M / 8, 40);
+        assert_eq!(V_A / 8, 36);
+        assert_eq!(V_H / 8, 36);
+        assert_eq!(V_C / 8, 48);
+    }
+
+    #[test]
+    fn event_payload_sizes() {
+        assert_eq!(d1ht_msg_bits(0, 0), V_M);
+        assert_eq!(d1ht_msg_bits(3, 0), V_M + 96);
+        assert_eq!(d1ht_msg_bits(1, 1), V_M + 32 + 48);
+    }
+}

@@ -1,0 +1,5 @@
+//! Full routing tables (§III, §VI): every peer knows every other peer.
+
+pub mod table;
+
+pub use table::Table;

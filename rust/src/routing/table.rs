@@ -1,0 +1,236 @@
+//! The full routing table of a single-hop DHT peer.
+//!
+//! §VI of the paper stores the table as a local hash table keyed by peer
+//! ID (~6 bytes/peer). We keep a sorted `Vec<Id>` (cache-friendly binary
+//! search for successor queries — the data-path hot spot) plus the same
+//! lookup-by-id capability; memory is 8 B/peer at our 64-bit ring width.
+//!
+//! The table deliberately tolerates *stale* entries: peers learn of events
+//! asynchronously via EDRA, so `successor()` may return a peer that
+//! already left — exactly the paper's *routing failure*, which the caller
+//! detects (probe/timeout) and retries. `Table` exposes the primitives the
+//! peers use to apply events and measure staleness.
+
+use crate::id::ring::Id;
+use crate::proto::messages::{Event, EventKind};
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    ids: Vec<Id>, // sorted, deduped
+}
+
+impl Table {
+    pub fn new() -> Self {
+        Table { ids: Vec::new() }
+    }
+
+    pub fn from_ids(mut ids: Vec<Id>) -> Self {
+        ids.sort_unstable();
+        ids.dedup();
+        Table { ids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+    pub fn ids(&self) -> &[Id] {
+        &self.ids
+    }
+    pub fn contains(&self, id: Id) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    /// Insert a peer (idempotent). Returns true if it was new.
+    pub fn insert(&mut self, id: Id) -> bool {
+        match self.ids.binary_search(&id) {
+            Ok(_) => false,
+            Err(pos) => {
+                self.ids.insert(pos, id);
+                true
+            }
+        }
+    }
+
+    /// Remove a peer. Returns true if it was present.
+    pub fn remove(&mut self, id: Id) -> bool {
+        match self.ids.binary_search(&id) {
+            Ok(pos) => {
+                self.ids.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Apply a membership event (the routing-table maintenance step).
+    /// Returns true if the table changed (false = the event was stale).
+    pub fn apply(&mut self, ev: &Event) -> bool {
+        match ev.kind {
+            EventKind::Join => self.insert(ev.peer),
+            EventKind::Leave => self.remove(ev.peer),
+        }
+    }
+
+    /// Successor of `k` on the ring: first entry clockwise from `k`
+    /// (inclusive). THE data-path operation.
+    #[inline]
+    pub fn successor(&self, k: Id) -> Option<Id> {
+        if self.ids.is_empty() {
+            return None;
+        }
+        match self.ids.binary_search(&k) {
+            Ok(i) => Some(self.ids[i]),
+            Err(i) if i == self.ids.len() => Some(self.ids[0]),
+            Err(i) => Some(self.ids[i]),
+        }
+    }
+
+    /// The i-th successor of a *member* peer.
+    pub fn succ(&self, p: Id, i: usize) -> Option<Id> {
+        let pos = self.ids.binary_search(&p).ok()?;
+        Some(self.ids[(pos + i) % self.ids.len()])
+    }
+
+    /// The i-th predecessor of a *member* peer.
+    pub fn pred(&self, p: Id, i: usize) -> Option<Id> {
+        let pos = self.ids.binary_search(&p).ok()?;
+        let n = self.ids.len();
+        Some(self.ids[(pos + n - (i % n)) % n])
+    }
+
+    /// Successor/predecessor of an arbitrary point, excluding the point
+    /// itself — what a peer uses to find *its own* neighbors.
+    pub fn successor_excl(&self, k: Id) -> Option<Id> {
+        if self.ids.is_empty() {
+            return None;
+        }
+        match self.ids.binary_search(&k) {
+            Ok(i) => Some(self.ids[(i + 1) % self.ids.len()]),
+            Err(i) if i == self.ids.len() => Some(self.ids[0]),
+            Err(i) => Some(self.ids[i]),
+        }
+    }
+
+    pub fn predecessor_excl(&self, k: Id) -> Option<Id> {
+        if self.ids.is_empty() {
+            return None;
+        }
+        match self.ids.binary_search(&k) {
+            Ok(i) | Err(i) => {
+                let n = self.ids.len();
+                Some(self.ids[(i + n - 1) % n])
+            }
+        }
+    }
+
+    /// Fraction of entries in `self` that differ from ground truth
+    /// (stale leaves still present + missed joins). Metric behind the
+    /// paper's `f` bound (§IV-D).
+    pub fn staleness_vs(&self, truth: &Table) -> f64 {
+        if truth.ids.is_empty() && self.ids.is_empty() {
+            return 0.0;
+        }
+        let mut stale = 0usize;
+        // entries we have that truth lacks
+        for id in &self.ids {
+            if !truth.contains(*id) {
+                stale += 1;
+            }
+        }
+        // entries truth has that we lack
+        for id in &truth.ids {
+            if !self.contains(*id) {
+                stale += 1;
+            }
+        }
+        stale as f64 / truth.ids.len().max(1) as f64
+    }
+
+    /// Estimated memory footprint in bytes (paper §VI reports ~6n).
+    pub fn memory_bytes(&self) -> usize {
+        self.ids.len() * std::mem::size_of::<Id>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ids: &[u64]) -> Table {
+        Table::from_ids(ids.iter().map(|&x| Id(x)).collect())
+    }
+
+    #[test]
+    fn insert_remove_sorted() {
+        let mut tb = Table::new();
+        assert!(tb.insert(Id(5)));
+        assert!(tb.insert(Id(1)));
+        assert!(tb.insert(Id(9)));
+        assert!(!tb.insert(Id(5)), "duplicate insert is a no-op");
+        assert_eq!(tb.ids(), &[Id(1), Id(5), Id(9)]);
+        assert!(tb.remove(Id(5)));
+        assert!(!tb.remove(Id(5)));
+        assert_eq!(tb.len(), 2);
+    }
+
+    #[test]
+    fn apply_events() {
+        let mut tb = t(&[10]);
+        assert!(tb.apply(&Event::join(Id(20))));
+        assert!(!tb.apply(&Event::join(Id(20))), "stale join detected");
+        assert!(tb.apply(&Event::leave(Id(10))));
+        assert!(!tb.apply(&Event::leave(Id(10))));
+        assert_eq!(tb.ids(), &[Id(20)]);
+    }
+
+    #[test]
+    fn successor_wraps() {
+        let tb = t(&[10, 20, 30]);
+        assert_eq!(tb.successor(Id(15)), Some(Id(20)));
+        assert_eq!(tb.successor(Id(20)), Some(Id(20)));
+        assert_eq!(tb.successor(Id(31)), Some(Id(10)));
+        assert_eq!(Table::new().successor(Id(0)), None);
+    }
+
+    #[test]
+    fn excl_neighbors() {
+        let tb = t(&[10, 20, 30]);
+        assert_eq!(tb.successor_excl(Id(10)), Some(Id(20)));
+        assert_eq!(tb.successor_excl(Id(30)), Some(Id(10)));
+        assert_eq!(tb.predecessor_excl(Id(10)), Some(Id(30)));
+        assert_eq!(tb.predecessor_excl(Id(25)), Some(Id(20)));
+        assert_eq!(tb.predecessor_excl(Id(20)), Some(Id(10)));
+    }
+
+    #[test]
+    fn succ_pred_roundtrip() {
+        let tb = t(&[3, 7, 11, 100, 5000]);
+        for &p in tb.ids() {
+            for i in 0..8 {
+                let s = tb.succ(p, i).unwrap();
+                assert_eq!(tb.pred(s, i), Some(p));
+            }
+        }
+        assert_eq!(tb.succ(Id(4), 1), None, "non-member");
+    }
+
+    #[test]
+    fn staleness_metric() {
+        let truth = t(&[1, 2, 3, 4]);
+        assert_eq!(t(&[1, 2, 3, 4]).staleness_vs(&truth), 0.0);
+        // one stale leave (5 present but gone) + one missed join (4)
+        let mine = t(&[1, 2, 3, 5]);
+        assert!((mine.staleness_vs(&truth) - 0.5).abs() < 1e-12);
+        assert_eq!(Table::new().staleness_vs(&Table::new()), 0.0);
+    }
+
+    #[test]
+    fn memory_matches_paper_scale() {
+        // paper: ~6 MB for 1M peers at 6 B/entry; we are 8 B/entry
+        let tb = Table::from_ids((0..10_000).map(Id).collect());
+        assert_eq!(tb.memory_bytes(), 80_000);
+    }
+}

@@ -1,0 +1,104 @@
+//! The Fig. 7 analytical sweep executed through the AOT artifact.
+//!
+//! `analytics.hlo.txt` evaluates the D1HT (Eqs. III.1/IV.2/IV.5–IV.7)
+//! and 1h-Calot (Eq. VII.1) per-peer bandwidth models vectorized over a
+//! 64-cell (n, S_avg) grid — the L2 JAX graph of
+//! `python/compile/model.py::maintenance_grid`. The native
+//! `analysis::{d1ht,calot}` implementations cross-check it (f32 vs f64).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::pjrt::Compiled;
+
+pub const GRID: usize = 64; // must match model.GRID
+
+pub struct AnalyticsGrid {
+    exe: Compiled,
+}
+
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    pub n: Vec<f64>,
+    pub savg_secs: Vec<f64>,
+    pub d1ht_bps: Vec<f64>,
+    pub calot_bps: Vec<f64>,
+}
+
+impl AnalyticsGrid {
+    pub fn load() -> Result<Self> {
+        let path = crate::runtime::artifacts_dir().join("analytics.hlo.txt");
+        Ok(AnalyticsGrid { exe: Compiled::load(&path)? })
+    }
+
+    /// Evaluate up to GRID (n, savg) points in one artifact execution.
+    pub fn eval(&self, points: &[(f64, f64)]) -> Result<GridResult> {
+        if points.len() > GRID {
+            bail!("grid {} exceeds {GRID}", points.len());
+        }
+        let mut n = vec![0.0f32; GRID];
+        let mut s = vec![1.0f32; GRID];
+        for (i, &(ni, si)) in points.iter().enumerate() {
+            n[i] = ni as f32;
+            s[i] = si as f32;
+        }
+        let out = self.exe.run(&[xla::Literal::vec1(&n[..]), xla::Literal::vec1(&s[..])])?;
+        let d = out[0].to_vec::<f32>()?;
+        let c = out[1].to_vec::<f32>()?;
+        Ok(GridResult {
+            n: points.iter().map(|p| p.0).collect(),
+            savg_secs: points.iter().map(|p| p.1).collect(),
+            d1ht_bps: d[..points.len()].iter().map(|&x| x as f64).collect(),
+            calot_bps: c[..points.len()].iter().map(|&x| x as f64).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{calot::CalotModel, d1ht::D1htModel, Dynamics};
+
+    #[test]
+    fn artifact_matches_native_models() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let grid = AnalyticsGrid::load().expect("load analytics artifact");
+        let mut points = Vec::new();
+        for exp in [4, 5, 6, 7] {
+            for d in [Dynamics::Fast, Dynamics::Kad, Dynamics::Gnutella, Dynamics::BitTorrent]
+            {
+                points.push((10f64.powi(exp), d.savg_secs()));
+            }
+        }
+        let res = grid.eval(&points).expect("eval");
+        let dm = D1htModel::default();
+        for i in 0..points.len() {
+            let (n, s) = points[i];
+            let want_d = dm.bandwidth_bps(n, s);
+            let want_c = CalotModel.bandwidth_bps(n, s);
+            let got_d = res.d1ht_bps[i];
+            let got_c = res.calot_bps[i];
+            assert!(
+                (got_d - want_d).abs() / want_d < 0.02,
+                "d1ht n={n} s={s}: artifact {got_d} native {want_d}"
+            );
+            assert!(
+                (got_c - want_c).abs() / want_c < 0.02,
+                "calot n={n} s={s}: artifact {got_c} native {want_c}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_grid_rejected() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let grid = AnalyticsGrid::load().expect("load");
+        let pts = vec![(1e6, 1e4); GRID + 1];
+        assert!(grid.eval(&pts).is_err());
+    }
+}

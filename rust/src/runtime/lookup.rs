@@ -1,0 +1,183 @@
+//! The batched lookup path over the AOT artifact.
+//!
+//! `ring_lookup.hlo.txt` implements the L2 graph
+//! `lookup_resolve(table u32[8192], keys u64[1024]) -> i32[1024]`:
+//! SplitMix64-hash the keys onto the u32 ring, then Pallas
+//! binary-search the padded routing-table snapshot (lower-bound / ring
+//! successor semantics).
+//!
+//! This module snapshots a [`Table`] into the kernel layout, pads key
+//! batches, executes, and maps indices back to peer [`Id`]s. A pure-rust
+//! `resolve_native` implements the identical semantics for
+//! cross-checking and for the XLA-vs-native ablation bench.
+
+use anyhow::{bail, Result};
+
+use crate::id::{space, Id};
+use crate::routing::Table;
+use crate::runtime::pjrt::Compiled;
+
+pub const TABLE_SIZE: usize = 8192; // must match kernels/ring_search.py
+pub const BATCH: usize = 1024;
+pub const PAD: u32 = u32::MAX;
+
+/// A routing-table snapshot in kernel layout: sorted u32 projections of
+/// the (up to TABLE_SIZE) peer ids, PAD-filled tail, plus the id map.
+pub struct Snapshot {
+    pub ring32: Vec<u32>,
+    /// ids[i] corresponds to ring32[i] for i < live.
+    pub ids: Vec<Id>,
+    pub live: usize,
+}
+
+impl Snapshot {
+    /// Project a table. Tables larger than TABLE_SIZE cannot be
+    /// snapshotted into this artifact shape (callers shard instead).
+    pub fn capture(table: &Table) -> Result<Snapshot> {
+        let n = table.len();
+        if n > TABLE_SIZE {
+            bail!("table ({n}) exceeds artifact capacity {TABLE_SIZE}");
+        }
+        let ids: Vec<Id> = table.ids().to_vec();
+        let mut ring32 = vec![PAD; TABLE_SIZE];
+        for (i, id) in ids.iter().enumerate() {
+            // order-preserving projection (verified in id::space tests);
+            // clamp below PAD so live entries never collide with padding
+            ring32[i] = space::id_to_ring32(*id).min(PAD - 1);
+        }
+        Ok(Snapshot { ring32, ids, live: n })
+    }
+
+    /// Map a kernel successor index back to a peer id (wrap past the
+    /// live region = ring wrap to slot 0).
+    #[inline]
+    pub fn id_at(&self, idx: usize) -> Option<Id> {
+        if self.live == 0 {
+            return None;
+        }
+        Some(self.ids[if idx >= self.live { 0 } else { idx }])
+    }
+}
+
+/// The compiled batched-lookup executable.
+pub struct BatchLookup {
+    exe: Compiled,
+}
+
+impl BatchLookup {
+    pub fn load() -> Result<Self> {
+        let path = crate::runtime::artifacts_dir().join("ring_lookup.hlo.txt");
+        Ok(BatchLookup { exe: Compiled::load(&path)? })
+    }
+
+    /// Resolve up to BATCH keys against a snapshot via the XLA artifact.
+    /// Returns the owner id per key.
+    pub fn resolve(&self, snap: &Snapshot, keys: &[u64]) -> Result<Vec<Id>> {
+        if keys.len() > BATCH {
+            bail!("batch {} exceeds {BATCH}", keys.len());
+        }
+        let mut padded = vec![0u64; BATCH];
+        padded[..keys.len()].copy_from_slice(keys);
+        let t = xla::Literal::vec1(&snap.ring32[..]);
+        let k = xla::Literal::vec1(&padded[..]);
+        let out = self.exe.run(&[t, k])?;
+        let idx = out[0].to_vec::<i32>()?;
+        Ok(idx[..keys.len()]
+            .iter()
+            .filter_map(|&i| snap.id_at(i as usize))
+            .collect())
+    }
+}
+
+/// The same semantics in pure rust (oracle + ablation baseline): hash
+/// each key with SplitMix64, lower-bound search the u32 ring, wrap.
+pub fn resolve_native(snap: &Snapshot, keys: &[u64]) -> Vec<Id> {
+    keys.iter()
+        .filter_map(|&key| {
+            let q = space::key_to_ring32(key);
+            let live = &snap.ring32[..snap.live];
+            let idx = live.partition_point(|&v| v < q);
+            snap.id_at(idx)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn table(n: usize) -> Table {
+        let mut rng = Rng::new(42);
+        Table::from_ids((0..n).map(|_| Id(rng.next_u64())).collect())
+    }
+
+    #[test]
+    fn snapshot_layout() {
+        let t = table(100);
+        let s = Snapshot::capture(&t).unwrap();
+        assert_eq!(s.live, 100);
+        assert!(s.ring32[..100].windows(2).all(|w| w[0] <= w[1]), "sorted");
+        assert!(s.ring32[100..].iter().all(|&v| v == PAD));
+        assert!(Snapshot::capture(&table(TABLE_SIZE + 1)).is_err());
+    }
+
+    #[test]
+    fn native_resolution_matches_table_semantics() {
+        // the u32 projection coarsens ties but must agree with the
+        // 64-bit table successor for the projected ring
+        let t = table(500);
+        let s = Snapshot::capture(&t).unwrap();
+        let mut rng = Rng::new(7);
+        let keys: Vec<u64> = (0..256).map(|_| rng.next_u64()).collect();
+        let owners = resolve_native(&s, &keys);
+        assert_eq!(owners.len(), keys.len());
+        for (key, owner) in keys.iter().zip(&owners) {
+            let q = space::key_to_ring32(*key);
+            let o32 = space::id_to_ring32(*owner).min(PAD - 1);
+            // owner's projection is the first >= q (or the wrap minimum)
+            if o32 >= q {
+                // no live entry in (q, o32) strictly below o32
+                assert!(s.ring32[..s.live]
+                    .iter()
+                    .all(|&v| !(v >= q && v < o32)));
+            } else {
+                // wrapped: no live entry >= q at all
+                assert!(s.ring32[..s.live].iter().all(|&v| v < q));
+            }
+        }
+    }
+
+    #[test]
+    fn xla_artifact_matches_native() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let exe = BatchLookup::load().expect("load artifact");
+        let mut rng = Rng::new(3);
+        for n in [1usize, 10, 500, 4000, TABLE_SIZE] {
+            let t = table(n);
+            let s = Snapshot::capture(&t).unwrap();
+            let keys: Vec<u64> = (0..BATCH).map(|_| rng.next_u64()).collect();
+            let got = exe.resolve(&s, &keys).expect("resolve");
+            let want = resolve_native(&s, &keys);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn xla_partial_batch() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let exe = BatchLookup::load().expect("load");
+        let t = table(64);
+        let s = Snapshot::capture(&t).unwrap();
+        let keys = vec![1u64, 2, 3];
+        let got = exe.resolve(&s, &keys).expect("resolve");
+        assert_eq!(got, resolve_native(&s, &keys));
+        assert!(exe.resolve(&s, &vec![0; BATCH + 1]).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from the rust request path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this
+//! module is the only consumer of its output. HLO **text** is the
+//! interchange format — jax ≥ 0.5 serialized protos use 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns them (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod analytics;
+pub mod lookup;
+pub mod pjrt;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$D1HT_ARTIFACTS`, else `./artifacts`,
+/// else next to the crate root (tests may run from elsewhere).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("D1HT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = Path::new("artifacts");
+    if cwd.exists() {
+        return cwd.to_path_buf();
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if `make artifacts` has produced the AOT outputs (tests that
+/// need them are skipped otherwise, with a loud message).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("ring_lookup.hlo.txt").exists()
+        && artifacts_dir().join("analytics.hlo.txt").exists()
+}

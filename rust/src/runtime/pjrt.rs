@@ -1,0 +1,60 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled executable bound to a PJRT client.
+pub struct Compiled {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    /// Load an HLO-text artifact and compile it on the CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(Compiled { client, exe })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with literal inputs; returns the elements of the result
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(inputs).context("PJRT execute")?;
+        let mut lit = out[0][0].to_literal_sync().context("fetch result")?;
+        lit.decompose_tuple().context("decompose result tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    #[test]
+    fn loads_and_runs_ring_lookup_artifact() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let c = Compiled::load(&artifacts_dir().join("ring_lookup.hlo.txt")).expect("load");
+        assert_eq!(c.platform().to_lowercase(), "cpu");
+        // empty table (all PAD) + zero keys -> all indices land on 0
+        let table = xla::Literal::vec1(&vec![u32::MAX; 8192][..]);
+        let keys = xla::Literal::vec1(&vec![0u64; 1024][..]);
+        let out = c.run(&[table, keys]).expect("run");
+        assert_eq!(out.len(), 1);
+        let idx = out[0].to_vec::<i32>().expect("i32 vec");
+        assert_eq!(idx.len(), 1024);
+        assert!(idx.iter().all(|&i| i == 0));
+    }
+}

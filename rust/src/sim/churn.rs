@@ -1,0 +1,138 @@
+//! Churn process (§VII-A methodology).
+//!
+//! Sessions are exponential with mean `S_avg`, giving the Eq. III.1 event
+//! rate `r = 2n/S_avg` at steady state. Half of the leaves are *failures*
+//! (the paper's SIGKILL: no flush of buffered events, no notification);
+//! the other half are graceful. A leaving peer rejoins after 3 minutes —
+//! by default with the same ID (the paper's setup), optionally with a new
+//! one (the §VII-C ablation).
+//!
+//! For the Quarantine studies the sampler can also produce heavy-tailed
+//! sessions with a pinned short-session fraction (the measured 24%/31%
+//! of sessions under 10 min).
+
+use crate::util::rng::Rng;
+
+pub const REJOIN_DELAY_SECS: f64 = 180.0;
+pub const FAILURE_FRACTION: f64 = 0.5;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LeaveStyle {
+    /// SIGKILL: no event flush, no notification — detected by Rule 5.
+    Failure,
+    /// Graceful: the peer notifies its successor on the way out.
+    Graceful,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnCfg {
+    /// Average session length (seconds); None disables churn.
+    pub savg_secs: Option<f64>,
+    /// Rejoin with the same ID (paper default) or a fresh one (ablation).
+    pub reuse_ids: bool,
+    /// Heavy-tail mix: fraction of sessions drawn from a short-session
+    /// mode (< T_q); None = plain exponential.
+    pub short_fraction: Option<f64>,
+}
+
+impl ChurnCfg {
+    pub fn none() -> Self {
+        ChurnCfg { savg_secs: None, reuse_ids: true, short_fraction: None }
+    }
+    pub fn exponential(savg_secs: f64) -> Self {
+        ChurnCfg { savg_secs: Some(savg_secs), reuse_ids: true, short_fraction: None }
+    }
+    pub fn heavy_tailed(savg_secs: f64, short_fraction: f64) -> Self {
+        ChurnCfg { savg_secs: Some(savg_secs), reuse_ids: true, short_fraction: Some(short_fraction) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.savg_secs.is_some()
+    }
+
+    /// Sample one session length.
+    ///
+    /// Plain mode: Exp(S_avg). Heavy-tailed mode: with probability
+    /// `short_fraction` the session is uniform in (0, 10 min) — the mass
+    /// Quarantine filters — otherwise exponential with a mean adjusted so
+    /// the *overall* average stays `S_avg` (heavy tail: long sessions get
+    /// longer, as the cited measurement studies observe).
+    pub fn sample_session(&self, rng: &mut Rng) -> f64 {
+        let savg = self.savg_secs.expect("churn disabled");
+        match self.short_fraction {
+            None => rng.exp(savg),
+            Some(p) => {
+                const TQ: f64 = 600.0;
+                if rng.chance(p) {
+                    rng.next_f64() * TQ
+                } else {
+                    // E[total] = p·TQ/2 + (1-p)·mean_long = savg
+                    let mean_long = (savg - p * TQ / 2.0) / (1.0 - p);
+                    rng.exp(mean_long.max(TQ))
+                }
+            }
+        }
+    }
+
+    pub fn sample_leave_style(&self, rng: &mut Rng) -> LeaveStyle {
+        if rng.chance(FAILURE_FRACTION) {
+            LeaveStyle::Failure
+        } else {
+            LeaveStyle::Graceful
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_sessions_match_savg() {
+        let cfg = ChurnCfg::exponential(174.0 * 60.0);
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let mean = (0..n).map(|_| cfg.sample_session(&mut rng)).sum::<f64>() / n as f64;
+        let want = 174.0 * 60.0;
+        assert!((mean - want).abs() / want < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn heavy_tail_pins_short_fraction_and_mean() {
+        let savg = 169.0 * 60.0; // KAD
+        let cfg = ChurnCfg::heavy_tailed(savg, 0.24);
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let mut short = 0u32;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let s = cfg.sample_session(&mut rng);
+            if s < 600.0 {
+                short += 1;
+            }
+            sum += s;
+        }
+        let frac = short as f64 / n as f64;
+        // exponential long mode also produces a few <10min sessions
+        assert!((0.24..0.32).contains(&frac), "short fraction {frac}");
+        let mean = sum / n as f64;
+        assert!((mean - savg).abs() / savg < 0.03, "mean {mean} want {savg}");
+    }
+
+    #[test]
+    fn leave_styles_half_failures() {
+        let cfg = ChurnCfg::exponential(1000.0);
+        let mut rng = Rng::new(3);
+        let fails = (0..100_000)
+            .filter(|_| cfg.sample_leave_style(&mut rng) == LeaveStyle::Failure)
+            .count();
+        let frac = fails as f64 / 100_000.0;
+        assert!((frac - 0.5).abs() < 0.01, "failure fraction {frac}");
+    }
+
+    #[test]
+    fn disabled_churn() {
+        assert!(!ChurnCfg::none().enabled());
+        assert!(ChurnCfg::exponential(60.0).enabled());
+    }
+}

@@ -1,0 +1,101 @@
+//! Table I: the five Petrobras seismic-processing clusters used in the
+//! paper's HPC experiments. Reproduced as node profiles so the Table-I
+//! experiment driver and the latency harness can place peers the way the
+//! paper did (Cluster A for the dedicated latency runs; Cluster B/F for
+//! the Dserver host).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cluster {
+    pub name: &'static str,
+    pub nodes: u32,
+    pub cpu: &'static str,
+    pub os: &'static str,
+    /// Cores per node (each node has two CPUs — Table I caption).
+    pub cores: u32,
+    /// Relative single-core speed (Cluster A = 1.0); used by the Dserver
+    /// service-time model when it moves from Cluster B to Cluster F.
+    pub speed: f64,
+}
+
+pub const CLUSTERS: [Cluster; 5] = [
+    Cluster {
+        name: "A",
+        nodes: 731,
+        cpu: "Intel Xeon 3.06GHz single core",
+        os: "Linux 2.6",
+        cores: 2,
+        speed: 1.0,
+    },
+    Cluster {
+        name: "B",
+        nodes: 924,
+        cpu: "AMD Opteron 270 dual core",
+        os: "Linux 2.6",
+        cores: 4,
+        speed: 1.1,
+    },
+    Cluster {
+        name: "C",
+        nodes: 128,
+        cpu: "AMD Opteron 244 dual core",
+        os: "Linux 2.6",
+        cores: 4,
+        speed: 1.0,
+    },
+    Cluster {
+        name: "D",
+        nodes: 99,
+        cpu: "AMD Opteron 250 dual core",
+        os: "Linux 2.6",
+        cores: 4,
+        speed: 1.05,
+    },
+    Cluster {
+        name: "F",
+        nodes: 509,
+        cpu: "Intel Xeon E5470 quad core",
+        os: "Linux 2.6",
+        cores: 8,
+        // Single-core speedup over Cluster B, calibrated so the Dserver
+        // M/G/1 model reproduces the Fig. 5a series (lags at 3,200
+        // peers, collapses at 4,000) — see dht::dserver.
+        speed: 2.35,
+    },
+];
+
+pub fn by_name(name: &str) -> Option<&'static Cluster> {
+    CLUSTERS.iter().find(|c| c.name == name)
+}
+
+/// Total nodes across the subset (the paper's testbed scale datum).
+pub fn total_nodes() -> u32 {
+    CLUSTERS.iter().map(|c| c.nodes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_inventory() {
+        assert_eq!(CLUSTERS.len(), 5);
+        assert_eq!(by_name("A").unwrap().nodes, 731);
+        assert_eq!(by_name("B").unwrap().nodes, 924);
+        assert_eq!(by_name("C").unwrap().nodes, 128);
+        assert_eq!(by_name("D").unwrap().nodes, 99);
+        assert_eq!(by_name("F").unwrap().nodes, 509);
+        assert!(by_name("Z").is_none());
+    }
+
+    #[test]
+    fn scale_supports_2000_physical_nodes() {
+        // §VII: "up to 4,000 peers and 2,000 physical nodes"
+        assert!(total_nodes() >= 2000, "total {}", total_nodes());
+    }
+
+    #[test]
+    fn cluster_f_fastest() {
+        let f = by_name("F").unwrap();
+        assert!(CLUSTERS.iter().all(|c| c.speed <= f.speed));
+    }
+}

@@ -1,0 +1,237 @@
+//! The paper's two-phase experimental methodology (§VII-A), generic over
+//! the simulated systems.
+//!
+//! Phase 1 (*growth*): the system starts with eight peers and one peer
+//! joins per second until the target size — "a steep growth rate ... which
+//! should stress the joining protocols". Phase 2 (*measurement*): 30
+//! minutes with every peer performing random lookups, churned per
+//! Eq. III.1. Each experiment runs under three seeds and reports averages.
+//!
+//! For CI-speed runs the harness exposes `growth: Phase::Bootstrap`
+//! (skip to steady state) and a shorter window; the benches use the
+//! paper-faithful settings.
+
+use crate::dht::calot::{CalotCfg, CalotSim};
+use crate::dht::d1ht::{D1htCfg, D1htSim};
+use crate::sim::churn::ChurnCfg;
+use crate::sim::cpu::CpuModel;
+use crate::sim::engine::{run_until, Queue};
+use crate::sim::metrics::Metrics;
+use crate::sim::network::NetModel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Paper-faithful: 8 peers + 1 join/sec until target.
+    Growth,
+    /// Fast: start at steady state (tests, smoke runs).
+    Bootstrap,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentCfg {
+    pub target_n: usize,
+    pub churn: ChurnCfg,
+    pub net: NetModel,
+    pub cpu: CpuModel,
+    pub lookup_rate: f64,
+    pub growth: Phase,
+    /// Settling time between growth and measurement (Θ tuning warm-up).
+    pub settle_secs: f64,
+    pub measure_secs: f64,
+    pub seeds: Vec<u64>,
+    pub quarantine_tq: Option<f64>,
+    pub f: f64,
+}
+
+impl Default for ExperimentCfg {
+    fn default() -> Self {
+        ExperimentCfg {
+            target_n: 1000,
+            churn: ChurnCfg::exponential(174.0 * 60.0),
+            net: NetModel::Hpc,
+            cpu: CpuModel::idle(1),
+            lookup_rate: 1.0,
+            growth: Phase::Growth,
+            settle_secs: 120.0,
+            measure_secs: 1800.0,
+            seeds: vec![1, 2, 3],
+            quarantine_tq: None,
+            f: crate::DEFAULT_F,
+        }
+    }
+}
+
+/// Averaged outcome of one experiment cell.
+#[derive(Debug, Clone, Default)]
+pub struct RunResult {
+    pub system: String,
+    pub n: usize,
+    /// Mean per-peer outgoing maintenance bandwidth (bps).
+    pub per_peer_bps: f64,
+    /// Sum over all peers (what Figs. 3–4 plot), bps.
+    pub aggregate_bps: f64,
+    pub one_hop_ratio: f64,
+    pub lookups: u64,
+    pub latency_p50_ms: f64,
+    pub latency_avg_ms: f64,
+    pub seeds: usize,
+}
+
+fn accumulate(res: &mut RunResult, m: &Metrics, n: usize, per_peer: f64) {
+    res.n = n;
+    res.per_peer_bps += per_peer;
+    res.aggregate_bps += per_peer * n as f64;
+    res.one_hop_ratio += m.one_hop_ratio();
+    res.lookups += m.lookups_total();
+    res.latency_p50_ms += m.lookup_latency.quantile_ns(0.5) as f64 / 1e6;
+    res.latency_avg_ms += m.lookup_latency.mean_ns() / 1e6;
+    res.seeds += 1;
+}
+
+fn finish(mut res: RunResult) -> RunResult {
+    let s = res.seeds.max(1) as f64;
+    res.per_peer_bps /= s;
+    res.aggregate_bps /= s;
+    res.one_hop_ratio /= s;
+    res.latency_p50_ms /= s;
+    res.latency_avg_ms /= s;
+    res
+}
+
+/// Run D1HT through both phases for every seed; returns seed averages.
+pub fn run_d1ht(cfg: &ExperimentCfg) -> RunResult {
+    let mut res = RunResult { system: "D1HT".into(), ..Default::default() };
+    for &seed in &cfg.seeds {
+        let d1 = D1htCfg {
+            f: cfg.f,
+            net: cfg.net,
+            cpu: cfg.cpu,
+            churn: cfg.churn,
+            quarantine_tq: cfg.quarantine_tq,
+            lookup_rate: cfg.lookup_rate,
+            seed,
+        };
+        let mut sim = D1htSim::new(d1);
+        let mut q = Queue::new();
+        match cfg.growth {
+            Phase::Growth => {
+                sim.start_growth(cfg.target_n, &mut q);
+                run_until(&mut sim, &mut q, cfg.target_n as f64 + cfg.settle_secs);
+            }
+            Phase::Bootstrap => {
+                sim.bootstrap(cfg.target_n, &mut q);
+                run_until(&mut sim, &mut q, cfg.settle_secs);
+            }
+        }
+        let t0 = q.now();
+        sim.begin_recording(t0);
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, t0 + cfg.measure_secs);
+        sim.end_recording(q.now());
+        let n = sim.size();
+        accumulate(&mut res, &sim.metrics(), n, sim.per_peer_maintenance_bps());
+    }
+    finish(res)
+}
+
+/// Run 1h-Calot through the identical protocol.
+pub fn run_calot(cfg: &ExperimentCfg) -> RunResult {
+    let mut res = RunResult { system: "1h-Calot".into(), ..Default::default() };
+    for &seed in &cfg.seeds {
+        let c = CalotCfg {
+            net: cfg.net,
+            cpu: cfg.cpu,
+            churn: cfg.churn,
+            lookup_rate: cfg.lookup_rate,
+            seed,
+        };
+        let mut sim = CalotSim::new(c);
+        let mut q = Queue::new();
+        match cfg.growth {
+            Phase::Growth => {
+                sim.start_growth(cfg.target_n, &mut q);
+                run_until(&mut sim, &mut q, cfg.target_n as f64 + cfg.settle_secs);
+            }
+            Phase::Bootstrap => {
+                sim.bootstrap(cfg.target_n, &mut q);
+                run_until(&mut sim, &mut q, cfg.settle_secs);
+            }
+        }
+        let t0 = q.now();
+        sim.begin_recording(t0);
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, t0 + cfg.measure_secs);
+        sim.end_recording(q.now());
+        let n = sim.size();
+        accumulate(&mut res, &sim.metrics(), n, sim.per_peer_maintenance_bps());
+    }
+    finish(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(n: usize) -> ExperimentCfg {
+        ExperimentCfg {
+            target_n: n,
+            growth: Phase::Bootstrap,
+            settle_secs: 60.0,
+            measure_secs: 300.0,
+            seeds: vec![1],
+            lookup_rate: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn d1ht_experiment_produces_sane_numbers() {
+        let r = run_d1ht(&quick_cfg(128));
+        assert_eq!(r.seeds, 1);
+        assert!(r.n > 100, "population {}", r.n);
+        assert!(r.lookups > 10_000, "lookups {}", r.lookups);
+        assert!(r.one_hop_ratio > 0.98, "ratio {}", r.one_hop_ratio);
+        assert!(r.per_peer_bps > 0.0);
+        assert!((0.05..1.0).contains(&r.latency_p50_ms), "{} ms", r.latency_p50_ms);
+    }
+
+    #[test]
+    fn both_systems_track_analytics_at_small_scale() {
+        // At 128 peers both systems sit near the keep-alive floor; just
+        // check each lands within 3x of its closed-form prediction.
+        // (The Calot-vs-D1HT ordering flips at ~2K peers — see Fig. 3 —
+        // and is asserted at scale in dht::calot tests + the benches.)
+        let cfg = quick_cfg(128);
+        let d = run_d1ht(&cfg);
+        let c = run_calot(&cfg);
+        let savg = 174.0 * 60.0;
+        let da = crate::analysis::d1ht::D1htModel::default().bandwidth_bps(d.n as f64, savg);
+        let ca = crate::analysis::calot::CalotModel.bandwidth_bps(c.n as f64, savg);
+        assert!(d.per_peer_bps > da / 3.0 && d.per_peer_bps < da * 3.0,
+            "d1ht sim {} vs model {da}", d.per_peer_bps);
+        assert!(c.per_peer_bps > ca / 3.0 && c.per_peer_bps < ca * 3.0,
+            "calot sim {} vs model {ca}", c.per_peer_bps);
+    }
+
+    #[test]
+    fn growth_phase_reaches_target() {
+        let mut cfg = quick_cfg(64);
+        cfg.growth = Phase::Growth;
+        cfg.measure_secs = 120.0;
+        let r = run_d1ht(&cfg);
+        assert!(
+            (50..=80).contains(&r.n),
+            "population after growth+churn: {}",
+            r.n
+        );
+    }
+
+    #[test]
+    fn seed_averaging() {
+        let mut cfg = quick_cfg(64);
+        cfg.seeds = vec![1, 2];
+        cfg.measure_secs = 120.0;
+        let r = run_d1ht(&cfg);
+        assert_eq!(r.seeds, 2);
+    }
+}

@@ -1,0 +1,97 @@
+//! Measurement sinks: maintenance-traffic accounting at Figure-2 wire
+//! sizes, lookup outcome tallies (the ≥99% one-hop target), lookup
+//! latency histograms, and routing-table staleness samples.
+
+use crate::util::stats::{LatencyHist, Running, Traffic};
+
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Maintenance traffic only (§VII-A: lookups and table transfers are
+    /// excluded from the bandwidth figures).
+    pub maintenance: Traffic,
+    /// All traffic including lookups/transfers (reported separately).
+    pub total: Traffic,
+    pub lookups_one_hop: u64,
+    pub lookups_retried: u64,
+    pub lookups_failed: u64,
+    pub lookup_latency: LatencyHist,
+    pub staleness: Running,
+    /// Window the maintenance counters cover (set by the harness).
+    pub window_secs: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn lookups_total(&self) -> u64 {
+        self.lookups_one_hop + self.lookups_retried + self.lookups_failed
+    }
+
+    /// Fraction of lookups solved with a single hop — the paper's headline
+    /// `1 - f` metric (must exceed 99%).
+    pub fn one_hop_ratio(&self) -> f64 {
+        let t = self.lookups_total();
+        if t == 0 {
+            1.0
+        } else {
+            self.lookups_one_hop as f64 / t as f64
+        }
+    }
+
+    /// Aggregate outgoing maintenance bandwidth over the window (bps) —
+    /// what Figs. 3/4 plot ("sum of the outgoing maintenance bandwidth
+    /// requirements of all peers").
+    pub fn maintenance_bps_out(&self) -> f64 {
+        self.maintenance.bps_out(self.window_secs)
+    }
+
+    pub fn merge(&mut self, o: &Metrics) {
+        self.maintenance.merge(&o.maintenance);
+        self.total.merge(&o.total);
+        self.lookups_one_hop += o.lookups_one_hop;
+        self.lookups_retried += o.lookups_retried;
+        self.lookups_failed += o.lookups_failed;
+        self.lookup_latency.merge(&o.lookup_latency);
+        self.staleness.merge(&o.staleness);
+        self.window_secs = self.window_secs.max(o.window_secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hop_ratio() {
+        let mut m = Metrics::new();
+        m.lookups_one_hop = 990;
+        m.lookups_retried = 10;
+        assert!((m.one_hop_ratio() - 0.99).abs() < 1e-12);
+        assert_eq!(Metrics::new().one_hop_ratio(), 1.0, "vacuous = healthy");
+    }
+
+    #[test]
+    fn bandwidth_window() {
+        let mut m = Metrics::new();
+        m.window_secs = 10.0;
+        m.maintenance.send(3200);
+        assert!((m.maintenance_bps_out() - 320.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.lookups_one_hop = 5;
+        b.lookups_one_hop = 7;
+        b.lookups_failed = 1;
+        a.maintenance.send(100);
+        b.maintenance.send(200);
+        a.merge(&b);
+        assert_eq!(a.lookups_one_hop, 12);
+        assert_eq!(a.lookups_failed, 1);
+        assert_eq!(a.maintenance.bits_out, 300);
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event simulator — the stand-in for the paper's PlanetLab and
+//! HPC testbeds (substitution table in DESIGN.md §4).
+//!
+//! Virtual time is `f64` seconds. Each DHT protocol is a `World` driven by
+//! the generic calendar queue in [`engine`]; shared substrates are the
+//! network-delay models ([`network`]), the churn process ([`churn`]), the
+//! physical-node CPU model ([`cpu`]), cluster profiles ([`clusters`]) and
+//! the metrics sink ([`metrics`]). [`harness`] reproduces the paper's
+//! §VII-A two-phase methodology (growth at 1 join/s from 8 peers, then a
+//! timed measurement window, averaged over seeds).
+
+pub mod churn;
+pub mod clusters;
+pub mod cpu;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod network;
+
+pub use engine::{Queue, World};
+pub use harness::{ExperimentCfg, Phase};

@@ -1,0 +1,115 @@
+//! Network-delay models: the testbed substitution layer (DESIGN.md §4).
+//!
+//! * [`NetModel::Hpc`] — the Petrobras seismic datacenter (Table I):
+//!   switched Gigabit Ethernet, one-way delay ~70 µs (the paper measures
+//!   0.14 ms for a one-hop lookup round trip), tight log-normal jitter,
+//!   no loss.
+//! * [`NetModel::PlanetLab`] — the worldwide testbed: heavy-tailed
+//!   log-normal one-way delays (median 40 ms), 1% loss. The D1HT analysis
+//!   (§VIII) overestimates δavg at 0.25 s; our samples stay under that.
+//! * [`NetModel::Ideal`] — zero-delay, lossless (unit tests, Theorem
+//!   checks where §IV-B assumes synchrony).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NetModel {
+    Ideal,
+    Hpc,
+    PlanetLab,
+}
+
+impl NetModel {
+    /// One-way message delay (seconds).
+    pub fn delay(&self, rng: &mut Rng) -> f64 {
+        match self {
+            NetModel::Ideal => 0.0,
+            // median 70us, sigma 0.25 -> p99 ~ 125us
+            NetModel::Hpc => rng.lognormal(70e-6, 0.25),
+            // median 40ms one-way, sigma 0.8 -> mean ~55ms, p99 ~ 255ms
+            NetModel::PlanetLab => rng.lognormal(40e-3, 0.8).min(1.5),
+        }
+    }
+
+    /// Message-loss probability.
+    pub fn loss(&self) -> f64 {
+        match self {
+            NetModel::Ideal | NetModel::Hpc => 0.0,
+            NetModel::PlanetLab => 0.01,
+        }
+    }
+
+    /// Application-level lookup retry timeout: how long a peer waits on a
+    /// silent (departed) target before re-addressing the lookup. Tuned
+    /// to the environment's RTT scale, as any real deployment would.
+    pub fn lookup_retry_timeout(&self) -> f64 {
+        match self {
+            NetModel::Ideal => 0.0,
+            NetModel::Hpc => 2e-3,       // ~15x the HPC RTT
+            NetModel::PlanetLab => 0.5,  // ~3x a p99 WAN RTT
+        }
+    }
+
+    /// Expected average delay (the δavg a peer would plug into Eq. IV.2).
+    pub fn delta_avg(&self) -> f64 {
+        match self {
+            NetModel::Ideal => 0.0,
+            NetModel::Hpc => 72e-6,
+            NetModel::PlanetLab => 0.055,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetModel::Ideal => "ideal",
+            NetModel::Hpc => "HPC datacenter",
+            NetModel::PlanetLab => "PlanetLab",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_delay(m: NetModel, n: usize) -> f64 {
+        let mut rng = Rng::new(42);
+        (0..n).map(|_| m.delay(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn hpc_matches_measured_base_latency() {
+        // paper §VII-D: one-hop lookups ~0.14 ms round trip => one-way ~70us
+        let d = mean_delay(NetModel::Hpc, 50_000);
+        assert!((60e-6..90e-6).contains(&d), "mean one-way {d}");
+    }
+
+    #[test]
+    fn planetlab_under_delta_avg_overestimate() {
+        // §VIII uses δavg = 0.25 s as an overestimate of Internet delays
+        let d = mean_delay(NetModel::PlanetLab, 50_000);
+        assert!(d < 0.25, "mean {d} must stay below the paper's overestimate");
+        assert!(d > 0.02, "but must look like a WAN, got {d}");
+    }
+
+    #[test]
+    fn ideal_is_zero() {
+        assert_eq!(mean_delay(NetModel::Ideal, 10), 0.0);
+        assert_eq!(NetModel::Ideal.loss(), 0.0);
+    }
+
+    #[test]
+    fn losses() {
+        assert_eq!(NetModel::Hpc.loss(), 0.0);
+        assert!((NetModel::PlanetLab.loss() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delays_positive_and_bounded() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let d = NetModel::PlanetLab.delay(&mut rng);
+            assert!(d > 0.0 && d <= 1.5);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal benchmark harness (criterion is unavailable offline; DESIGN.md §5).
+//!
+//! Provides warm-up + timed iterations with mean/σ/min reporting, and a
+//! `black_box` to defeat constant folding. Used by every `rust/benches/*`
+//! target (`harness = false`).
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12?} /iter (min {:>12?}, sd {:>10?}, n={})",
+            self.name, self.mean, self.min, self.std_dev, self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &samples)
+}
+
+/// Auto-calibrating variant: pick an iteration count so the run takes
+/// roughly `target` total, then measure.
+pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (target.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 1000.0) as u32;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
+    let n = samples.len() as f64;
+    let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_nanos() as f64 - mean_ns;
+            x * x
+        })
+        .sum::<f64>()
+        / n.max(1.0);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        mean: Duration::from_nanos(mean_ns as u64),
+        std_dev: Duration::from_nanos(var.sqrt() as u64),
+        min: *samples.iter().min().unwrap(),
+    }
+}
+
+/// Bench-main boilerplate: print a header then run the provided closures.
+pub fn run_suite(suite: &str, benches: Vec<BenchResult>) {
+    println!("\n### bench suite: {suite}");
+    for b in &benches {
+        println!("{}", b.report());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn bench_auto_clamps() {
+        let r = bench_auto("fast", Duration::from_millis(5), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 3 && r.iters <= 1000);
+    }
+}

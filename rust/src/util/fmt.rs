@@ -1,0 +1,144 @@
+//! Rendering of experiment output: aligned ASCII tables (what the paper's
+//! figures print as series) and CSV emission for external plotting.
+
+/// An aligned text table with a title, column headers, and string cells.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human bandwidth: bits/sec -> "7.1 kbps" style, matching the paper's axes.
+pub fn bps(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2} Mbps", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1} kbps", v / 1e3)
+    } else {
+        format!("{:.0} bps", v)
+    }
+}
+
+/// Human latency: seconds -> ms/us display.
+pub fn latency(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.2} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.0} us", secs * 1e6)
+    }
+}
+
+/// Count with thousands separators (e.g. 4,000 peers).
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("demo", &["n", "bw"]);
+        t.row(vec!["1000".into(), "7.1 kbps".into()]);
+        t.row(vec!["10".into(), "900 bps".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert_eq!(r.lines().count(), 5); // title, header, rule, 2 rows
+        let rows: Vec<&str> = r.lines().skip(3).collect();
+        assert_eq!(rows[0].len(), rows[1].len(), "rows must align");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn humanized_units() {
+        assert_eq!(bps(7100.0), "7.1 kbps");
+        assert_eq!(bps(250.0), "250 bps");
+        assert_eq!(bps(2_500_000.0), "2.50 Mbps");
+        assert_eq!(latency(0.00014), "140 us");
+        assert_eq!(latency(0.012), "12.00 ms");
+        assert_eq!(count(4000), "4,000");
+        assert_eq!(count(1_000_000), "1,000,000");
+        assert_eq!(count(1), "1");
+    }
+}

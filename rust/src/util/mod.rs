@@ -1,0 +1,11 @@
+//! Small self-contained substrates: deterministic RNG, statistics,
+//! table/CSV rendering, a bench harness, and a timer wheel.
+//!
+//! These exist because the image's offline registry carries no `rand`,
+//! `criterion`, or `hdrhistogram`; each module documents the algorithm it
+//! implements and is unit-tested in place.
+
+pub mod bench;
+pub mod fmt;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,283 @@
+//! Streaming statistics: online mean/variance, log-scaled latency
+//! histograms with percentile queries, and bandwidth counters.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+    pub fn sum(&self) -> f64 {
+        self.mean() * self.n as f64
+    }
+
+    pub fn merge(&mut self, o: &Running) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        self.m2 += o.m2 + d * d * (self.n as f64 * o.n as f64) / n as f64;
+        self.mean += d * o.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Log-bucketed histogram for latencies (HdrHistogram-lite).
+///
+/// Buckets are log-spaced with `SUB` linear sub-buckets per octave, giving
+/// a worst-case relative quantile error of ~1/SUB. Range: 1 ns .. ~584 y.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+}
+
+const SUB: u64 = 32; // sub-buckets per octave => ~3% quantile error
+const OCTAVES: usize = 64;
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { counts: vec![0; OCTAVES * SUB as usize], total: 0, sum_ns: 0 }
+    }
+
+    fn bucket(ns: u64) -> usize {
+        if ns < SUB {
+            return ns as usize;
+        }
+        let oct = 63 - ns.leading_zeros() as u64; // floor(log2 ns)
+        let base_oct = 63 - SUB.leading_zeros() as u64; // log2(SUB)
+        let oct_rel = oct - base_oct;
+        let sub = (ns >> (oct - base_oct)) - SUB; // position within octave
+        ((oct_rel + 1) * SUB + sub) as usize
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = Self::bucket(ns).min(self.counts.len() - 1);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum_ns += ns as u128;
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.record_ns((s.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum_ns as f64 / self.total as f64 }
+    }
+
+    /// Quantile in nanoseconds (q in [0,1]).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::lower_bound_of(i);
+            }
+        }
+        Self::lower_bound_of(self.counts.len() - 1)
+    }
+
+    fn lower_bound_of(idx: usize) -> u64 {
+        let idx = idx as u64;
+        if idx < SUB {
+            return idx;
+        }
+        let oct_rel = idx / SUB - 1;
+        let sub = idx % SUB;
+        (SUB + sub) << oct_rel
+    }
+
+    pub fn merge(&mut self, o: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
+            *a += b;
+        }
+        self.total += o.total;
+        self.sum_ns += o.sum_ns;
+    }
+}
+
+/// Byte/message counters for maintenance-traffic accounting.
+///
+/// The simulator credits *bits at the wire format of Fig. 2* so that
+/// simulated and analytical bandwidths are directly comparable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Traffic {
+    pub msgs_out: u64,
+    pub msgs_in: u64,
+    pub bits_out: u64,
+    pub bits_in: u64,
+}
+
+impl Traffic {
+    pub fn send(&mut self, bits: u64) {
+        self.msgs_out += 1;
+        self.bits_out += bits;
+    }
+    pub fn recv(&mut self, bits: u64) {
+        self.msgs_in += 1;
+        self.bits_in += bits;
+    }
+    pub fn merge(&mut self, o: &Traffic) {
+        self.msgs_out += o.msgs_out;
+        self.msgs_in += o.msgs_in;
+        self.bits_out += o.bits_out;
+        self.bits_in += o.bits_in;
+    }
+    /// Outgoing bandwidth in bits/sec over a window.
+    pub fn bps_out(&self, secs: f64) -> f64 {
+        if secs <= 0.0 { 0.0 } else { self.bits_out as f64 / secs }
+    }
+    pub fn bps_in(&self, secs: f64) -> f64 {
+        if secs <= 0.0 { 0.0 } else { self.bits_in as f64 / secs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_basic() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 4);
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert!((r.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 4.0);
+    }
+
+    #[test]
+    fn running_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Running::new();
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.var() - all.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hist_quantiles_within_resolution() {
+        let mut h = LatencyHist::new();
+        // 1..=10_000 microseconds
+        for us in 1..=10_000u64 {
+            h.record_ns(us * 1000);
+        }
+        let p50 = h.quantile_ns(0.50) as f64 / 1000.0;
+        let p99 = h.quantile_ns(0.99) as f64 / 1000.0;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.05, "p50={p50}");
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn hist_mean_exact() {
+        let mut h = LatencyHist::new();
+        h.record_ns(100);
+        h.record_ns(300);
+        assert_eq!(h.mean_ns(), 200.0);
+    }
+
+    #[test]
+    fn hist_merge() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record_ns(10);
+        b.record_ns(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn hist_monotone_quantiles() {
+        let mut h = LatencyHist::new();
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10_000 {
+            h.record_ns(rng.range(1, 1_000_000_000));
+        }
+        let mut last = 0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.quantile_ns(q);
+            assert!(v >= last, "q={q}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut t = Traffic::default();
+        t.send(320);
+        t.send(320);
+        t.recv(288);
+        assert_eq!(t.msgs_out, 2);
+        assert_eq!(t.bits_out, 640);
+        assert!((t.bps_out(2.0) - 320.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,58 @@
+//! End-to-end over the REAL socket runtime: boots genuine UDP peers on
+//! loopback (threads, reliable-UDP, EDRA), exercises joins, lookups,
+//! graceful leaves and SIGKILL-style failures.
+
+use std::time::Duration;
+
+use d1ht::net::{Cluster, NetPeerCfg};
+
+#[test]
+fn cluster_converges_and_resolves() {
+    let cluster = Cluster::start(12, 0.01).expect("start");
+    assert!(cluster.await_convergence(Duration::from_secs(20)), "convergence");
+    let rep = cluster.run_lookups(300, 42);
+    assert_eq!(rep.lookups, 300);
+    assert!(rep.one_hop_ratio() > 0.99, "one-hop {}", rep.one_hop_ratio());
+    assert!(rep.resolved >= 297, "resolved {}", rep.resolved);
+    // loopback one-hop latency should be well under a millisecond p50
+    let p50 = rep.latency.quantile_ns(0.5);
+    assert!(p50 < 300_000_000, "p50 {} ns", p50);
+    cluster.shutdown();
+}
+
+#[test]
+fn survives_kill_and_graceful_leave() {
+    let mut cluster = Cluster::start(10, 0.01).expect("start");
+    assert!(cluster.await_convergence(Duration::from_secs(20)));
+    let removed = cluster.churn_step(7); // one kill + one graceful leave
+    assert_eq!(removed, 2);
+    std::thread::sleep(Duration::from_secs(2)); // detection + dissemination
+    let rep = cluster.run_lookups(200, 3);
+    let resolve_rate = rep.resolved as f64 / rep.lookups.max(1) as f64;
+    assert!(resolve_rate > 0.99, "resolve rate {resolve_rate}");
+    cluster.shutdown();
+}
+
+#[test]
+fn late_joiner_gets_full_table() {
+    let cluster = Cluster::start(6, 0.01).expect("start");
+    assert!(cluster.await_convergence(Duration::from_secs(15)));
+    // join one more through the founder
+    let extra = d1ht::net::peer::spawn(NetPeerCfg {
+        bootstrap: Some(cluster.peers[0].addr),
+        ..Default::default()
+    })
+    .expect("late joiner");
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut size = 0;
+    while std::time::Instant::now() < deadline {
+        size = extra.stats().map(|s| s.table_size).unwrap_or(0);
+        if size == 7 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(size, 7, "late joiner table");
+    extra.leave();
+    cluster.shutdown();
+}

@@ -1,0 +1,79 @@
+//! Integration over the PJRT runtime: the AOT artifacts loaded and
+//! executed from rust, cross-checked against native implementations and
+//! wired into a simulated routing-table snapshot. Skips (loudly) if
+//! `make artifacts` has not run.
+
+use d1ht::dht::d1ht::{D1htCfg, D1htSim};
+use d1ht::runtime::lookup::{resolve_native, BatchLookup, Snapshot, BATCH};
+use d1ht::runtime::{analytics::AnalyticsGrid, artifacts_available};
+use d1ht::sim::engine::Queue;
+use d1ht::util::rng::Rng;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+/// The end-to-end data path: snapshot a *live simulated system's* ground
+/// truth, resolve a key batch through the XLA artifact, and verify every
+/// answer against both the native search and the 64-bit table.
+#[test]
+fn xla_lookup_agrees_with_simulated_system() {
+    require_artifacts!();
+    let mut sim = D1htSim::new(D1htCfg::default());
+    let mut q = Queue::new();
+    sim.bootstrap(3000, &mut q);
+    let snap = Snapshot::capture(sim.truth()).expect("snapshot");
+    let exe = BatchLookup::load().expect("artifact");
+    let mut rng = Rng::new(99);
+    let keys: Vec<u64> = (0..BATCH).map(|_| rng.next_u64()).collect();
+    let got = exe.resolve(&snap, &keys).expect("resolve");
+    let native = resolve_native(&snap, &keys);
+    assert_eq!(got, native, "XLA vs native disagree");
+    // all owners are live members
+    for owner in got {
+        assert!(sim.truth().contains(owner));
+    }
+}
+
+#[test]
+fn analytics_artifact_reproduces_paper_datums() {
+    require_artifacts!();
+    let grid = AnalyticsGrid::load().expect("artifact");
+    // §VIII: n=1e6 at 60/169/174/780 min -> 20.7/7.3/7.1/1.6 kbps
+    let pts = [
+        (1e6, 60.0 * 60.0, 20.7),
+        (1e6, 169.0 * 60.0, 7.3),
+        (1e6, 174.0 * 60.0, 7.1),
+        (1e6, 780.0 * 60.0, 1.6),
+    ];
+    let res = grid
+        .eval(&pts.iter().map(|p| (p.0, p.1)).collect::<Vec<_>>())
+        .expect("eval");
+    for (i, &(_, _, want_kbps)) in pts.iter().enumerate() {
+        let got = res.d1ht_bps[i] / 1000.0;
+        assert!(
+            (got - want_kbps).abs() / want_kbps < 0.05,
+            "point {i}: {got} vs paper {want_kbps} kbps"
+        );
+    }
+}
+
+#[test]
+fn repeated_executions_are_deterministic() {
+    require_artifacts!();
+    let exe = BatchLookup::load().expect("artifact");
+    let mut rng = Rng::new(5);
+    let table = d1ht::routing::Table::from_ids(
+        (0..1000).map(|_| d1ht::id::Id(rng.next_u64())).collect(),
+    );
+    let snap = Snapshot::capture(&table).unwrap();
+    let keys: Vec<u64> = (0..BATCH).map(|_| rng.next_u64()).collect();
+    let a = exe.resolve(&snap, &keys).unwrap();
+    let b = exe.resolve(&snap, &keys).unwrap();
+    assert_eq!(a, b);
+}

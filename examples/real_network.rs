@@ -16,7 +16,7 @@ use std::time::Duration;
 use d1ht::net::Cluster;
 use d1ht::util::fmt::{latency, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> d1ht::anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
     let lookups: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2000);
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let mut cluster = Cluster::start(n, d1ht::DEFAULT_F)?;
     let converged = cluster.await_convergence(Duration::from_secs(60));
     println!("join + convergence: {:?} (converged: {converged})", t0.elapsed());
-    anyhow::ensure!(converged, "routing tables failed to converge");
+    d1ht::anyhow::ensure!(converged, "routing tables failed to converge");
 
     println!("phase 1: {lookups} lookups on the stable system ...");
     let rep1 = cluster.run_lookups(lookups, 1);
@@ -76,8 +76,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     println!("{}", t.render());
 
-    anyhow::ensure!(rep1.one_hop_ratio() > 0.99, "stable phase must be >99% one-hop");
-    anyhow::ensure!(
+    d1ht::anyhow::ensure!(rep1.one_hop_ratio() > 0.99, "stable phase must be >99% one-hop");
+    d1ht::anyhow::ensure!(
         rep2.resolved as f64 / rep2.lookups.max(1) as f64 > 0.99,
         "post-churn lookups must still resolve"
     );

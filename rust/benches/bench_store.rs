@@ -1,0 +1,69 @@
+//! Store-subsystem benches: put/get throughput of the replicated KV
+//! layer and repair traffic under the Eq. III.1 churn model, reported
+//! alongside the maintenance-traffic benches (bench_fig3/4).
+
+use std::time::Duration;
+
+use d1ht::id::Id;
+use d1ht::routing::Table;
+use d1ht::sim::churn::ChurnCfg;
+use d1ht::sim::harness::{run_d1ht_store, ExperimentCfg, Phase};
+use d1ht::store::{StoreCfg, StoreLayer};
+use d1ht::util::bench::{bench_auto, black_box, run_suite};
+use d1ht::util::fmt::{bps, Table as Report};
+use d1ht::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut results = Vec::new();
+
+    // put/get throughput against the paper's largest table (4,000 peers)
+    let truth = Table::from_ids((0..4000).map(|_| Id(rng.next_u64())).collect());
+    let cfg = StoreCfg { keys: 10_000, ..Default::default() };
+    let mut layer = StoreLayer::new(cfg, Rng::new(2));
+    layer.preload(&truth);
+    results.push(bench_auto("store_1024_zipf_ops_n4000_10k_keys", Duration::from_millis(300), || {
+        for _ in 0..1024 {
+            layer.workload_step(&truth);
+        }
+        black_box(layer.counters.puts);
+    }));
+
+    // anti-entropy pass over 10k keys after 40 departures
+    let survivors: Vec<Id> =
+        truth.ids().iter().enumerate().filter(|(i, _)| i % 100 != 0).map(|(_, &id)| id).collect();
+    let after = Table::from_ids(survivors);
+    results.push(bench_auto("store_repair_pass_10k_keys_40_leaves", Duration::from_millis(300), || {
+        let mut l = layer.clone();
+        l.repair(&after);
+        black_box(l.counters.repair_transfers);
+    }));
+
+    run_suite("store (replicated KV hot paths)", results);
+
+    // end-to-end simulated cell: throughput + repair bandwidth under churn
+    let cfg = ExperimentCfg {
+        target_n: 512,
+        churn: ChurnCfg::exponential(174.0 * 60.0),
+        growth: Phase::Bootstrap,
+        settle_secs: 60.0,
+        measure_secs: 240.0,
+        seeds: vec![1],
+        lookup_rate: 0.0,
+        ..Default::default()
+    };
+    let scfg = StoreCfg { keys: 2000, repair_interval: 30.0, ..Default::default() };
+    let res = run_d1ht_store(&cfg, &scfg);
+    let mut t = Report::new(
+        "simulated storage cell (n=512, Savg=174min, R=3, 240s window)",
+        &["metric", "value"],
+    );
+    t.row(vec!["store ops (sim-time)/s".into(), format!("{:.1}", res.ops_per_sec)]);
+    t.row(vec!["puts / gets".into(), format!("{} / {}", res.puts, res.gets)]);
+    t.row(vec!["keys retrievable %".into(), format!("{:.3}", res.retrievable * 100.0)]);
+    t.row(vec!["get availability %".into(), format!("{:.3}", res.availability * 100.0)]);
+    t.row(vec!["repair transfers".into(), (res.repair_transfers + res.handoff_transfers).to_string()]);
+    t.row(vec!["repair bandwidth/peer".into(), bps(res.repair_bps_per_peer)]);
+    t.row(vec!["store bandwidth/peer".into(), bps(res.store_bps_per_peer)]);
+    println!("{}", t.render());
+}

@@ -1,0 +1,147 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! The offline image carries no external crates (DESIGN.md §5), so this
+//! module provides the small slice of anyhow's API the codebase uses:
+//! a string-backed [`Error`] with a flattened context chain, the
+//! [`Result`] alias, the [`Context`] extension trait for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! In-crate code imports `crate::anyhow::{...}`; binaries and examples
+//! import `d1ht::anyhow` and use the same paths.
+
+use std::fmt;
+
+/// String-backed error. Context frames are flattened into the message,
+/// outermost first, matching anyhow's `{:#}` rendering.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with a higher-level context line.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error` — exactly
+// like anyhow — which is what makes this blanket conversion coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context attachment for fallible values (anyhow's `Context` trait).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::anyhow::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+// Make the macros reachable as `crate::anyhow::bail!` / `d1ht::anyhow::ensure!`
+// in addition to the crate-root paths `#[macro_export]` creates.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        s.parse::<u32>().context("not a number")
+    }
+
+    #[test]
+    fn context_chain_flattens() {
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number: "), "{e}");
+        let wrapped = e.context("outer");
+        assert!(wrapped.to_string().starts_with("outer: not a number"), "{wrapped}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with {}", 42);
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with 42");
+        let e = anyhow!("ad hoc {}", "error");
+        assert_eq!(e.to_string(), "ad hoc error");
+        fn g() -> Result<()> {
+            bail!("bye");
+        }
+        assert_eq!(g().unwrap_err().to_string(), "bye");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let v: u32 = "nope".parse()?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+}

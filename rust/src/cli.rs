@@ -6,9 +6,10 @@
 //! d1ht analyze --n <peers> --savg-min <mins> [--quarantine <frac>]
 //! d1ht serve --peers <n> [--lookups <k>] [--churn-steps <k>]
 //! d1ht sim --peers <n> --savg-min <mins> [--secs <s>] [--quarantine-tq <s>]
+//! d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--secs <s>]
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use crate::analysis::{calot::CalotModel, d1ht::D1htModel, onehop::OneHopModel};
 use crate::coordinator::{run_experiment, ExperimentId};
@@ -78,6 +79,7 @@ pub fn run(argv: &[String], out: &mut dyn std::io::Write) -> Result<()> {
         Some("analyze") => cmd_analyze(&args, out),
         Some("serve") => cmd_serve(&args, out),
         Some("sim") => cmd_sim(&args, out),
+        Some("store") => cmd_store(&args, out),
         Some("help") | None => {
             writeln!(out, "{}", HELP)?;
             Ok(())
@@ -98,6 +100,9 @@ USAGE:
   d1ht serve --peers <n> [--lookups <k>] real socket cluster on loopback
   d1ht sim --peers <n> --savg-min <m> [--secs <s>] [--quarantine-tq <s>]
                                          one simulated D1HT run
+  d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--savg-min <m>]
+             [--secs <s>] [--repair-secs <s>]
+                                         replicated KV durability run
   d1ht help";
 
 fn fidelity(args: &Args) -> Fidelity {
@@ -236,6 +241,64 @@ fn cmd_sim(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
     emit(&[t], args.has("csv"), out)
 }
 
+fn cmd_store(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    use crate::sim::churn::ChurnCfg;
+    use crate::sim::harness::{run_d1ht_store, ExperimentCfg, Phase};
+    use crate::store::StoreCfg;
+
+    let n = args.get_usize("peers", 1000)?;
+    let keys = args.get_usize("keys", 2000)?;
+    let r = args.get_usize("replicas", 3)?;
+    let savg = args.get_f64("savg-min", 174.0)? * 60.0;
+    let secs = args.get_f64("secs", 600.0)?;
+    let repair = args.get_f64("repair-secs", 60.0)?;
+    let rejoin = crate::sim::churn::REJOIN_DELAY_SECS;
+    if !(repair > 0.0 && repair < rejoin) {
+        bail!("--repair-secs {repair}: must be in (0, {rejoin}) — the anti-entropy pass has to undercut the churn rejoin delay");
+    }
+    if keys == 0 {
+        bail!("--keys 0: the store needs a key population");
+    }
+    if r == 0 {
+        bail!("--replicas 0: replication factor must be at least 1");
+    }
+    let cfg = ExperimentCfg {
+        target_n: n,
+        churn: ChurnCfg::exponential(savg),
+        growth: Phase::Bootstrap,
+        settle_secs: 60.0,
+        measure_secs: secs,
+        seeds: vec![1],
+        lookup_rate: 0.0,
+        ..Default::default()
+    };
+    let scfg = StoreCfg { keys, replication: r, repair_interval: repair, ..Default::default() };
+    let res = run_d1ht_store(&cfg, &scfg);
+    let mut t = Table::new(
+        format!(
+            "replicated KV store (n={n}, R={r}, {keys} keys, Savg={:.0}min, {secs}s window)",
+            savg / 60.0
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["population".into(), res.n.to_string()]);
+    t.row(vec!["keys retrievable %".into(), format!("{:.3}", res.retrievable * 100.0)]);
+    t.row(vec!["get availability %".into(), format!("{:.3}", res.availability * 100.0)]);
+    t.row(vec!["one-hop gets %".into(), format!("{:.2}", res.get_one_hop_ratio * 100.0)]);
+    t.row(vec!["puts".into(), res.puts.to_string()]);
+    t.row(vec!["gets".into(), res.gets.to_string()]);
+    t.row(vec!["gets failed".into(), res.gets_failed.to_string()]);
+    t.row(vec!["keys lost".into(), res.keys_lost.to_string()]);
+    t.row(vec![
+        "repair + handoff transfers".into(),
+        (res.repair_transfers + res.handoff_transfers).to_string(),
+    ]);
+    t.row(vec!["repair bandwidth/peer".into(), bps(res.repair_bps_per_peer)]);
+    t.row(vec!["store bandwidth/peer".into(), bps(res.store_bps_per_peer)]);
+    t.row(vec!["store ops/s".into(), format!("{:.1}", res.ops_per_sec)]);
+    emit(&[t], args.has("csv"), out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,6 +336,16 @@ mod tests {
         assert!(s.contains("D1HT"), "{s}");
         assert!(s.contains("7.4 kbps") || s.contains("7.3 kbps"), "{s}");
         assert!(s.contains("Quarantine"), "{s}");
+    }
+
+    #[test]
+    fn store_run_prints_durability() {
+        let s = run_to_string(&[
+            "store", "--peers", "64", "--keys", "200", "--secs", "120", "--repair-secs", "30",
+        ])
+        .unwrap();
+        assert!(s.contains("keys retrievable"), "{s}");
+        assert!(s.contains("repair bandwidth/peer"), "{s}");
     }
 
     #[test]

@@ -2,11 +2,17 @@
 //! environment overrides (`D1HT_<KEY>`), hand-rolled because the offline
 //! image carries no serde/toml (DESIGN.md §5). Comments (`#`) and blank
 //! lines are ignored; sections are not needed.
+//!
+//! Also home of [`TransportTuning`], the reliable-UDP knobs
+//! (`net/transport.rs`) tests and deployments tune via config keys
+//! `rto-ms`, `max-retries`, `seen-cap`, `seen-expiry-secs` (env:
+//! `D1HT_RTO_MS`, ...).
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -63,13 +69,57 @@ impl Config {
         match self.get(key).as_deref() {
             Some("true") | Some("1") | Some("yes") => Ok(true),
             Some("false") | Some("0") | Some("no") => Ok(false),
-            Some(v) => anyhow::bail!("config {key}={v}: not a bool"),
+            Some(v) => crate::anyhow::bail!("config {key}={v}: not a bool"),
             None => Ok(default),
         }
     }
 
     pub fn set(&mut self, key: &str, value: &str) {
         self.values.insert(key.into(), value.into());
+    }
+}
+
+/// Reliable-UDP transport knobs (previously hard-coded in
+/// `net/transport.rs`): retransmission timeout, retry budget, and the
+/// bounds of the duplicate-suppression (`seen`) map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransportTuning {
+    /// Retransmission timeout for unacked reliable messages.
+    pub rto: Duration,
+    /// Retries before a destination is presumed dead.
+    pub max_retries: u32,
+    /// Hard size bound on the duplicate-suppression map; when exceeded,
+    /// the oldest half is evicted (a late duplicate then costs one
+    /// re-delivery, never unbounded memory).
+    pub seen_cap: usize,
+    /// Entries older than this are purged from the map.
+    pub seen_expiry: Duration,
+}
+
+impl Default for TransportTuning {
+    fn default() -> Self {
+        TransportTuning {
+            rto: Duration::from_millis(250),
+            max_retries: 4,
+            seen_cap: 4096,
+            seen_expiry: Duration::from_secs(30),
+        }
+    }
+}
+
+impl TransportTuning {
+    /// Read the tuning from a [`Config`] (missing keys keep defaults;
+    /// `D1HT_*` env overrides win as usual).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = Self::default();
+        Ok(TransportTuning {
+            rto: Duration::from_millis(cfg.get_usize("rto-ms", d.rto.as_millis() as usize)? as u64),
+            max_retries: cfg.get_usize("max-retries", d.max_retries as usize)? as u32,
+            seen_cap: cfg.get_usize("seen-cap", d.seen_cap)?,
+            seen_expiry: Duration::from_secs(
+                cfg.get_usize("seen-expiry-secs", d.seen_expiry.as_secs() as usize)? as u64,
+            ),
+        })
     }
 }
 
@@ -98,6 +148,19 @@ mod tests {
         let c = Config::parse("x = abc\n").unwrap();
         assert!(c.get_f64("x", 0.0).is_err());
         assert!(c.get_bool("x", false).is_err());
+    }
+
+    #[test]
+    fn transport_tuning_from_config() {
+        let t = TransportTuning::from_config(&Config::new()).unwrap();
+        assert_eq!(t, TransportTuning::default());
+        let c = Config::parse("rto-ms = 50\nmax-retries = 2\nseen-cap = 128\n").unwrap();
+        let t = TransportTuning::from_config(&c).unwrap();
+        assert_eq!(t.rto, Duration::from_millis(50));
+        assert_eq!(t.max_retries, 2);
+        assert_eq!(t.seen_cap, 128);
+        assert_eq!(t.seen_expiry, TransportTuning::default().seen_expiry);
+        assert!(TransportTuning::from_config(&Config::parse("rto-ms = x\n").unwrap()).is_err());
     }
 
     #[test]

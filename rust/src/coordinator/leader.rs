@@ -1,6 +1,6 @@
 //! Experiment dispatch + report rendering.
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::experiments::{self, Fidelity};
 use crate::util::fmt::Table;
@@ -18,6 +18,7 @@ pub enum ExperimentId {
     Fig8,
     AblationAggregation,
     AblationIdReuse,
+    Store,
 }
 
 impl ExperimentId {
@@ -34,8 +35,9 @@ impl ExperimentId {
             "fig8" => ExperimentId::Fig8,
             "ablation-aggregation" => ExperimentId::AblationAggregation,
             "ablation-id-reuse" => ExperimentId::AblationIdReuse,
+            "store" => ExperimentId::Store,
             other => bail!(
-                "unknown experiment '{other}' (try: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8 ablation-aggregation ablation-id-reuse)"
+                "unknown experiment '{other}' (try: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8 store ablation-aggregation ablation-id-reuse)"
             ),
         })
     }
@@ -51,6 +53,7 @@ impl ExperimentId {
             ExperimentId::Fig6,
             ExperimentId::Fig7,
             ExperimentId::Fig8,
+            ExperimentId::Store,
         ]
     }
 }
@@ -73,6 +76,7 @@ pub fn run_experiment(id: ExperimentId, fid: Fidelity) -> Result<Vec<Table>> {
                 .collect::<Result<Vec<_>>>()?
         }
         ExperimentId::Fig8 => vec![experiments::fig8::run()],
+        ExperimentId::Store => vec![experiments::store::run(fid)],
         ExperimentId::AblationAggregation => {
             vec![experiments::ablations::aggregation(1024, 3600.0, 300.0)]
         }

@@ -27,6 +27,7 @@ use crate::sim::cpu::CpuModel;
 use crate::sim::engine::{Queue, World};
 use crate::sim::metrics::Metrics;
 use crate::sim::network::NetModel;
+use crate::store::{StoreCfg, StoreLayer};
 use crate::util::rng::Rng;
 
 /// Retransmission timeout for lost maintenance messages (UDP + ack, §VI).
@@ -77,6 +78,10 @@ pub enum Ev {
     Rejoin { label: u64 },
     /// Global lookup generator (one stream, rate n·lookup_rate).
     LookupTick,
+    /// Store-layer workload generator (one stream, rate n·ops_rate).
+    StoreTick,
+    /// Store-layer anti-entropy pass.
+    StoreRepair,
 }
 
 struct Peer {
@@ -156,6 +161,8 @@ pub struct D1htSim {
     label_to_id: BTreeMap<u64, Id>,
     next_label: u64,
     next_epoch: u64,
+    /// Replicated KV layer (None until `enable_store`).
+    store: Option<StoreLayer>,
     /// Metrics are recorded only inside the measurement window.
     recording: bool,
     record_start: f64,
@@ -180,6 +187,7 @@ impl D1htSim {
             label_to_id: BTreeMap::new(),
             next_label: 0,
             next_epoch: 1,
+            store: None,
             recording: false,
             record_start: 0.0,
             record_end: 0.0,
@@ -274,8 +282,63 @@ impl D1htSim {
         for p in self.peers.values() {
             all.merge(&p.metrics);
         }
+        if let Some(s) = &self.store {
+            all.store.merge(&s.counters);
+        }
         all.window_secs = (self.record_end - self.record_start).max(0.0);
         all
+    }
+
+    // ------------------------------------------------------------------
+    // replicated KV layer
+    // ------------------------------------------------------------------
+
+    /// Attach the replicated storage layer: preload the key population
+    /// onto the current membership and start the workload + anti-entropy
+    /// timers. Call after bootstrap/growth.
+    pub fn enable_store(&mut self, cfg: StoreCfg, q: &mut Queue<Ev>) {
+        assert!(
+            cfg.repair_interval < REJOIN_DELAY_SECS,
+            "repair interval must undercut the churn rejoin delay so holder \
+             liveness stays exact between anti-entropy passes"
+        );
+        // independent stream: enabling the store must not perturb the
+        // membership/lookup randomness of existing experiments
+        let mut layer = StoreLayer::new(cfg, self.rng.fork(0x570E));
+        layer.preload(&self.truth);
+        let repair = layer.cfg.repair_interval;
+        self.store = Some(layer);
+        q.after(0.0, Ev::StoreTick);
+        q.after(repair, Ev::StoreRepair);
+    }
+
+    pub fn store(&self) -> Option<&StoreLayer> {
+        self.store.as_ref()
+    }
+    pub fn store_mut(&mut self) -> Option<&mut StoreLayer> {
+        self.store.as_mut()
+    }
+
+    /// Durability sweep: `(total keys, retrievable keys)`.
+    pub fn store_retrievable(&self) -> (usize, usize) {
+        match &self.store {
+            Some(s) => s.retrievable(&self.truth),
+            None => (0, 0),
+        }
+    }
+
+    fn store_tick(&mut self, q: &mut Queue<Ev>) {
+        let Some(store) = self.store.as_mut() else { return };
+        store.workload_step(&self.truth);
+        let rate = store.cfg.ops_rate * self.truth.len().max(1) as f64;
+        let dt = store.rng.exp(1.0 / rate.max(1e-9));
+        q.after(dt, Ev::StoreTick);
+    }
+
+    fn store_repair(&mut self, q: &mut Queue<Ev>) {
+        let Some(store) = self.store.as_mut() else { return };
+        store.repair(&self.truth);
+        q.after(store.cfg.repair_interval, Ev::StoreRepair);
     }
 
     /// Per-peer average outgoing maintenance bandwidth (bps).
@@ -308,6 +371,23 @@ impl D1htSim {
         v.sort_by(f64::total_cmp);
         if v.is_empty() { return (0.0, 0.0, 0.0); }
         (v[0], v[v.len()/2], v[v.len()-1])
+    }
+
+    /// Diagnostics: the union of every live peer's routing-table entries
+    /// (the Quarantine end-to-end test asserts no quarantined joiner
+    /// appears anywhere before promotion).
+    pub fn all_known_ids(&self) -> std::collections::BTreeSet<Id> {
+        let mut out = std::collections::BTreeSet::new();
+        for p in self.peers.values() {
+            out.extend(p.table.ids().iter().copied());
+        }
+        out
+    }
+
+    /// Diagnostics: per-peer incoming maintenance message counts
+    /// (recorded only inside the measurement window).
+    pub fn maintenance_msgs_in_by_peer(&self) -> Vec<(Id, u64)> {
+        self.peers.values().map(|p| (p.id, p.metrics.maintenance.msgs_in)).collect()
     }
 
     /// Mean routing-table staleness vs ground truth (diagnostics).
@@ -794,6 +874,8 @@ impl World for D1htSim {
                 }
             }
             Ev::LookupTick => self.lookup_tick(q),
+            Ev::StoreTick => self.store_tick(q),
+            Ev::StoreRepair => self.store_repair(q),
         }
     }
 }
@@ -904,6 +986,46 @@ mod tests {
             m.one_hop_ratio()
         );
         assert!(sim.size() > 150, "population roughly maintained: {}", sim.size());
+    }
+
+    #[test]
+    fn store_layer_survives_churn() {
+        let cfg = D1htCfg {
+            churn: ChurnCfg::exponential(174.0 * 60.0),
+            lookup_rate: 0.0,
+            ..Default::default()
+        };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(128, &mut q);
+        sim.enable_store(
+            StoreCfg { keys: 500, repair_interval: 30.0, ..Default::default() },
+            &mut q,
+        );
+        sim.begin_recording(0.0);
+        run_until(&mut sim, &mut q, 900.0);
+        sim.end_recording(900.0);
+        let m = sim.metrics();
+        assert!(m.store.puts > 0, "workload ran");
+        assert!(m.store.gets_total() > 1000, "gets {}", m.store.gets_total());
+        assert!(
+            m.store.availability() > 0.999,
+            "availability {}",
+            m.store.availability()
+        );
+        assert_eq!(m.store.keys_lost, 0, "R=3 must survive Eq. III.1 churn");
+        let (total, alive) = sim.store_retrievable();
+        assert_eq!(total, 500);
+        assert!(alive == total, "retrievable {alive}/{total}");
+    }
+
+    #[test]
+    fn store_disabled_is_inert() {
+        let (mut sim, mut q) = quiet_world(16);
+        run_until(&mut sim, &mut q, 60.0);
+        let m = sim.metrics();
+        assert_eq!(m.store.gets_total() + m.store.puts, 0);
+        assert_eq!(sim.store_retrievable(), (0, 0));
     }
 
     #[test]

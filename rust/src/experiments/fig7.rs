@@ -25,7 +25,7 @@ pub fn sizes() -> Vec<f64> {
     v
 }
 
-pub fn run(savg_mins: f64, via_artifact: bool) -> anyhow::Result<Table> {
+pub fn run(savg_mins: f64, via_artifact: bool) -> crate::anyhow::Result<Table> {
     let savg = savg_mins * 60.0;
     let mut t = Table::new(
         format!("Fig. 7 — analytical per-peer maintenance bandwidth (Savg={savg_mins}min)"),

@@ -14,12 +14,52 @@
 //! * [`analysis`] — the closed-form maintenance-bandwidth models (§VIII).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   lookup and analytics graphs (`artifacts/*.hlo.txt`).
-//! * [`experiments`] — one driver per paper table/figure.
+//! * [`store`] — replicated key–value storage over the single-hop lookup
+//!   substrate (see the section below).
+//! * [`experiments`] — one driver per paper table/figure, plus the
+//!   storage durability/availability experiment.
+//! * [`anyhow`] — vendored minimal `anyhow` stand-in (offline build).
 //!
 //! Layering: python (JAX + Pallas) runs only at build time (`make
 //! artifacts`); this crate is self-contained at run time.
+//!
+//! # The `store/` subsystem: replication and repair
+//!
+//! D1HT's pitch (§I, §IX) is serving directory-style workloads, so the
+//! crate layers a replicated key–value store on top of `resolve`:
+//!
+//! * **Placement.** A key with ring ID `k` is held by `succ(k)` (its
+//!   *owner*) and the next `R−1` distinct ring successors — the
+//!   successor-list replication of DHash/DistHash. Default `R = 3`.
+//! * **Writes.** A `Put` travels to the owner (one hop, like a lookup);
+//!   the owner stores and pushes `Replicate` copies to the other `R−1`
+//!   replicas. Versions are per-key monotonic counters; replicas accept
+//!   only non-stale versions, so duplicated repair traffic is idempotent.
+//! * **Reads.** A `Get` asks the owner first; if the owner is fresh after
+//!   churn and does not hold the value yet, a surviving replica serves it
+//!   (counted as a *degraded* read — availability preserved at one extra
+//!   hop).
+//! * **Repair.** EDRA membership events change the replica set of the
+//!   affected keys. A periodic anti-entropy pass re-creates missing
+//!   replicas from surviving copies (leave/failure) and hands keys to
+//!   peers that now own them (join). A key is *lost* only if all `R`
+//!   holders depart within one repair interval.
+//! * **Wire costs.** Store messages are charged Figure-2-style exact
+//!   sizes ([`proto::sizes`]): `Get` costs `V_STORE` (the four common
+//!   fields + a 20-byte key, like a lookup), `Put`/`GetResp` add the
+//!   value payload, `Replicate` adds a 64-bit version, and bulk
+//!   `Handoff` uses TCP-style framing like the §VI table transfer.
+//!
+//! Both runtimes implement the same protocol: the deterministic
+//! simulator ([`store::StoreLayer`] driven by [`dht::d1ht::D1htSim`],
+//! with a Zipf-popularity workload and durability/availability counters
+//! in [`sim::metrics`]) and the real UDP runtime ([`net::peer`] peers
+//! store actual bytes in a [`store::KvStore`] and repair over the
+//! socket). `experiments::store` measures durability under the
+//! Eq. III.1 churn model.
 
 pub mod analysis;
+pub mod anyhow;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -32,7 +72,9 @@ pub mod proto;
 pub mod routing;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod util;
+pub mod xla;
 
 /// The paper's target fraction of lookups that may take more than one hop
 /// (`f`, §IV-D). 1% throughout the evaluation.

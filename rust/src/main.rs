@@ -1,1 +1,1 @@
-fn main() -> anyhow::Result<()> { d1ht::cli::main() }
+fn main() -> d1ht::anyhow::Result<()> { d1ht::cli::main() }

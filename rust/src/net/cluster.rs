@@ -5,7 +5,7 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use crate::net::peer::{spawn, NetPeerCfg, PeerHandle};
 use crate::util::rng::Rng;
@@ -37,6 +37,23 @@ impl WorkloadReport {
     pub fn throughput(&self) -> f64 {
         self.lookups as f64 / self.wall.as_secs_f64().max(1e-9)
     }
+}
+
+/// Outcome of a real-socket KV workload ([`Cluster::run_kv_workload`]).
+#[derive(Debug, Clone, Default)]
+pub struct KvReport {
+    /// The generated (key, value) pairs, for later re-verification
+    /// (e.g. after churn).
+    pub pairs: Vec<(u64, Vec<u8>)>,
+    pub puts_ok: usize,
+    pub gets_ok: usize,
+    pub gets_missing: usize,
+    /// Reads that returned bytes differing from what was stored.
+    pub corrupted: usize,
+    pub wall: Duration,
+    /// Replicate/Handoff messages across the cluster (replication +
+    /// repair traffic).
+    pub repl_msgs: u64,
 }
 
 impl Cluster {
@@ -119,6 +136,67 @@ impl Cluster {
         rep
     }
 
+    /// Store `pairs` through random origins; returns how many puts were
+    /// confirmed.
+    pub fn put_pairs(&self, pairs: &[(u64, Vec<u8>)], seed: u64) -> usize {
+        let mut rng = Rng::new(seed);
+        let mut ok = 0;
+        for (k, v) in pairs {
+            let origin = &self.peers[rng.below(self.peers.len() as u64) as usize];
+            if origin.put(*k, v.clone()).unwrap_or(false) {
+                ok += 1;
+            }
+        }
+        ok
+    }
+
+    /// Read `pairs` back through random origins; returns
+    /// `(found-and-correct, missing, corrupted)`.
+    pub fn get_pairs(&self, pairs: &[(u64, Vec<u8>)], seed: u64) -> (usize, usize, usize) {
+        let mut rng = Rng::new(seed);
+        let (mut ok, mut missing, mut bad) = (0, 0, 0);
+        for (k, v) in pairs {
+            let origin = &self.peers[rng.below(self.peers.len() as u64) as usize];
+            match origin.get(*k).ok().flatten() {
+                Some(got) if &got == v => ok += 1,
+                Some(_) => bad += 1,
+                None => missing += 1,
+            }
+        }
+        (ok, missing, bad)
+    }
+
+    /// Deterministic KV workload: generate `count` pairs, put them all,
+    /// read them all back from different origins.
+    pub fn run_kv_workload(&self, count: usize, value_len: usize, seed: u64) -> KvReport {
+        let mut rng = Rng::new(seed);
+        let pairs: Vec<(u64, Vec<u8>)> = (0..count)
+            .map(|_| {
+                let k = rng.next_u64();
+                let v: Vec<u8> = k.to_be_bytes().iter().cycle().take(value_len).copied().collect();
+                (k, v)
+            })
+            .collect();
+        let t0 = Instant::now();
+        let puts_ok = self.put_pairs(&pairs, seed ^ 1);
+        let (gets_ok, gets_missing, corrupted) = self.get_pairs(&pairs, seed ^ 2);
+        let mut rep = KvReport {
+            pairs,
+            puts_ok,
+            gets_ok,
+            gets_missing,
+            corrupted,
+            wall: t0.elapsed(),
+            repl_msgs: 0,
+        };
+        for p in &self.peers {
+            if let Ok(s) = p.stats() {
+                rep.repl_msgs += s.store_repl_sent;
+            }
+        }
+        rep
+    }
+
     /// Kill (SIGKILL-style) one random peer and gracefully leave another,
     /// as in the §VII-A half/half churn. Returns how many were removed.
     pub fn churn_step(&mut self, seed: u64) -> usize {
@@ -147,6 +225,26 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_workload_end_to_end_with_failure() {
+        let mut cluster = Cluster::start(5, 0.01).expect("start");
+        assert!(cluster.await_convergence(Duration::from_secs(10)), "tables converge");
+        let rep = cluster.run_kv_workload(40, 16, 11);
+        assert_eq!(rep.puts_ok, 40, "all puts confirmed");
+        assert_eq!(rep.gets_ok, 40, "all values read back");
+        assert_eq!(rep.corrupted, 0);
+        assert!(rep.repl_msgs > 0, "writes replicate");
+        // SIGKILL one non-boot peer; R=3 of 5 keeps every key alive, and
+        // anti-entropy re-creates the lost copies
+        let pairs = rep.pairs.clone();
+        cluster.peers.remove(2).kill();
+        std::thread::sleep(Duration::from_millis(3000));
+        let (ok, missing, bad) = cluster.get_pairs(&pairs, 99);
+        assert_eq!(bad, 0, "no corrupted values");
+        assert!(ok >= 39, "{ok}/40 retrievable after failure (missing {missing})");
+        cluster.shutdown();
+    }
 
     #[test]
     fn small_cluster_end_to_end() {

@@ -20,5 +20,5 @@ pub mod peer;
 pub mod transport;
 pub mod wire;
 
-pub use cluster::Cluster;
+pub use cluster::{Cluster, KvReport};
 pub use peer::{NetPeerCfg, PeerHandle, PeerStats};

@@ -11,14 +11,16 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
+use crate::config::TransportTuning;
 use crate::edra::Edra;
 use crate::id::{space, Id};
 use crate::net::transport::Transport;
 use crate::net::wire::NetMsg;
 use crate::proto::messages::Event;
 use crate::routing::Table;
+use crate::store::{replica_set, KvStore};
 use crate::util::stats::Traffic;
 
 #[derive(Debug, Clone)]
@@ -31,11 +33,26 @@ pub struct NetPeerCfg {
     /// command, target polls its socket), so this is the latency floor
     /// of the runtime — see EXPERIMENTS.md §Perf iteration 1.
     pub tick: Duration,
+    /// Store replication factor R (owner + R−1 ring successors).
+    pub replication: usize,
+    /// Store anti-entropy period: holders re-push keys whose replica
+    /// set changed (version-idempotent, so repeats are harmless).
+    pub repair_every: Duration,
+    /// Reliable-UDP knobs (RTO, retries, dedup bounds) — load from a
+    /// config file with [`TransportTuning::from_config`].
+    pub transport: TransportTuning,
 }
 
 impl Default for NetPeerCfg {
     fn default() -> Self {
-        NetPeerCfg { f: crate::DEFAULT_F, bootstrap: None, tick: Duration::from_millis(1) }
+        NetPeerCfg {
+            f: crate::DEFAULT_F,
+            bootstrap: None,
+            tick: Duration::from_millis(1),
+            replication: 3,
+            repair_every: Duration::from_millis(1000),
+            transport: TransportTuning::default(),
+        }
     }
 }
 
@@ -47,13 +64,20 @@ pub struct PeerStats {
     pub lookups_sent: u64,
     pub lookups_one_hop: u64,
     pub lookups_retried: u64,
+    /// Values held in the local KV store.
+    pub keys_stored: usize,
+    /// Replicate/Handoff messages sent by write replication + repair.
+    pub store_repl_sent: u64,
     pub uptime: Duration,
 }
 
 enum Cmd {
     Lookup { target: u64, reply: Sender<LookupOutcome> },
+    Put { key: u64, value: Vec<u8>, reply: Sender<bool> },
+    Get { key: u64, reply: Sender<Option<Vec<u8>>> },
+    Remove { key: u64, reply: Sender<bool> },
     Stats { reply: Sender<PeerStats> },
-    /// Graceful leave (notify successor) then stop.
+    /// Graceful leave (notify successor, hand off stored keys) then stop.
     Leave,
     /// SIGKILL-style stop: no flush, no notice.
     Kill,
@@ -77,6 +101,29 @@ impl PeerHandle {
     pub fn lookup(&self, target: u64) -> Result<LookupOutcome> {
         let (tx, rx) = mpsc::channel();
         self.cmd.send(Cmd::Lookup { target, reply: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
+    /// Store `value` under `key` (routed to the key's owner; replicated
+    /// to R−1 successors). Returns whether the write was confirmed.
+    pub fn put(&self, key: u64, value: Vec<u8>) -> Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd.send(Cmd::Put { key, value, reply: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
+    /// Read the value under `key` (owner first, then surviving replicas).
+    pub fn get(&self, key: u64) -> Result<Option<Vec<u8>>> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd.send(Cmd::Get { key, reply: tx })?;
+        Ok(rx.recv_timeout(Duration::from_secs(10))?)
+    }
+
+    /// Delete `key` (routed to its owner; replicated as a tombstone so
+    /// repair cannot resurrect the old value).
+    pub fn remove(&self, key: u64) -> Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.cmd.send(Cmd::Remove { key, reply: tx })?;
         Ok(rx.recv_timeout(Duration::from_secs(10))?)
     }
 
@@ -113,7 +160,7 @@ impl Drop for PeerHandle {
 
 /// Spawn a peer thread; blocks until it has joined (received its table).
 pub fn spawn(cfg: NetPeerCfg) -> Result<PeerHandle> {
-    let transport = Transport::bind_local()?;
+    let transport = Transport::bind_local_with(cfg.transport)?;
     let addr = transport.addr();
     let id = space::peer_id(&std::net::SocketAddr::V4(addr));
     let (cmd_tx, cmd_rx) = mpsc::channel();
@@ -146,6 +193,17 @@ struct PeerState {
     lookups_sent: u64,
     lookups_one_hop: u64,
     lookups_retried: u64,
+    /// Replicated KV state (store layer).
+    replication: usize,
+    kv: KvStore,
+    /// Replica set each held key was last pushed to; anti-entropy only
+    /// re-pushes when membership changed it.
+    repair_sets: BTreeMap<Id, Vec<Id>>,
+    /// Keys we no longer replicate, mapped to the seqs of the handoff
+    /// `Replicate`s in flight; dropped once all are acknowledged.
+    handoff_pending: BTreeMap<Id, Vec<u32>>,
+    last_repair: Instant,
+    store_repl_sent: u64,
 }
 
 /// How long an admitting successor keeps directly forwarding events to a
@@ -194,6 +252,161 @@ impl PeerState {
     fn now_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
+
+    /// Version for a fresh local write: last-writer-wins hybrid clock.
+    /// Wall-clock micros dominate so a write accepted by a freshly
+    /// joined owner (whose `kv` is still empty) supersedes the older
+    /// versions long-standing replicas hold — otherwise anti-entropy
+    /// would revert the acknowledged write. The local counter is the
+    /// floor, keeping same-peer writes strictly monotonic even if the
+    /// clock steps backwards.
+    fn write_version(&self, kid: Id) -> u64 {
+        let micros = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        micros.max(self.kv.next_version(kid))
+    }
+
+    /// Store locally and push `Replicate` copies to the other members of
+    /// the key's replica set (write replication).
+    fn local_put(&mut self, tr: &mut Transport, kid: Id, bytes: Vec<u8>) {
+        let version = self.write_version(kid);
+        self.kv.put(kid, version, bytes.clone());
+        self.replicate_out(tr, kid, version, false, &bytes);
+    }
+
+    /// Record a delete locally and replicate the tombstone.
+    fn local_remove(&mut self, tr: &mut Transport, kid: Id) {
+        let version = self.write_version(kid);
+        self.kv.put_tombstone(kid, version);
+        self.replicate_out(tr, kid, version, true, &[]);
+    }
+
+    fn replicate_out(
+        &mut self,
+        tr: &mut Transport,
+        kid: Id,
+        version: u64,
+        tombstone: bool,
+        bytes: &[u8],
+    ) {
+        let set = replica_set(&self.table, kid, self.replication);
+        for rid in &set {
+            if *rid == self.me {
+                continue;
+            }
+            if let Some(&a) = self.members.get(rid) {
+                let seq = tr.fresh_seq();
+                tr.send(
+                    a,
+                    &NetMsg::Replicate {
+                        seq,
+                        key: kid.0,
+                        version,
+                        tombstone,
+                        value: bytes.to_vec(),
+                    },
+                )
+                .ok();
+                self.store_repl_sent += 1;
+            }
+        }
+        self.repair_sets.insert(kid, set);
+    }
+
+    /// Anti-entropy pass: every holder re-pushes keys whose replica set
+    /// changed since the last push. Version-idempotent receivers make
+    /// the redundancy harmless, and *every* holder pushing (not just the
+    /// owner) is what re-creates copies when the owner itself died.
+    ///
+    /// Keys we no longer replicate are handed to the current set and
+    /// dropped, so the store stays bounded under churn (matching the
+    /// simulator's repair semantics) instead of every ex-holder
+    /// re-pushing its whole history forever. The drop is deferred: the
+    /// local copy goes away only on a later pass, once every handoff
+    /// `Replicate` of the previous pass was acknowledged
+    /// ([`Transport::seq_confirmed`]) — an unconfirmed or undeliverable
+    /// handoff keeps the copy and retries.
+    fn repair_tick(&mut self, tr: &mut Transport) {
+        let keys: Vec<Id> = self.kv.iter().map(|(k, _)| *k).collect();
+        for kid in keys {
+            let set = replica_set(&self.table, kid, self.replication);
+            let still_ours = set.contains(&self.me);
+            if still_ours {
+                self.handoff_pending.remove(&kid);
+                if self.repair_sets.get(&kid) == Some(&set) {
+                    continue;
+                }
+            } else if let Some(seqs) = self.handoff_pending.get(&kid) {
+                if !seqs.is_empty() && seqs.iter().all(|s| tr.seq_confirmed(*s)) {
+                    // previous pass's handoff fully acknowledged: safe
+                    // to drop our copy
+                    self.kv.remove(kid);
+                    self.repair_sets.remove(&kid);
+                    self.handoff_pending.remove(&kid);
+                    continue;
+                }
+            }
+            let (version, tombstone, bytes) = {
+                let v = self.kv.get(kid).expect("key just listed");
+                (v.version, v.tombstone, v.bytes.clone())
+            };
+            let mut seqs = Vec::new();
+            for rid in &set {
+                if *rid == self.me {
+                    continue;
+                }
+                if let Some(&a) = self.members.get(rid) {
+                    let seq = tr.fresh_seq();
+                    tr.send(
+                        a,
+                        &NetMsg::Replicate {
+                            seq,
+                            key: kid.0,
+                            version,
+                            tombstone,
+                            value: bytes.clone(),
+                        },
+                    )
+                    .ok();
+                    seqs.push(seq);
+                    self.store_repl_sent += 1;
+                }
+            }
+            if still_ours {
+                self.repair_sets.insert(kid, set);
+            } else {
+                // re-attempt the handoff; confirmation is checked on
+                // the next pass
+                self.handoff_pending.insert(kid, seqs);
+            }
+        }
+    }
+}
+
+/// Bulk-transfer `pairs` in datagram-sized chunks, budgeted by encoded
+/// bytes (not entry count): the 65,507-byte UDP payload limit is what
+/// actually bounds a Handoff, and values are caller-sized.
+fn send_handoff(tr: &mut Transport, to: SocketAddrV4, pairs: Vec<(u64, u64, bool, Vec<u8>)>) {
+    const BUDGET: usize = 48_000; // margin under the UDP max + recv_buf
+    let mut chunk: Vec<(u64, u64, bool, Vec<u8>)> = Vec::new();
+    let mut used = 0usize;
+    for pair in pairs {
+        // key + version + tombstone + len + bytes
+        let sz = 8 + 8 + 1 + 4 + pair.3.len();
+        if !chunk.is_empty() && used + sz > BUDGET {
+            let seq = tr.fresh_seq();
+            tr.send(to, &NetMsg::Handoff { seq, pairs: std::mem::take(&mut chunk) }).ok();
+            used = 0;
+        }
+        used += sz;
+        chunk.push(pair);
+    }
+    if !chunk.is_empty() {
+        let seq = tr.fresh_seq();
+        tr.send(to, &NetMsg::Handoff { seq, pairs: chunk }).ok();
+    }
 }
 
 fn run_peer(
@@ -218,6 +431,12 @@ fn run_peer(
         lookups_sent: 0,
         lookups_one_hop: 0,
         lookups_retried: 0,
+        replication: cfg.replication.max(1),
+        kv: KvStore::new(),
+        repair_sets: BTreeMap::new(),
+        handoff_pending: BTreeMap::new(),
+        last_repair: Instant::now(),
+        store_repl_sent: 0,
     };
 
     // ---- join protocol (§VI): ask bootstrap, successor sends table ----
@@ -238,7 +457,7 @@ fn run_peer(
             std::thread::sleep(Duration::from_millis(2));
         }
         if !joined {
-            let _ = ready.send(Err(anyhow::anyhow!("join timed out")));
+            let _ = ready.send(Err(crate::anyhow::anyhow!("join timed out")));
             return;
         }
     }
@@ -247,6 +466,12 @@ fn run_peer(
     // ---- main loop ----
     // nonce -> (sent_at, reply channel, target key, hops so far, peer asked)
     let mut pending_lookups: BTreeMap<u32, (Instant, Sender<LookupOutcome>, u64, u32, SocketAddrV4)> =
+        BTreeMap::new();
+    // nonce -> (sent_at, reply, key, Some(value)=put / None=remove, attempts)
+    let mut pending_writes: BTreeMap<u32, (Instant, Sender<bool>, u64, Option<Vec<u8>>, u32)> =
+        BTreeMap::new();
+    // nonce -> (attempt_sent_at, reply, key, replica IDs already asked)
+    let mut pending_gets: BTreeMap<u32, (Instant, Sender<Option<Vec<u8>>>, u64, Vec<Id>)> =
         BTreeMap::new();
     let mut nonce = 0u32;
     loop {
@@ -290,6 +515,24 @@ fn run_peer(
                     });
                 }
             }
+            Cmd::Put { key, value, reply } => {
+                start_write(
+                    &mut st,
+                    &mut tr,
+                    &mut pending_writes,
+                    &mut nonce,
+                    key,
+                    Some(value),
+                    0,
+                    reply,
+                );
+            }
+            Cmd::Get { key, reply } => {
+                start_get(&mut st, &mut tr, &mut pending_gets, &mut nonce, key, Vec::new(), reply);
+            }
+            Cmd::Remove { key, reply } => {
+                start_write(&mut st, &mut tr, &mut pending_writes, &mut nonce, key, None, 0, reply);
+            }
             Cmd::Stats { reply } => {
                 let _ = reply.send(PeerStats {
                     id: st.me.0,
@@ -298,18 +541,29 @@ fn run_peer(
                     lookups_sent: st.lookups_sent,
                     lookups_one_hop: st.lookups_one_hop,
                     lookups_retried: st.lookups_retried,
+                    keys_stored: st.kv.live_len(),
+                    store_repl_sent: st.store_repl_sent,
                     uptime: st.started.elapsed(),
                 });
             }
             Cmd::Leave => {
-                // graceful: tell the successor so it can announce
+                // graceful: hand the stored keys to the successor, then
+                // tell it we are leaving so it can announce
                 if let Some(sid) = st.table.successor_excl(st.me) {
                     if sid != st.me {
                         if let Some(&sa) = st.members.get(&sid) {
+                            let pairs: Vec<(u64, u64, bool, Vec<u8>)> = st
+                                .kv
+                                .iter()
+                                .map(|(k, v)| (k.0, v.version, v.tombstone, v.bytes.clone()))
+                                .collect();
+                            if !pairs.is_empty() {
+                                send_handoff(&mut tr, sa, pairs);
+                            }
                             let seq = tr.fresh_seq();
                             tr.send(sa, &NetMsg::LeaveNotice { seq, leaver: addr }).ok();
-                            // give the ack a moment
-                            let end = Instant::now() + Duration::from_millis(300);
+                            // give the handoff + notice acks a moment
+                            let end = Instant::now() + Duration::from_millis(600);
                             while Instant::now() < end && tr.pending_count() > 0 {
                                 tr.poll();
                                 tr.tick_retransmit();
@@ -326,7 +580,17 @@ fn run_peer(
 
         // 2. socket
         for (from, msg) in tr.poll() {
-            handle_msg(&cfg, &mut st, &mut tr, &mut pending_lookups, from, msg);
+            handle_msg(
+                &cfg,
+                &mut st,
+                &mut tr,
+                &mut pending_lookups,
+                &mut pending_writes,
+                &mut pending_gets,
+                &mut nonce,
+                from,
+                msg,
+            );
         }
 
         // 3. retransmission + failure inference. Rule 5 designates one
@@ -454,6 +718,128 @@ fn run_peer(
                 hops: hops + 1,
             });
         }
+
+        // 7. store: write/get timeouts -> retry, and periodic anti-entropy
+        let expired_writes: Vec<u32> = pending_writes
+            .iter()
+            .filter(|(_, (t0, _, _, _, _))| now_i.duration_since(*t0) > LOOKUP_TIMEOUT)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in expired_writes {
+            let (_, reply, key, value, attempts) = pending_writes.remove(&k).unwrap();
+            if attempts < 2 {
+                // the owner may have changed (or we may own the key now)
+                start_write(
+                    &mut st,
+                    &mut tr,
+                    &mut pending_writes,
+                    &mut nonce,
+                    key,
+                    value,
+                    attempts + 1,
+                    reply,
+                );
+            } else {
+                let _ = reply.send(false);
+            }
+        }
+        let expired_gets: Vec<u32> = pending_gets
+            .iter()
+            .filter(|(_, (t0, _, _, _))| now_i.duration_since(*t0) > 2 * LOOKUP_TIMEOUT)
+            .map(|(&k, _)| k)
+            .collect();
+        for k in expired_gets {
+            let (_, reply, key, asked) = pending_gets.remove(&k).unwrap();
+            // the timed-out target is already in `asked`; the next
+            // attempt gets a fresh deadline inside start_get
+            start_get(&mut st, &mut tr, &mut pending_gets, &mut nonce, key, asked, reply);
+        }
+        if st.last_repair.elapsed() >= cfg.repair_every && !st.kv.is_empty() {
+            st.last_repair = Instant::now();
+            st.repair_tick(&mut tr);
+        }
+    }
+}
+
+/// Ask the next replica candidate (owner first) for `key`, serving
+/// locally where we are that candidate. `asked` tracks replica IDs by
+/// identity, not position — the candidate list is recomputed per
+/// attempt and may shift under churn, so a positional cursor could
+/// skip the only live holder. Reports a miss when the recomputed set
+/// holds no unasked candidate; each attempt gets its own deadline.
+fn start_get(
+    st: &mut PeerState,
+    tr: &mut Transport,
+    pending_gets: &mut BTreeMap<u32, (Instant, Sender<Option<Vec<u8>>>, u64, Vec<Id>)>,
+    nonce: &mut u32,
+    key: u64,
+    mut asked: Vec<Id>,
+    reply: Sender<Option<Vec<u8>>>,
+) {
+    let kid = Id(key);
+    let cands = replica_set(&st.table, kid, st.replication);
+    for target in cands {
+        if asked.contains(&target) {
+            continue;
+        }
+        if target == st.me {
+            if let Some(v) = st.kv.get(kid) {
+                // a local tombstone is an authoritative delete: report
+                // absent without consulting (possibly stale) replicas
+                let _ = reply.send(if v.is_live() { Some(v.bytes.clone()) } else { None });
+                return;
+            }
+            asked.push(target);
+            continue;
+        }
+        if let Some(&a) = st.members.get(&target) {
+            *nonce = nonce.wrapping_add(1).max(1);
+            tr.send(a, &NetMsg::Get { nonce: *nonce, key }).ok();
+            asked.push(target);
+            pending_gets.insert(*nonce, (Instant::now(), reply, key, asked));
+            return;
+        }
+        asked.push(target);
+    }
+    let _ = reply.send(None);
+}
+
+/// Route a store write — `Some(value)` is a put, `None` a remove — to
+/// the key's owner, serving locally when we own it. Shared by the
+/// command arms and the timeout sweep so retry behavior cannot diverge
+/// between puts and removes.
+#[allow(clippy::too_many_arguments)]
+fn start_write(
+    st: &mut PeerState,
+    tr: &mut Transport,
+    pending_writes: &mut BTreeMap<u32, (Instant, Sender<bool>, u64, Option<Vec<u8>>, u32)>,
+    nonce: &mut u32,
+    key: u64,
+    value: Option<Vec<u8>>,
+    attempts: u32,
+    reply: Sender<bool>,
+) {
+    let kid = Id(key);
+    match st.owner_of(kid) {
+        Some((oid, _)) if oid == st.me => {
+            match &value {
+                Some(bytes) => st.local_put(tr, kid, bytes.clone()),
+                None => st.local_remove(tr, kid),
+            }
+            let _ = reply.send(true);
+        }
+        Some((_, oaddr)) => {
+            *nonce = nonce.wrapping_add(1).max(1);
+            let msg = match &value {
+                Some(bytes) => NetMsg::Put { nonce: *nonce, key, value: bytes.clone() },
+                None => NetMsg::Remove { nonce: *nonce, key },
+            };
+            tr.send(oaddr, &msg).ok();
+            pending_writes.insert(*nonce, (Instant::now(), reply, key, value, attempts));
+        }
+        None => {
+            let _ = reply.send(false);
+        }
     }
 }
 
@@ -464,11 +850,15 @@ fn event_addr(st: &PeerState, ev: &Event) -> Option<SocketAddrV4> {
         .or_else(|| st.departed.get(&ev.peer).copied())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_msg(
     _cfg: &NetPeerCfg,
     st: &mut PeerState,
     tr: &mut Transport,
     pending_lookups: &mut BTreeMap<u32, (Instant, Sender<LookupOutcome>, u64, u32, SocketAddrV4)>,
+    pending_writes: &mut BTreeMap<u32, (Instant, Sender<bool>, u64, Option<Vec<u8>>, u32)>,
+    pending_gets: &mut BTreeMap<u32, (Instant, Sender<Option<Vec<u8>>>, u64, Vec<Id>)>,
+    nonce: &mut u32,
     from: SocketAddrV4,
     msg: NetMsg,
 ) {
@@ -551,6 +941,75 @@ fn handle_msg(
                 st.last_pred_seen = Instant::now();
             }
         }
+        NetMsg::Put { nonce: n, key, value } => {
+            // We are (believed to be) the owner: store, replicate,
+            // confirm. A stale sender table may route here wrongly —
+            // accept anyway; anti-entropy re-places the key.
+            st.local_put(tr, Id(key), value);
+            tr.send(from, &NetMsg::PutResp { nonce: n, ok: true }).ok();
+        }
+        NetMsg::PutResp { nonce: n, ok } => {
+            if let Some((_, reply, _, _, _)) = pending_writes.remove(&n) {
+                let _ = reply.send(ok);
+            }
+        }
+        NetMsg::Get { nonce: n, key } => {
+            // a tombstone answers found=false with its version, so the
+            // asker knows the deletion is authoritative and stops the
+            // replica fallback
+            let resp = match st.kv.get(Id(key)) {
+                Some(v) if v.is_live() => NetMsg::GetResp {
+                    nonce: n,
+                    found: true,
+                    version: v.version,
+                    value: v.bytes.clone(),
+                },
+                Some(v) => {
+                    NetMsg::GetResp { nonce: n, found: false, version: v.version, value: vec![] }
+                }
+                None => NetMsg::GetResp { nonce: n, found: false, version: 0, value: vec![] },
+            };
+            tr.send(from, &resp).ok();
+        }
+        NetMsg::GetResp { nonce: n, found, version, value } => {
+            if let Some((_, reply, key, asked)) = pending_gets.remove(&n) {
+                if found {
+                    let _ = reply.send(Some(value));
+                } else if version > 0 {
+                    // authoritative tombstone: the key was deleted
+                    let _ = reply.send(None);
+                } else {
+                    // plain miss at this replica: fall through to the
+                    // next unasked one
+                    start_get(st, tr, pending_gets, nonce, key, asked, reply);
+                }
+            }
+        }
+        NetMsg::Remove { nonce: n, key } => {
+            st.local_remove(tr, Id(key));
+            tr.send(from, &NetMsg::RemoveResp { nonce: n, ok: true }).ok();
+        }
+        NetMsg::RemoveResp { nonce: n, ok } => {
+            if let Some((_, reply, _, _, _)) = pending_writes.remove(&n) {
+                let _ = reply.send(ok);
+            }
+        }
+        NetMsg::Replicate { key, version, tombstone, value, .. } => {
+            if tombstone {
+                st.kv.put_tombstone(Id(key), version);
+            } else {
+                st.kv.put(Id(key), version, value);
+            }
+        }
+        NetMsg::Handoff { pairs, .. } => {
+            for (key, version, tombstone, value) in pairs {
+                if tombstone {
+                    st.kv.put_tombstone(Id(key), version);
+                } else {
+                    st.kv.put(Id(key), version, value);
+                }
+            }
+        }
         NetMsg::Ack { .. } => {}
     }
 }
@@ -571,6 +1030,16 @@ fn admit(st: &mut PeerState, tr: &mut Transport, joiner: SocketAddrV4) {
         st.edra.detect_local(Event::join(jid), n, now);
         // §VI: keep the joiner fed with events for a grace period
         st.recent_joiners.push((joiner, Instant::now()));
+        // store layer: hand over the keys the joiner now owns/replicates
+        let pairs: Vec<(u64, u64, bool, Vec<u8>)> = st
+            .kv
+            .iter()
+            .filter(|(k, _)| replica_set(&st.table, **k, st.replication).contains(&jid))
+            .map(|(k, v)| (k.0, v.version, v.tombstone, v.bytes.clone()))
+            .collect();
+        if !pairs.is_empty() {
+            send_handoff(tr, joiner, pairs);
+        }
     }
 }
 
@@ -587,6 +1056,60 @@ mod tests {
         let s = p.stats().unwrap();
         assert_eq!(s.table_size, 1);
         p.kill();
+    }
+
+    #[test]
+    fn single_peer_put_get_remove() {
+        let p = spawn(NetPeerCfg::default()).expect("spawn");
+        assert!(p.put(42, b"hello".to_vec()).unwrap());
+        assert_eq!(p.get(42).unwrap().as_deref(), Some(b"hello".as_slice()));
+        assert_eq!(p.get(43).unwrap(), None);
+        // overwrite wins
+        assert!(p.put(42, b"world".to_vec()).unwrap());
+        assert_eq!(p.get(42).unwrap().as_deref(), Some(b"world".as_slice()));
+        let s = p.stats().unwrap();
+        assert_eq!(s.keys_stored, 1);
+        // remove leaves a tombstone: reads see absence, stats drop
+        assert!(p.remove(42).unwrap());
+        assert_eq!(p.get(42).unwrap(), None);
+        assert_eq!(p.stats().unwrap().keys_stored, 0);
+        // re-put after delete works (version advances past the tombstone)
+        assert!(p.put(42, b"again".to_vec()).unwrap());
+        assert_eq!(p.get(42).unwrap().as_deref(), Some(b"again".as_slice()));
+        p.kill();
+    }
+
+    #[test]
+    fn replicated_put_survives_owner_departure() {
+        let boot = spawn(NetPeerCfg::default()).expect("boot");
+        let cfg = NetPeerCfg { bootstrap: Some(boot.addr), ..Default::default() };
+        let mut peers = vec![boot];
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(150));
+            peers.push(spawn(cfg.clone()).expect("join"));
+        }
+        std::thread::sleep(Duration::from_millis(1500));
+        // write 20 keys through random-ish origins
+        for k in 0u64..20 {
+            let origin = &peers[(k % 4) as usize];
+            assert!(origin.put(k.wrapping_mul(0x9E3779B9), vec![k as u8; 8]).unwrap());
+        }
+        // kill one non-boot peer abruptly (SIGKILL half of §VII-A churn)
+        peers.remove(2).kill();
+        // let retransmit-death detection + anti-entropy re-place copies
+        std::thread::sleep(Duration::from_millis(3000));
+        let mut found = 0;
+        for k in 0u64..20 {
+            let origin = &peers[(k % 3) as usize];
+            if let Some(v) = origin.get(k.wrapping_mul(0x9E3779B9)).unwrap() {
+                assert_eq!(v, vec![k as u8; 8], "value intact for key {k}");
+                found += 1;
+            }
+        }
+        assert!(found >= 19, "{found}/20 keys survive one failure with R=3");
+        for p in peers {
+            p.kill();
+        }
     }
 
     #[test]

@@ -7,13 +7,11 @@ use std::collections::HashMap;
 use std::net::{SocketAddr, SocketAddrV4, UdpSocket};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
+use crate::config::TransportTuning;
 use crate::net::wire::{decode, encode, NetMsg};
 use crate::util::stats::Traffic;
-
-pub const RTO: Duration = Duration::from_millis(250);
-pub const MAX_RETRIES: u32 = 4;
 
 struct Pending {
     to: SocketAddrV4,
@@ -29,15 +27,28 @@ pub struct Transport {
     next_seq: u32,
     pending: HashMap<u32, Pending>,
     /// Recently-seen reliable seqs per source, to drop duplicates caused
-    /// by retransmitted-but-acked messages.
+    /// by retransmitted-but-acked messages. Bounded by
+    /// `tuning.seen_cap` / `tuning.seen_expiry` (a late duplicate after
+    /// eviction costs one re-delivery, never unbounded memory).
     seen: HashMap<(SocketAddrV4, u32), Instant>,
+    /// Reliable seqs whose retries were exhausted (destination presumed
+    /// dead) — lets callers distinguish "acked" from "gave up". Entries
+    /// age out (callers query within a couple of repair passes).
+    gave_up: HashMap<u32, Instant>,
+    tuning: TransportTuning,
     pub traffic: Traffic,
     recv_buf: Vec<u8>,
 }
 
 impl Transport {
-    /// Bind to an ephemeral loopback port.
+    /// Bind to an ephemeral loopback port with default tuning.
     pub fn bind_local() -> Result<Self> {
+        Self::bind_local_with(TransportTuning::default())
+    }
+
+    /// Bind with explicit [`TransportTuning`] (tests and deployments
+    /// tune RTO/retries via `config.rs`).
+    pub fn bind_local_with(tuning: TransportTuning) -> Result<Self> {
         let sock = UdpSocket::bind("127.0.0.1:0").context("bind")?;
         sock.set_nonblocking(true).context("nonblocking")?;
         let addr = match sock.local_addr()? {
@@ -50,6 +61,8 @@ impl Transport {
             next_seq: 1,
             pending: HashMap::new(),
             seen: HashMap::new(),
+            gave_up: HashMap::new(),
+            tuning,
             traffic: Traffic::default(),
             recv_buf: vec![0u8; 65536],
         })
@@ -57,6 +70,15 @@ impl Transport {
 
     pub fn addr(&self) -> SocketAddrV4 {
         self.addr
+    }
+
+    pub fn tuning(&self) -> TransportTuning {
+        self.tuning
+    }
+
+    /// Diagnostics: current size of the duplicate-suppression map.
+    pub fn seen_len(&self) -> usize {
+        self.seen.len()
     }
 
     pub fn fresh_seq(&mut self) -> u32 {
@@ -101,10 +123,10 @@ impl Transport {
                                 let _ = self.sock.send_to(&ack, from);
                                 let key = (from, seq);
                                 let now = Instant::now();
-                                self.seen.retain(|_, t| now.duration_since(*t) < Duration::from_secs(30));
                                 if self.seen.insert(key, now).is_some() {
                                     continue; // duplicate delivery
                                 }
+                                self.bound_seen(now);
                             }
                             out.push((from, other));
                         }
@@ -118,6 +140,23 @@ impl Transport {
         out
     }
 
+    /// Keep the duplicate-suppression map bounded: purge expired
+    /// entries when over the cap, then — if a burst of distinct reliable
+    /// messages still overflows it — evict the oldest half.
+    fn bound_seen(&mut self, now: Instant) {
+        if self.seen.len() <= self.tuning.seen_cap {
+            return;
+        }
+        let expiry = self.tuning.seen_expiry;
+        self.seen.retain(|_, t| now.duration_since(*t) < expiry);
+        if self.seen.len() > self.tuning.seen_cap {
+            let mut times: Vec<Instant> = self.seen.values().copied().collect();
+            times.sort_unstable();
+            let cutoff = times[times.len() / 2];
+            self.seen.retain(|_, t| *t > cutoff);
+        }
+    }
+
     /// Retransmit overdue reliable messages; returns destinations that
     /// exhausted their retries (presumed dead).
     pub fn tick_retransmit(&mut self) -> Vec<SocketAddrV4> {
@@ -125,8 +164,8 @@ impl Transport {
         let mut dead = Vec::new();
         let mut drop_seqs = Vec::new();
         for (&seq, p) in self.pending.iter_mut() {
-            if now.duration_since(p.sent_at) >= RTO {
-                if p.retries >= MAX_RETRIES {
+            if now.duration_since(p.sent_at) >= self.tuning.rto {
+                if p.retries >= self.tuning.max_retries {
                     dead.push(p.to);
                     drop_seqs.push(seq);
                 } else {
@@ -139,12 +178,24 @@ impl Transport {
         }
         for s in drop_seqs {
             self.pending.remove(&s);
+            self.gave_up.insert(s, now);
+        }
+        // age out give-up records (callers query them within a couple of
+        // repair passes; a minute is generous) so the map stays bounded
+        if self.gave_up.len() > 1024 {
+            self.gave_up.retain(|_, t| now.duration_since(*t) < Duration::from_secs(60));
         }
         dead
     }
 
     pub fn pending_count(&self) -> usize {
         self.pending.len()
+    }
+
+    /// True iff reliable `seq` was acknowledged by its destination —
+    /// i.e. it is no longer pending and did not exhaust its retries.
+    pub fn seq_confirmed(&self, seq: u32) -> bool {
+        !self.pending.contains_key(&seq) && !self.gave_up.contains_key(&seq)
     }
 }
 
@@ -203,8 +254,8 @@ mod tests {
         let seq = a.fresh_seq();
         a.send(dead_dst, &NetMsg::LeaveNotice { seq, leaver: dead_dst }).unwrap();
         let mut dead = Vec::new();
-        for _ in 0..(MAX_RETRIES + 2) {
-            std::thread::sleep(RTO);
+        for _ in 0..(a.tuning().max_retries + 2) {
+            std::thread::sleep(a.tuning().rto);
             dead = a.tick_retransmit();
             a.poll();
             if !dead.is_empty() {
@@ -225,6 +276,45 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         let got = b.poll();
         assert_eq!(got.len(), 1, "duplicate dropped");
+    }
+
+    #[test]
+    fn tuning_is_configurable() {
+        let t = TransportTuning { rto: Duration::from_millis(30), max_retries: 1, ..Default::default() };
+        let mut a = Transport::bind_local_with(t).unwrap();
+        assert_eq!(a.tuning().rto, Duration::from_millis(30));
+        // a 1-retry transport gives up fast on a dead destination
+        let dead_dst = Transport::bind_local().unwrap().addr();
+        let seq = a.fresh_seq();
+        a.send(dead_dst, &NetMsg::LeaveNotice { seq, leaver: dead_dst }).unwrap();
+        let mut dead = Vec::new();
+        for _ in 0..10 {
+            std::thread::sleep(Duration::from_millis(35));
+            dead = a.tick_retransmit();
+            if !dead.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(dead, vec![dead_dst]);
+    }
+
+    #[test]
+    fn seen_map_stays_bounded() {
+        let mut a = Transport::bind_local().unwrap();
+        let tuning = TransportTuning { seen_cap: 8, ..Default::default() };
+        let mut b = Transport::bind_local_with(tuning).unwrap();
+        for seq in 1..=64u32 {
+            a.send(b.addr(), &NetMsg::Maintenance { seq, ttl: 0, joins: vec![], leaves: vec![] })
+                .unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut got = 0;
+        while Instant::now() < deadline && got < 64 {
+            got += b.poll().len();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(got, 64, "all distinct messages delivered");
+        assert!(b.seen_len() <= 8, "seen map bounded: {}", b.seen_len());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::net::{Ipv4Addr, SocketAddrV4};
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 pub const SYSTEM_ID: u32 = 0xD1B7_2014;
 
@@ -25,6 +25,24 @@ pub enum NetMsg {
     LeaveNotice { seq: u32, leaver: SocketAddrV4 },
     Probe { nonce: u32 },
     ProbeReply { nonce: u32 },
+    /// Store a value at the key's owner (store layer). Application-level
+    /// retry: the owner confirms with `PutResp`.
+    Put { nonce: u32, key: u64, value: Vec<u8> },
+    PutResp { nonce: u32, ok: bool },
+    /// Read a value; the target answers from its local store only.
+    Get { nonce: u32, key: u64 },
+    GetResp { nonce: u32, found: bool, version: u64, value: Vec<u8> },
+    /// Delete a key at its owner; replicated as a tombstone so
+    /// anti-entropy cannot resurrect the old value.
+    Remove { nonce: u32, key: u64 },
+    RemoveResp { nonce: u32, ok: bool },
+    /// Owner-to-replica copy (write replication and churn repair);
+    /// reliable, version-idempotent at the receiver. `tombstone` carries
+    /// a delete (empty value).
+    Replicate { seq: u32, key: u64, version: u64, tombstone: bool, value: Vec<u8> },
+    /// Bulk ownership transfer on join/leave:
+    /// (key, version, tombstone, value).
+    Handoff { seq: u32, pairs: Vec<(u64, u64, bool, Vec<u8>)> },
 }
 
 const T_MAINT: u8 = 1;
@@ -36,6 +54,14 @@ const T_TABLE: u8 = 6;
 const T_LEAVE: u8 = 7;
 const T_PROBE: u8 = 8;
 const T_PROBE_REPLY: u8 = 9;
+const T_PUT: u8 = 10;
+const T_PUT_RESP: u8 = 11;
+const T_GET: u8 = 12;
+const T_GET_RESP: u8 = 13;
+const T_REPLICATE: u8 = 14;
+const T_HANDOFF: u8 = 15;
+const T_REMOVE: u8 = 16;
+const T_REMOVE_RESP: u8 = 17;
 
 impl NetMsg {
     /// Messages that require an acknowledgment + retransmission.
@@ -43,7 +69,9 @@ impl NetMsg {
         match self {
             NetMsg::Maintenance { seq, .. }
             | NetMsg::Table { seq, .. }
-            | NetMsg::LeaveNotice { seq, .. } => Some(*seq),
+            | NetMsg::LeaveNotice { seq, .. }
+            | NetMsg::Replicate { seq, .. }
+            | NetMsg::Handoff { seq, .. } => Some(*seq),
             _ => None,
         }
     }
@@ -52,6 +80,11 @@ impl NetMsg {
 fn push_addr(buf: &mut Vec<u8>, a: &SocketAddrV4) {
     buf.extend_from_slice(&a.ip().octets());
     buf.extend_from_slice(&a.port().to_be_bytes());
+}
+
+fn push_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    buf.extend_from_slice(&(b.len() as u32).to_be_bytes());
+    buf.extend_from_slice(b);
 }
 
 fn push_addrs(buf: &mut Vec<u8>, addrs: &[SocketAddrV4]) {
@@ -73,6 +106,14 @@ pub fn encode(msg: &NetMsg) -> Vec<u8> {
         NetMsg::LeaveNotice { seq, .. } => (T_LEAVE, *seq),
         NetMsg::Probe { nonce } => (T_PROBE, *nonce),
         NetMsg::ProbeReply { nonce } => (T_PROBE_REPLY, *nonce),
+        NetMsg::Put { nonce, .. } => (T_PUT, *nonce),
+        NetMsg::PutResp { nonce, .. } => (T_PUT_RESP, *nonce),
+        NetMsg::Get { nonce, .. } => (T_GET, *nonce),
+        NetMsg::GetResp { nonce, .. } => (T_GET_RESP, *nonce),
+        NetMsg::Remove { nonce, .. } => (T_REMOVE, *nonce),
+        NetMsg::RemoveResp { nonce, .. } => (T_REMOVE_RESP, *nonce),
+        NetMsg::Replicate { seq, .. } => (T_REPLICATE, *seq),
+        NetMsg::Handoff { seq, .. } => (T_HANDOFF, *seq),
     };
     buf.push(tag);
     buf.extend_from_slice(&seq.to_be_bytes());
@@ -89,6 +130,34 @@ pub fn encode(msg: &NetMsg) -> Vec<u8> {
         NetMsg::JoinReq { joiner } => push_addr(&mut buf, joiner),
         NetMsg::Table { addrs, .. } => push_addrs(&mut buf, addrs),
         NetMsg::LeaveNotice { leaver, .. } => push_addr(&mut buf, leaver),
+        NetMsg::Put { key, value, .. } => {
+            buf.extend_from_slice(&key.to_be_bytes());
+            push_bytes(&mut buf, value);
+        }
+        NetMsg::PutResp { ok, .. } => buf.push(*ok as u8),
+        NetMsg::Get { key, .. } => buf.extend_from_slice(&key.to_be_bytes()),
+        NetMsg::GetResp { found, version, value, .. } => {
+            buf.push(*found as u8);
+            buf.extend_from_slice(&version.to_be_bytes());
+            push_bytes(&mut buf, value);
+        }
+        NetMsg::Remove { key, .. } => buf.extend_from_slice(&key.to_be_bytes()),
+        NetMsg::RemoveResp { ok, .. } => buf.push(*ok as u8),
+        NetMsg::Replicate { key, version, tombstone, value, .. } => {
+            buf.extend_from_slice(&key.to_be_bytes());
+            buf.extend_from_slice(&version.to_be_bytes());
+            buf.push(*tombstone as u8);
+            push_bytes(&mut buf, value);
+        }
+        NetMsg::Handoff { pairs, .. } => {
+            buf.extend_from_slice(&(pairs.len() as u32).to_be_bytes());
+            for (k, v, tomb, bytes) in pairs {
+                buf.extend_from_slice(&k.to_be_bytes());
+                buf.extend_from_slice(&v.to_be_bytes());
+                buf.push(*tomb as u8);
+                push_bytes(&mut buf, bytes);
+            }
+        }
         NetMsg::Ack { .. } | NetMsg::Probe { .. } | NetMsg::ProbeReply { .. } => {}
     }
     buf
@@ -117,6 +186,38 @@ pub fn decode(buf: &[u8]) -> Result<NetMsg> {
         T_LEAVE => NetMsg::LeaveNotice { seq, leaver: r.addr()? },
         T_PROBE => NetMsg::Probe { nonce: seq },
         T_PROBE_REPLY => NetMsg::ProbeReply { nonce: seq },
+        T_PUT => NetMsg::Put { nonce: seq, key: r.u64()?, value: r.bytes()? },
+        T_PUT_RESP => NetMsg::PutResp { nonce: seq, ok: r.u8()? != 0 },
+        T_GET => NetMsg::Get { nonce: seq, key: r.u64()? },
+        T_GET_RESP => NetMsg::GetResp {
+            nonce: seq,
+            found: r.u8()? != 0,
+            version: r.u64()?,
+            value: r.bytes()?,
+        },
+        T_REMOVE => NetMsg::Remove { nonce: seq, key: r.u64()? },
+        T_REMOVE_RESP => NetMsg::RemoveResp { nonce: seq, ok: r.u8()? != 0 },
+        T_REPLICATE => NetMsg::Replicate {
+            seq,
+            key: r.u64()?,
+            version: r.u64()?,
+            tombstone: r.u8()? != 0,
+            value: r.bytes()?,
+        },
+        T_HANDOFF => {
+            let n = r.u32()? as usize;
+            // each entry costs >= 21 encoded bytes; bounding by the
+            // remaining buffer prevents an attacker-chosen count from
+            // driving a large preallocation off a tiny datagram
+            if n > r.remaining() / 21 {
+                bail!("implausible handoff count {n}");
+            }
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                pairs.push((r.u64()?, r.u64()?, r.u8()? != 0, r.bytes()?));
+            }
+            NetMsg::Handoff { seq, pairs }
+        }
         t => bail!("unknown type {t}"),
     })
 }
@@ -152,9 +253,14 @@ impl<'a> Rd<'a> {
         let port = self.u16()?;
         Ok(SocketAddrV4::new(Ipv4Addr::new(ip[0], ip[1], ip[2], ip[3]), port))
     }
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
     fn addrs(&mut self) -> Result<Vec<SocketAddrV4>> {
         let n = self.u32()? as usize;
-        if n > 1_000_000 {
+        // 6 encoded bytes per address; bound by the remaining buffer so
+        // a spoofed count cannot force a large preallocation
+        if n > self.remaining() / 6 {
             bail!("implausible count {n}");
         }
         let mut out = Vec::with_capacity(n);
@@ -162,6 +268,13 @@ impl<'a> Rd<'a> {
             out.push(self.addr()?);
         }
         Ok(out)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if n > 16 * 1024 * 1024 {
+            bail!("implausible value size {n}");
+        }
+        Ok(self.take(n)?.to_vec())
     }
 }
 
@@ -188,6 +301,47 @@ mod tests {
         rt(NetMsg::LeaveNotice { seq: 2, leaver: a(8) });
         rt(NetMsg::Probe { nonce: 3 });
         rt(NetMsg::ProbeReply { nonce: 3 });
+        rt(NetMsg::Put { nonce: 4, key: u64::MAX, value: vec![1, 2, 3] });
+        rt(NetMsg::PutResp { nonce: 4, ok: true });
+        rt(NetMsg::Get { nonce: 5, key: 99 });
+        rt(NetMsg::GetResp { nonce: 5, found: true, version: 7, value: vec![9; 64] });
+        rt(NetMsg::GetResp { nonce: 6, found: false, version: 0, value: vec![] });
+        rt(NetMsg::Remove { nonce: 7, key: 123 });
+        rt(NetMsg::RemoveResp { nonce: 7, ok: false });
+        rt(NetMsg::Replicate { seq: 8, key: 1, version: 2, tombstone: false, value: vec![0xAB; 16] });
+        rt(NetMsg::Replicate { seq: 10, key: 1, version: 3, tombstone: true, value: vec![] });
+        rt(NetMsg::Handoff {
+            seq: 9,
+            pairs: vec![(1, 1, false, vec![1]), (2, 3, true, vec![])],
+        });
+    }
+
+    #[test]
+    fn store_reliability_classification() {
+        assert_eq!(
+            NetMsg::Replicate { seq: 5, key: 1, version: 1, tombstone: false, value: vec![] }
+                .reliable_seq(),
+            Some(5)
+        );
+        assert_eq!(NetMsg::Handoff { seq: 6, pairs: vec![] }.reliable_seq(), Some(6));
+        assert_eq!(NetMsg::Put { nonce: 1, key: 2, value: vec![] }.reliable_seq(), None);
+        assert_eq!(NetMsg::Get { nonce: 1, key: 2 }.reliable_seq(), None);
+        assert_eq!(NetMsg::Remove { nonce: 1, key: 2 }.reliable_seq(), None, "acked by resp");
+    }
+
+    #[test]
+    fn spoofed_counts_rejected_cheaply() {
+        // a Handoff header claiming 1M entries against a near-empty
+        // buffer must fail the plausibility check, not preallocate
+        let mut b = encode(&NetMsg::Handoff { seq: 1, pairs: vec![] });
+        let len = b.len();
+        b[len - 4..].copy_from_slice(&1_000_000u32.to_be_bytes());
+        assert!(decode(&b).is_err());
+        // same for a Table datagram
+        let mut t = encode(&NetMsg::Table { seq: 1, addrs: vec![] });
+        let tl = t.len();
+        t[tl - 4..].copy_from_slice(&1_000_000u32.to_be_bytes());
+        assert!(decode(&t).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! points. (The simulator never serializes — it charges `wire_bits()`
 //! directly — so this codec is exercised only by `net/` and its tests.)
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use crate::id::Id;
 use crate::proto::messages::{Event, EventKind, Message, MessageBody};
@@ -22,6 +22,12 @@ const T_JOIN_REQ: u8 = 7;
 const T_TABLE: u8 = 8;
 const T_PROBE: u8 = 9;
 const T_PROBE_REPLY: u8 = 10;
+const T_PUT: u8 = 11;
+const T_GET: u8 = 12;
+const T_GET_RESP: u8 = 13;
+const T_REPLICATE: u8 = 14;
+const T_HANDOFF: u8 = 15;
+const T_REMOVE: u8 = 16;
 
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64);
@@ -58,6 +64,30 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                 buf.extend_from_slice(&id.0.to_be_bytes());
             }
         }
+        MessageBody::Put { key, value_bits } => {
+            buf.extend_from_slice(&key.0.to_be_bytes());
+            buf.extend_from_slice(&value_bits.to_be_bytes());
+        }
+        MessageBody::Get { key } | MessageBody::Remove { key } => {
+            buf.extend_from_slice(&key.0.to_be_bytes())
+        }
+        MessageBody::GetResp { key, found, value_bits } => {
+            buf.extend_from_slice(&key.0.to_be_bytes());
+            buf.push(*found as u8);
+            buf.extend_from_slice(&value_bits.to_be_bytes());
+        }
+        MessageBody::Replicate { key, version, value_bits } => {
+            buf.extend_from_slice(&key.0.to_be_bytes());
+            buf.extend_from_slice(&version.to_be_bytes());
+            buf.extend_from_slice(&value_bits.to_be_bytes());
+        }
+        MessageBody::Handoff { keys } => {
+            buf.extend_from_slice(&(keys.len() as u32).to_be_bytes());
+            for (k, v) in keys {
+                buf.extend_from_slice(&k.0.to_be_bytes());
+                buf.extend_from_slice(&v.to_be_bytes());
+            }
+        }
     }
     buf
 }
@@ -77,7 +107,8 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
         T_MAINT => {
             let ttl = r.u8()?;
             let n = r.u32()? as usize;
-            if n > 1_000_000 {
+            // 9 encoded bytes per event (flags + id)
+            if n > r.remaining() / 9 {
                 bail!("implausible event count {n}");
             }
             let mut events = Vec::with_capacity(n);
@@ -98,7 +129,8 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
         T_JOIN_REQ => MessageBody::JoinRequest { joiner: Id(r.u64()?) },
         T_TABLE => {
             let n = r.u32()? as usize;
-            if n > 50_000_000 {
+            // 8 encoded bytes per id
+            if n > r.remaining() / 8 {
                 bail!("implausible table size {n}");
             }
             let mut ids = Vec::with_capacity(n);
@@ -109,6 +141,32 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
         }
         T_PROBE => MessageBody::Probe,
         T_PROBE_REPLY => MessageBody::ProbeReply,
+        T_PUT => MessageBody::Put { key: Id(r.u64()?), value_bits: r.u64()? },
+        T_GET => MessageBody::Get { key: Id(r.u64()?) },
+        T_REMOVE => MessageBody::Remove { key: Id(r.u64()?) },
+        T_GET_RESP => MessageBody::GetResp {
+            key: Id(r.u64()?),
+            found: r.u8()? != 0,
+            value_bits: r.u64()?,
+        },
+        T_REPLICATE => MessageBody::Replicate {
+            key: Id(r.u64()?),
+            version: r.u64()?,
+            value_bits: r.u64()?,
+        },
+        T_HANDOFF => {
+            let n = r.u32()? as usize;
+            // 16 encoded bytes per entry: bound by the remaining buffer
+            // so a spoofed count cannot force a large preallocation
+            if n > r.remaining() / 16 {
+                bail!("implausible handoff size {n}");
+            }
+            let mut keys = Vec::with_capacity(n);
+            for _ in 0..n {
+                keys.push((Id(r.u64()?), r.u64()?));
+            }
+            MessageBody::Handoff { keys }
+        }
         t => bail!("unknown message type {t}"),
     };
     Ok(Message { from, to, seqno, body })
@@ -126,6 +184,12 @@ fn type_tag(body: &MessageBody) -> u8 {
         MessageBody::TableTransfer { .. } => T_TABLE,
         MessageBody::Probe => T_PROBE,
         MessageBody::ProbeReply => T_PROBE_REPLY,
+        MessageBody::Put { .. } => T_PUT,
+        MessageBody::Get { .. } => T_GET,
+        MessageBody::GetResp { .. } => T_GET_RESP,
+        MessageBody::Replicate { .. } => T_REPLICATE,
+        MessageBody::Handoff { .. } => T_HANDOFF,
+        MessageBody::Remove { .. } => T_REMOVE,
     }
 }
 
@@ -150,6 +214,9 @@ impl<'a> Reader<'a> {
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -199,6 +266,13 @@ mod tests {
         roundtrip(MessageBody::TableTransfer { ids: (0..100).map(Id).collect() });
         roundtrip(MessageBody::Probe);
         roundtrip(MessageBody::ProbeReply);
+        roundtrip(MessageBody::Put { key: Id(9), value_bits: 1024 });
+        roundtrip(MessageBody::Get { key: Id(9) });
+        roundtrip(MessageBody::Remove { key: Id(9) });
+        roundtrip(MessageBody::GetResp { key: Id(9), found: true, value_bits: 512 });
+        roundtrip(MessageBody::GetResp { key: Id(9), found: false, value_bits: 0 });
+        roundtrip(MessageBody::Replicate { key: Id(9), version: 7, value_bits: 64 });
+        roundtrip(MessageBody::Handoff { keys: vec![(Id(1), 8), (Id(2), 16)] });
     }
 
     #[test]

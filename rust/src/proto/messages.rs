@@ -67,6 +67,20 @@ pub enum MessageBody {
     /// Predecessor-liveness probe (Rule 5) and its reply.
     Probe,
     ProbeReply,
+    /// Store a value under `key` at the key's successor (store layer).
+    /// The simulator carries only the payload size; the socket runtime
+    /// carries real bytes (`net::wire`).
+    Put { key: Id, value_bits: u64 },
+    /// Read the value under `key` from its owner (or a replica).
+    Get { key: Id },
+    /// Answer to a `Get`; `value_bits = 0` when not found.
+    GetResp { key: Id, found: bool, value_bits: u64 },
+    /// Delete `key` at its owner (replicated as a tombstone).
+    Remove { key: Id },
+    /// Owner-to-replica copy (write replication and churn repair).
+    Replicate { key: Id, version: u64, value_bits: u64 },
+    /// Bulk ownership transfer on join/leave: `(key, value_bits)` pairs.
+    Handoff { keys: Vec<(Id, u64)> },
 }
 
 impl Message {
@@ -86,16 +100,30 @@ impl Message {
             // 40 B framing, expressed in bits.
             MessageBody::TableTransfer { ids } => 320 + ids.len() as u64 * 48,
             MessageBody::Probe | MessageBody::ProbeReply => sizes::V_A,
+            MessageBody::Put { value_bits, .. } => sizes::put_bits(*value_bits),
+            MessageBody::Get { .. } | MessageBody::Remove { .. } => sizes::V_GET,
+            MessageBody::GetResp { value_bits, .. } => sizes::get_resp_bits(*value_bits),
+            MessageBody::Replicate { value_bits, .. } => sizes::replicate_bits(*value_bits),
+            MessageBody::Handoff { keys } => {
+                sizes::handoff_bits(keys.len(), keys.iter().map(|&(_, v)| v).sum())
+            }
         }
     }
 
     /// Does this message require an acknowledgment? (§III: any message
     /// should be acknowledged, except heartbeats [52] and acks themselves;
-    /// lookups are acknowledged by their response.)
+    /// lookups are acknowledged by their response.) Store writes —
+    /// `Put`, `Replicate`, `Handoff` — are acknowledged for durability;
+    /// a `Get` is acknowledged by its response.
     pub fn needs_ack(&self) -> bool {
         matches!(
             self.body,
-            MessageBody::Maintenance { .. } | MessageBody::CalotMaintenance { .. }
+            MessageBody::Maintenance { .. }
+                | MessageBody::CalotMaintenance { .. }
+                | MessageBody::Put { .. }
+                | MessageBody::Remove { .. }
+                | MessageBody::Replicate { .. }
+                | MessageBody::Handoff { .. }
         )
     }
 }
@@ -135,6 +163,38 @@ mod tests {
             msg(MessageBody::CalotMaintenance { event: Event::join(Id(1)), range: 4 }).wire_bits(),
             sizes::V_C
         );
+    }
+
+    #[test]
+    fn store_message_sizes() {
+        assert_eq!(msg(MessageBody::Get { key: Id(1) }).wire_bits(), sizes::V_GET);
+        assert_eq!(
+            msg(MessageBody::Put { key: Id(1), value_bits: 1024 }).wire_bits(),
+            sizes::put_bits(1024)
+        );
+        assert_eq!(
+            msg(MessageBody::GetResp { key: Id(1), found: false, value_bits: 0 }).wire_bits(),
+            sizes::get_resp_bits(0)
+        );
+        assert_eq!(
+            msg(MessageBody::Replicate { key: Id(1), version: 3, value_bits: 512 }).wire_bits(),
+            sizes::replicate_bits(512)
+        );
+        assert_eq!(
+            msg(MessageBody::Handoff { keys: vec![(Id(1), 512), (Id(2), 512)] }).wire_bits(),
+            sizes::handoff_bits(2, 1024)
+        );
+    }
+
+    #[test]
+    fn store_ack_policy() {
+        assert!(msg(MessageBody::Put { key: Id(1), value_bits: 8 }).needs_ack());
+        assert!(msg(MessageBody::Remove { key: Id(1) }).needs_ack());
+        assert_eq!(msg(MessageBody::Remove { key: Id(1) }).wire_bits(), sizes::V_GET);
+        assert!(msg(MessageBody::Replicate { key: Id(1), version: 1, value_bits: 8 }).needs_ack());
+        assert!(msg(MessageBody::Handoff { keys: vec![] }).needs_ack());
+        assert!(!msg(MessageBody::Get { key: Id(1) }).needs_ack(), "acked by GetResp");
+        assert!(!msg(MessageBody::GetResp { key: Id(1), found: true, value_bits: 8 }).needs_ack());
     }
 
     #[test]

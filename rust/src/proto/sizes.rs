@@ -38,6 +38,45 @@ pub fn d1ht_msg_bits(events_default: usize, events_custom: usize) -> u64 {
         + events_custom as u64 * M_EVENT_CUSTOM_PORT
 }
 
+// ---------------------------------------------------------------------
+// Store-layer messages (not in the paper; same Figure-2 accounting
+// style). A store request carries the four common fields plus a 20-byte
+// key — the same framing as a lookup.
+// ---------------------------------------------------------------------
+
+/// Fixed part of every store message: common fields + 160-bit key.
+pub const V_STORE: u64 = V_A + 160;
+
+/// `Put`: fixed part + the value payload.
+#[inline]
+pub fn put_bits(value_bits: u64) -> u64 {
+    V_STORE + value_bits
+}
+
+/// `Get`: key only.
+pub const V_GET: u64 = V_STORE;
+
+/// `GetResp`: fixed part + found flag + the value payload (0 on miss).
+#[inline]
+pub fn get_resp_bits(value_bits: u64) -> u64 {
+    V_STORE + 8 + value_bits
+}
+
+/// `Replicate` (owner → replica copy): fixed part + 64-bit version +
+/// the value payload.
+#[inline]
+pub fn replicate_bits(value_bits: u64) -> u64 {
+    V_STORE + 64 + value_bits
+}
+
+/// Bulk `Handoff` of `keys` entries totalling `value_bits_total` payload
+/// bits: TCP-style 40-byte framing (like the §VI table transfer) plus a
+/// 160-bit key and 64-bit version per entry.
+#[inline]
+pub fn handoff_bits(keys: usize, value_bits_total: u64) -> u64 {
+    320 + keys as u64 * (160 + 64) + value_bits_total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,5 +95,15 @@ mod tests {
         assert_eq!(d1ht_msg_bits(0, 0), V_M);
         assert_eq!(d1ht_msg_bits(3, 0), V_M + 96);
         assert_eq!(d1ht_msg_bits(1, 1), V_M + 32 + 48);
+    }
+
+    #[test]
+    fn store_message_sizes() {
+        assert_eq!(V_STORE, V_A + 160, "lookup-style framing");
+        assert_eq!(put_bits(1024), V_STORE + 1024);
+        assert_eq!(get_resp_bits(0), V_STORE + 8, "miss carries no value");
+        assert_eq!(replicate_bits(1024), V_STORE + 64 + 1024);
+        // handoff amortizes framing: 2 entries cost less than 2 replicates
+        assert!(handoff_bits(2, 2048) < 2 * replicate_bits(1024) + 320);
     }
 }

@@ -6,7 +6,7 @@
 //! `python/compile/model.py::maintenance_grid`. The native
 //! `analysis::{d1ht,calot}` implementations cross-check it (f32 vs f64).
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::runtime::pjrt::Compiled;
 
@@ -41,7 +41,7 @@ impl AnalyticsGrid {
             n[i] = ni as f32;
             s[i] = si as f32;
         }
-        let out = self.exe.run(&[xla::Literal::vec1(&n[..]), xla::Literal::vec1(&s[..])])?;
+        let out = self.exe.run(&[crate::xla::Literal::vec1(&n[..]), crate::xla::Literal::vec1(&s[..])])?;
         let d = out[0].to_vec::<f32>()?;
         let c = out[1].to_vec::<f32>()?;
         Ok(GridResult {

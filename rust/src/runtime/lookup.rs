@@ -11,7 +11,7 @@
 //! `resolve_native` implements the identical semantics for
 //! cross-checking and for the XLA-vs-native ablation bench.
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::id::{space, Id};
 use crate::routing::Table;
@@ -78,8 +78,8 @@ impl BatchLookup {
         }
         let mut padded = vec![0u64; BATCH];
         padded[..keys.len()].copy_from_slice(keys);
-        let t = xla::Literal::vec1(&snap.ring32[..]);
-        let k = xla::Literal::vec1(&padded[..]);
+        let t = crate::xla::Literal::vec1(&snap.ring32[..]);
+        let k = crate::xla::Literal::vec1(&padded[..]);
         let out = self.exe.run(&[t, k])?;
         let idx = out[0].to_vec::<i32>()?;
         Ok(idx[..keys.len()]

@@ -26,9 +26,13 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// True if `make artifacts` has produced the AOT outputs (tests that
-/// need them are skipped otherwise, with a loud message).
+/// True if `make artifacts` has produced the AOT outputs AND the PJRT
+/// bindings are actually linked (tests that need them are skipped
+/// otherwise, with a loud message). The offline stub (`crate::xla`)
+/// reports unlinked, so present artifacts degrade to the native
+/// fallbacks instead of erroring at load time.
 pub fn artifacts_available() -> bool {
-    artifacts_dir().join("ring_lookup.hlo.txt").exists()
+    crate::xla::pjrt_linked()
+        && artifacts_dir().join("ring_lookup.hlo.txt").exists()
         && artifacts_dir().join("analytics.hlo.txt").exists()
 }

@@ -3,21 +3,21 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
 /// A compiled executable bound to a PJRT client.
 pub struct Compiled {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
+    client: crate::xla::PjRtClient,
+    exe: crate::xla::PjRtLoadedExecutable,
 }
 
 impl Compiled {
     /// Load an HLO-text artifact and compile it on the CPU client.
     pub fn load(path: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+        let client = crate::xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = crate::xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
             .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
+        let comp = crate::xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp).context("XLA compile")?;
         Ok(Compiled { client, exe })
     }
@@ -28,8 +28,8 @@ impl Compiled {
 
     /// Execute with literal inputs; returns the elements of the result
     /// tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let out = self.exe.execute::<xla::Literal>(inputs).context("PJRT execute")?;
+    pub fn run(&self, inputs: &[crate::xla::Literal]) -> Result<Vec<crate::xla::Literal>> {
+        let out = self.exe.execute::<crate::xla::Literal>(inputs).context("PJRT execute")?;
         let mut lit = out[0][0].to_literal_sync().context("fetch result")?;
         lit.decompose_tuple().context("decompose result tuple")
     }
@@ -49,8 +49,8 @@ mod tests {
         let c = Compiled::load(&artifacts_dir().join("ring_lookup.hlo.txt")).expect("load");
         assert_eq!(c.platform().to_lowercase(), "cpu");
         // empty table (all PAD) + zero keys -> all indices land on 0
-        let table = xla::Literal::vec1(&vec![u32::MAX; 8192][..]);
-        let keys = xla::Literal::vec1(&vec![0u64; 1024][..]);
+        let table = crate::xla::Literal::vec1(&vec![u32::MAX; 8192][..]);
+        let keys = crate::xla::Literal::vec1(&vec![0u64; 1024][..]);
         let out = c.run(&[table, keys]).expect("run");
         assert_eq!(out.len(), 1);
         let idx = out[0].to_vec::<i32>().expect("i32 vec");

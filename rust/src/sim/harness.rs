@@ -18,6 +18,7 @@ use crate::sim::cpu::CpuModel;
 use crate::sim::engine::{run_until, Queue};
 use crate::sim::metrics::Metrics;
 use crate::sim::network::NetModel;
+use crate::store::StoreCfg;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -134,6 +135,107 @@ pub fn run_d1ht(cfg: &ExperimentCfg) -> RunResult {
     finish(res)
 }
 
+/// Averaged outcome of one storage experiment cell (D1HT + store layer).
+#[derive(Debug, Clone, Default)]
+pub struct StoreRunResult {
+    pub n: usize,
+    pub keys: usize,
+    pub replication: usize,
+    /// Fraction of keys still retrievable at window end (durability).
+    pub retrievable: f64,
+    pub puts: u64,
+    pub gets: u64,
+    /// Fraction of reads that found a live copy.
+    pub availability: f64,
+    /// Fraction of successful reads served by the owner in one hop.
+    pub get_one_hop_ratio: f64,
+    pub gets_failed: u64,
+    pub keys_lost: u64,
+    pub repair_transfers: u64,
+    pub handoff_transfers: u64,
+    /// Mean per-peer replication+repair bandwidth over the window (bps).
+    pub repair_bps_per_peer: f64,
+    /// Mean per-peer client-facing store bandwidth (put/get, bps).
+    pub store_bps_per_peer: f64,
+    /// Store operations per simulated second (put+get throughput).
+    pub ops_per_sec: f64,
+    pub window_secs: f64,
+    pub seeds: usize,
+}
+
+/// Run D1HT with the replicated KV layer through both phases for every
+/// seed: preload the keys, let the system settle, then measure the
+/// workload + churn repair over the window and sweep durability at the
+/// end.
+pub fn run_d1ht_store(cfg: &ExperimentCfg, scfg: &StoreCfg) -> StoreRunResult {
+    let mut res = StoreRunResult {
+        keys: scfg.keys,
+        replication: scfg.replication,
+        ..Default::default()
+    };
+    for &seed in &cfg.seeds {
+        let d1 = D1htCfg {
+            f: cfg.f,
+            net: cfg.net,
+            cpu: cfg.cpu,
+            churn: cfg.churn,
+            quarantine_tq: cfg.quarantine_tq,
+            lookup_rate: cfg.lookup_rate,
+            seed,
+        };
+        let mut sim = D1htSim::new(d1);
+        let mut q = Queue::new();
+        match cfg.growth {
+            Phase::Growth => {
+                sim.start_growth(cfg.target_n, &mut q);
+                run_until(&mut sim, &mut q, cfg.target_n as f64);
+                sim.enable_store(scfg.clone(), &mut q);
+                run_until(&mut sim, &mut q, cfg.target_n as f64 + cfg.settle_secs);
+            }
+            Phase::Bootstrap => {
+                sim.bootstrap(cfg.target_n, &mut q);
+                sim.enable_store(scfg.clone(), &mut q);
+                run_until(&mut sim, &mut q, cfg.settle_secs);
+            }
+        }
+        let t0 = q.now();
+        sim.begin_recording(t0);
+        if let Some(s) = sim.store_mut() {
+            s.reset_counters();
+        }
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, t0 + cfg.measure_secs);
+        sim.end_recording(q.now());
+        let window = q.now() - t0;
+        let m = sim.metrics();
+        let n = sim.size().max(1);
+        let (total, alive) = sim.store_retrievable();
+        res.n = sim.size();
+        res.retrievable += alive as f64 / total.max(1) as f64;
+        res.puts += m.store.puts;
+        res.gets += m.store.gets_total();
+        res.availability += m.store.availability();
+        res.get_one_hop_ratio += m.store.one_hop_ratio();
+        res.gets_failed += m.store.gets_failed;
+        res.keys_lost += m.store.keys_lost;
+        res.repair_transfers += m.store.repair_transfers;
+        res.handoff_transfers += m.store.handoff_transfers;
+        res.repair_bps_per_peer += m.store.repair_traffic.bps_out(window) / n as f64;
+        res.store_bps_per_peer += m.store.traffic.bps_out(window) / n as f64;
+        res.ops_per_sec += (m.store.puts + m.store.gets_total()) as f64 / window.max(1e-9);
+        res.window_secs = res.window_secs.max(window);
+        res.seeds += 1;
+    }
+    let s = res.seeds.max(1) as f64;
+    res.retrievable /= s;
+    res.availability /= s;
+    res.get_one_hop_ratio /= s;
+    res.repair_bps_per_peer /= s;
+    res.store_bps_per_peer /= s;
+    res.ops_per_sec /= s;
+    res
+}
+
 /// Run 1h-Calot through the identical protocol.
 pub fn run_calot(cfg: &ExperimentCfg) -> RunResult {
     let mut res = RunResult { system: "1h-Calot".into(), ..Default::default() };
@@ -224,6 +326,24 @@ mod tests {
             "population after growth+churn: {}",
             r.n
         );
+    }
+
+    #[test]
+    fn store_run_reports_durability() {
+        let mut cfg = quick_cfg(96);
+        cfg.lookup_rate = 0.0;
+        cfg.measure_secs = 240.0;
+        let scfg = StoreCfg { keys: 300, repair_interval: 30.0, ..Default::default() };
+        let r = run_d1ht_store(&cfg, &scfg);
+        assert_eq!(r.seeds, 1);
+        assert_eq!(r.keys, 300);
+        assert_eq!(r.replication, 3);
+        assert!(r.gets > 500, "gets {}", r.gets);
+        assert!(r.puts > 0);
+        assert!(r.retrievable >= 0.999, "retrievable {}", r.retrievable);
+        assert!(r.availability >= 0.999, "availability {}", r.availability);
+        assert!(r.ops_per_sec > 0.0);
+        assert!(r.store_bps_per_peer > 0.0, "client traffic charged");
     }
 
     #[test]

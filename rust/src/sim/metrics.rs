@@ -1,8 +1,78 @@
 //! Measurement sinks: maintenance-traffic accounting at Figure-2 wire
 //! sizes, lookup outcome tallies (the ≥99% one-hop target), lookup
-//! latency histograms, and routing-table staleness samples.
+//! latency histograms, routing-table staleness samples, and the store
+//! layer's durability/availability counters.
 
 use crate::util::stats::{LatencyHist, Running, Traffic};
+
+/// Durability/availability accounting for the replicated KV layer
+/// (`store::StoreLayer`). Store traffic is kept separate from the
+/// maintenance counters: §VII-A excludes application traffic from the
+/// bandwidth figures, and the repair traffic is the quantity the storage
+/// experiment reports on its own axis.
+#[derive(Debug, Clone, Default)]
+pub struct StoreCounters {
+    pub puts: u64,
+    /// Tombstone deletes.
+    pub removes: u64,
+    /// Reads served by the key's successor in one hop.
+    pub gets_one_hop: u64,
+    /// Reads served by a surviving replica after the owner changed
+    /// (one extra hop; availability preserved).
+    pub gets_degraded: u64,
+    /// Reads that found no live replica.
+    pub gets_failed: u64,
+    /// Keys whose every replica departed before repair could run —
+    /// permanent data loss (the durability headline).
+    pub keys_lost: u64,
+    /// Replica re-creations from surviving copies (leave/failure driven).
+    pub repair_transfers: u64,
+    /// Ownership transfers to a peer that newly owns the key (join driven).
+    pub handoff_transfers: u64,
+    /// Put/Get/GetResp wire traffic (client-facing).
+    pub traffic: Traffic,
+    /// Replicate/Handoff wire traffic (replication + churn repair).
+    pub repair_traffic: Traffic,
+}
+
+impl StoreCounters {
+    pub fn gets_total(&self) -> u64 {
+        self.gets_one_hop + self.gets_degraded + self.gets_failed
+    }
+
+    /// Fraction of reads that found a live copy (one-hop or degraded).
+    pub fn availability(&self) -> f64 {
+        let t = self.gets_total();
+        if t == 0 {
+            1.0
+        } else {
+            (self.gets_one_hop + self.gets_degraded) as f64 / t as f64
+        }
+    }
+
+    /// Fraction of successful reads served by the owner in one hop.
+    pub fn one_hop_ratio(&self) -> f64 {
+        let ok = self.gets_one_hop + self.gets_degraded;
+        if ok == 0 {
+            1.0
+        } else {
+            self.gets_one_hop as f64 / ok as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &StoreCounters) {
+        self.puts += o.puts;
+        self.removes += o.removes;
+        self.gets_one_hop += o.gets_one_hop;
+        self.gets_degraded += o.gets_degraded;
+        self.gets_failed += o.gets_failed;
+        self.keys_lost += o.keys_lost;
+        self.repair_transfers += o.repair_transfers;
+        self.handoff_transfers += o.handoff_transfers;
+        self.traffic.merge(&o.traffic);
+        self.repair_traffic.merge(&o.repair_traffic);
+    }
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -16,6 +86,9 @@ pub struct Metrics {
     pub lookups_failed: u64,
     pub lookup_latency: LatencyHist,
     pub staleness: Running,
+    /// Replicated-KV durability/availability counters (zero when the
+    /// store layer is disabled).
+    pub store: StoreCounters,
     /// Window the maintenance counters cover (set by the harness).
     pub window_secs: f64,
 }
@@ -55,6 +128,7 @@ impl Metrics {
         self.lookups_failed += o.lookups_failed;
         self.lookup_latency.merge(&o.lookup_latency);
         self.staleness.merge(&o.staleness);
+        self.store.merge(&o.store);
         self.window_secs = self.window_secs.max(o.window_secs);
     }
 }
@@ -78,6 +152,26 @@ mod tests {
         m.window_secs = 10.0;
         m.maintenance.send(3200);
         assert!((m.maintenance_bps_out() - 320.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_counters() {
+        let mut s = StoreCounters::default();
+        assert_eq!(s.availability(), 1.0, "vacuous = healthy");
+        s.gets_one_hop = 900;
+        s.gets_degraded = 95;
+        s.gets_failed = 5;
+        assert!((s.availability() - 0.995).abs() < 1e-12);
+        assert!((s.one_hop_ratio() - 900.0 / 995.0).abs() < 1e-12);
+        let mut other = StoreCounters::default();
+        other.keys_lost = 2;
+        other.repair_transfers = 10;
+        other.repair_traffic.send(640);
+        s.merge(&other);
+        assert_eq!(s.keys_lost, 2);
+        assert_eq!(s.repair_transfers, 10);
+        assert_eq!(s.repair_traffic.bits_out, 640);
+        assert_eq!(s.gets_total(), 1000);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! The per-peer versioned key–value store used by the socket runtime.
+//!
+//! Writes carry a per-key monotonic version; a store accepts a write iff
+//! it is not older than what it already holds. That makes replication
+//! and repair idempotent: the owner (or any holder running anti-entropy)
+//! can re-send `Replicate`/`Handoff` copies freely without regressing a
+//! newer value.
+
+use std::collections::BTreeMap;
+
+use crate::id::Id;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Versioned {
+    pub version: u64,
+    /// Deleted marker: the entry is kept (and replicated) so that
+    /// anti-entropy cannot resurrect an older live value. `bytes` is
+    /// empty for tombstones. (Tombstone GC is a ROADMAP open item.)
+    pub tombstone: bool,
+    pub bytes: Vec<u8>,
+}
+
+impl Versioned {
+    pub fn is_live(&self) -> bool {
+        !self.tombstone
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct KvStore {
+    map: BTreeMap<Id, Versioned>,
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Entries holding a live value (excludes tombstones).
+    pub fn live_len(&self) -> usize {
+        self.map.values().filter(|v| v.is_live()).count()
+    }
+
+    pub fn get(&self, key: Id) -> Option<&Versioned> {
+        self.map.get(&key)
+    }
+
+    /// The version a fresh local write of `key` should carry.
+    pub fn next_version(&self, key: Id) -> u64 {
+        self.map.get(&key).map(|v| v.version + 1).unwrap_or(1)
+    }
+
+    /// Accept `bytes` at `version` unless we already hold something
+    /// newer. Returns true iff the store changed.
+    pub fn put(&mut self, key: Id, version: u64, bytes: Vec<u8>) -> bool {
+        self.put_entry(key, Versioned { version, tombstone: false, bytes })
+    }
+
+    /// Record a delete at `version` (kept as a tombstone so repair
+    /// cannot resurrect an older live value).
+    pub fn put_tombstone(&mut self, key: Id, version: u64) -> bool {
+        self.put_entry(key, Versioned { version, tombstone: true, bytes: Vec::new() })
+    }
+
+    fn put_entry(&mut self, key: Id, entry: Versioned) -> bool {
+        match self.map.get(&key) {
+            Some(cur) if cur.version > entry.version => false,
+            Some(cur) if *cur == entry => false,
+            _ => {
+                self.map.insert(key, entry);
+                true
+            }
+        }
+    }
+
+    /// Drop an entry outright (handoff bookkeeping — NOT a user delete,
+    /// which must go through [`KvStore::put_tombstone`]).
+    pub fn remove(&mut self, key: Id) -> bool {
+        self.map.remove(&key).is_some()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&Id, &Versioned)> {
+        self.map.iter()
+    }
+
+    /// Stored payload bytes (excluding map overhead).
+    pub fn value_bytes(&self) -> usize {
+        self.map.values().map(|v| v.bytes.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versioned_writes() {
+        let mut kv = KvStore::new();
+        assert_eq!(kv.next_version(Id(1)), 1);
+        assert!(kv.put(Id(1), 1, vec![1]));
+        assert_eq!(kv.next_version(Id(1)), 2);
+        assert!(kv.put(Id(1), 2, vec![2]));
+        assert_eq!(kv.get(Id(1)).unwrap().bytes, vec![2]);
+    }
+
+    #[test]
+    fn stale_write_rejected() {
+        let mut kv = KvStore::new();
+        assert!(kv.put(Id(1), 5, vec![5]));
+        assert!(!kv.put(Id(1), 4, vec![4]), "older version ignored");
+        assert_eq!(kv.get(Id(1)).unwrap().bytes, vec![5]);
+    }
+
+    #[test]
+    fn duplicate_replicate_is_noop() {
+        let mut kv = KvStore::new();
+        assert!(kv.put(Id(1), 3, vec![7, 7]));
+        assert!(!kv.put(Id(1), 3, vec![7, 7]), "idempotent repair");
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn tombstone_wins_and_blocks_resurrection() {
+        let mut kv = KvStore::new();
+        assert!(kv.put(Id(1), 1, vec![7]));
+        assert!(kv.put_tombstone(Id(1), 2));
+        assert!(!kv.get(Id(1)).unwrap().is_live());
+        assert_eq!(kv.next_version(Id(1)), 3, "versions keep advancing past deletes");
+        // a stale replica pushing the old live value must NOT revive it
+        assert!(!kv.put(Id(1), 1, vec![7]));
+        assert!(!kv.get(Id(1)).unwrap().is_live());
+        // a newer write does
+        assert!(kv.put(Id(1), 3, vec![8]));
+        assert!(kv.get(Id(1)).unwrap().is_live());
+    }
+
+    #[test]
+    fn remove_and_sizes() {
+        let mut kv = KvStore::new();
+        kv.put(Id(1), 1, vec![0; 10]);
+        kv.put(Id(2), 1, vec![0; 6]);
+        assert_eq!(kv.value_bytes(), 16);
+        assert!(kv.remove(Id(1)));
+        assert!(!kv.remove(Id(1)));
+        assert_eq!(kv.len(), 1);
+    }
+}

@@ -1,0 +1,439 @@
+//! The simulator's replicated-storage model.
+//!
+//! [`StoreLayer`] tracks, for every key in a fixed population, which live
+//! peers currently hold a replica. It is driven by the D1HT simulation
+//! world ([`crate::dht::d1ht::D1htSim`]) through three entry points:
+//!
+//! * [`StoreLayer::preload`] — place every key on its `R` replicas at
+//!   enable time,
+//! * [`StoreLayer::workload_step`] — one Zipf-popularity put/get against
+//!   the ground-truth membership,
+//! * [`StoreLayer::repair`] — the periodic anti-entropy pass: re-create
+//!   replicas lost to churn from surviving copies, and hand keys to the
+//!   peers that now own them.
+//!
+//! Like lookup resolution in `dht::d1ht` (see its module docs), storage
+//! is evaluated against the ground-truth membership rather than by
+//! materializing per-peer byte stores: holder liveness is exact between
+//! repair passes because a departed peer cannot rejoin in under
+//! `REJOIN_DELAY_SECS` (the layer asserts the repair interval stays
+//! below that). Every message is charged its exact wire size via
+//! [`crate::proto::messages::Message::wire_bits`], so store and repair
+//! bandwidth are directly comparable to the maintenance figures.
+
+use crate::id::{space, Id};
+use crate::proto::messages::{Message, MessageBody};
+use crate::proto::sizes;
+use crate::routing::Table;
+use crate::sim::metrics::StoreCounters;
+use crate::store::replication::replica_set;
+use crate::store::zipf::Zipf;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct StoreCfg {
+    /// Fixed key population (preloaded before measurement).
+    pub keys: usize,
+    /// Replication factor R: owner + R−1 ring successors.
+    pub replication: usize,
+    /// Payload size per value, in bits.
+    pub value_bits: u64,
+    /// Store operations per second per peer.
+    pub ops_rate: f64,
+    /// Fraction of operations that are puts (rewrites).
+    pub put_fraction: f64,
+    /// Fraction of operations that are removes (tombstone deletes);
+    /// the rest are gets.
+    pub remove_fraction: f64,
+    /// Zipf exponent of key popularity (0 = uniform).
+    pub zipf_exponent: f64,
+    /// Anti-entropy period, seconds. Must stay below the churn rejoin
+    /// delay so holder liveness is exact between passes.
+    pub repair_interval: f64,
+}
+
+impl Default for StoreCfg {
+    fn default() -> Self {
+        StoreCfg {
+            keys: 2000,
+            replication: 3,
+            value_bits: 1024,
+            ops_rate: 1.0,
+            put_fraction: 0.1,
+            remove_fraction: 0.0,
+            zipf_exponent: 0.99,
+            repair_interval: 60.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct KeyRecord {
+    id: Id,
+    version: u64,
+    /// Peers believed to hold a replica; the first entry is the holder
+    /// that was the owner at the last placement.
+    holders: Vec<Id>,
+    /// All replicas departed before repair — permanent loss (until a
+    /// rewrite revives the key).
+    lost: bool,
+    /// Tombstoned by a remove: holders keep the tombstone so repair
+    /// cannot resurrect the old value; reads see authoritative absence.
+    deleted: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct StoreLayer {
+    pub cfg: StoreCfg,
+    records: Vec<KeyRecord>,
+    zipf: Zipf,
+    pub rng: Rng,
+    pub counters: StoreCounters,
+}
+
+/// Wire cost of a store message body (identities do not affect size).
+fn bits(body: MessageBody) -> u64 {
+    Message { from: Id(0), to: Id(0), seqno: 0, body }.wire_bits()
+}
+
+/// Charge one wire message to the system: it leaves its sender and
+/// arrives at its receiver, so aggregate `bits_out` covers requests AND
+/// responses (the d1ht sim charges both endpoints the same way).
+fn charge(t: &mut crate::util::stats::Traffic, b: u64) {
+    t.send(b);
+    t.recv(b);
+}
+
+impl StoreLayer {
+    pub fn new(cfg: StoreCfg, rng: Rng) -> Self {
+        assert!(cfg.keys >= 1, "store layer needs a key population");
+        assert!(cfg.replication >= 1, "replication factor must be >= 1");
+        let records = (0..cfg.keys)
+            .map(|i| KeyRecord {
+                id: space::key_id(format!("store-key-{i}").as_bytes()),
+                version: 0,
+                holders: Vec::new(),
+                lost: false,
+                deleted: false,
+            })
+            .collect();
+        let zipf = Zipf::new(cfg.keys, cfg.zipf_exponent);
+        StoreLayer { cfg, records, zipf, rng, counters: StoreCounters::default() }
+    }
+
+    pub fn keys(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Place every key on its current replica set (uncharged: the
+    /// preload models state built up before the measurement window).
+    pub fn preload(&mut self, truth: &Table) {
+        for rec in &mut self.records {
+            rec.holders = replica_set(truth, rec.id, self.cfg.replication);
+            rec.version = 1;
+            rec.lost = rec.holders.is_empty();
+        }
+    }
+
+    /// Zero the counters at the top of the measurement window.
+    pub fn reset_counters(&mut self) {
+        self.counters = StoreCounters::default();
+    }
+
+    /// One workload operation (put with probability `put_fraction`,
+    /// else get) against the current ground-truth membership.
+    pub fn workload_step(&mut self, truth: &Table) {
+        if truth.is_empty() {
+            return;
+        }
+        let idx = self.zipf.sample(&mut self.rng);
+        let u = self.rng.next_f64();
+        if u < self.cfg.put_fraction {
+            self.put(truth, idx);
+        } else if u < self.cfg.put_fraction + self.cfg.remove_fraction {
+            self.remove(truth, idx);
+        } else {
+            self.get(truth, idx);
+        }
+    }
+
+    /// A rewrite: the client sends the value to the key's owner, which
+    /// pushes copies to the other R−1 replicas.
+    fn put(&mut self, truth: &Table, idx: usize) {
+        let vb = self.cfg.value_bits;
+        let rec = &mut self.records[idx];
+        let desired = replica_set(truth, rec.id, self.cfg.replication);
+        if desired.is_empty() {
+            return;
+        }
+        rec.version += 1;
+        rec.lost = false;
+        rec.deleted = false;
+        // client -> owner, plus the durability ack (each wire message is
+        // charged to both its sender and its receiver, like the d1ht sim)
+        charge(&mut self.counters.traffic, bits(MessageBody::Put { key: rec.id, value_bits: vb }));
+        charge(&mut self.counters.traffic, sizes::V_A);
+        // owner -> each replica (+ acks), charged as replication traffic
+        for _ in 1..desired.len() {
+            charge(
+                &mut self.counters.repair_traffic,
+                bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: vb }),
+            );
+            charge(&mut self.counters.repair_traffic, sizes::V_A);
+        }
+        rec.holders = desired;
+        self.counters.puts += 1;
+    }
+
+    /// A delete: route a `Remove` to the owner, which tombstones the
+    /// entry and replicates the tombstone to the other R−1 replicas.
+    fn remove(&mut self, truth: &Table, idx: usize) {
+        let rec = &mut self.records[idx];
+        let desired = replica_set(truth, rec.id, self.cfg.replication);
+        if desired.is_empty() {
+            return;
+        }
+        rec.version += 1;
+        rec.deleted = true;
+        rec.lost = false;
+        charge(&mut self.counters.traffic, bits(MessageBody::Remove { key: rec.id }));
+        charge(&mut self.counters.traffic, sizes::V_A);
+        for _ in 1..desired.len() {
+            charge(
+                &mut self.counters.repair_traffic,
+                bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: 0 }),
+            );
+            charge(&mut self.counters.repair_traffic, sizes::V_A);
+        }
+        rec.holders = desired;
+        self.counters.removes += 1;
+    }
+
+    /// A read: ask the key's owner; fall back to a surviving replica if
+    /// the owner does not hold the value (fresh owner after churn).
+    /// Reads of a deleted key are answered by the tombstone (carrying no
+    /// value payload).
+    fn get(&mut self, truth: &Table, idx: usize) {
+        let rec = &self.records[idx];
+        let vb = if rec.deleted { 0 } else { self.cfg.value_bits };
+        let Some(owner) = truth.successor(rec.id) else {
+            return;
+        };
+        charge(&mut self.counters.traffic, bits(MessageBody::Get { key: rec.id }));
+        let holds = |h: &Id| truth.contains(*h);
+        if rec.holders.iter().any(|h| *h == owner) {
+            self.counters.gets_one_hop += 1;
+            charge(
+                &mut self.counters.traffic,
+                bits(MessageBody::GetResp { key: rec.id, found: true, value_bits: vb }),
+            );
+        } else if rec.holders.iter().any(holds) {
+            // miss at the owner, one extra hop to a surviving replica
+            self.counters.gets_degraded += 1;
+            charge(
+                &mut self.counters.traffic,
+                bits(MessageBody::GetResp { key: rec.id, found: false, value_bits: 0 }),
+            );
+            charge(&mut self.counters.traffic, bits(MessageBody::Get { key: rec.id }));
+            charge(
+                &mut self.counters.traffic,
+                bits(MessageBody::GetResp { key: rec.id, found: true, value_bits: vb }),
+            );
+        } else {
+            self.counters.gets_failed += 1;
+            charge(
+                &mut self.counters.traffic,
+                bits(MessageBody::GetResp { key: rec.id, found: false, value_bits: 0 }),
+            );
+        }
+    }
+
+    /// Anti-entropy: drop departed holders, re-create missing replicas
+    /// from surviving copies, and hand keys to peers that newly own
+    /// them. Keys whose every holder departed are counted lost.
+    pub fn repair(&mut self, truth: &Table) {
+        let r = self.cfg.replication;
+        let value_bits = self.cfg.value_bits;
+        for rec in &mut self.records {
+            let vb = if rec.deleted { 0 } else { value_bits };
+            let old_primary = rec.holders.first().copied();
+            let alive: Vec<Id> =
+                rec.holders.iter().copied().filter(|h| truth.contains(*h)).collect();
+            if alive.is_empty() {
+                if !rec.lost {
+                    rec.lost = true;
+                    // a vanished tombstone is not data loss
+                    if !rec.deleted {
+                        self.counters.keys_lost += 1;
+                    }
+                }
+                rec.holders.clear();
+                continue;
+            }
+            let desired = replica_set(truth, rec.id, r);
+            for d in &desired {
+                if alive.contains(d) {
+                    continue;
+                }
+                // a surviving holder streams a copy to the new replica
+                if Some(*d) == desired.first().copied() && old_primary != Some(*d) {
+                    self.counters.handoff_transfers += 1;
+                } else {
+                    self.counters.repair_transfers += 1;
+                }
+                charge(
+                    &mut self.counters.repair_traffic,
+                    bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: vb }),
+                );
+                charge(&mut self.counters.repair_traffic, sizes::V_A);
+            }
+            rec.holders = desired;
+        }
+    }
+
+    /// Durability sweep: `(total live keys, live keys with at least one
+    /// surviving replica)` against the current membership. Deleted keys
+    /// are excluded — absence of a tombstoned key is correct, not loss.
+    pub fn retrievable(&self, truth: &Table) -> (usize, usize) {
+        let live: Vec<&KeyRecord> = self.records.iter().filter(|r| !r.deleted).collect();
+        let alive = live
+            .iter()
+            .filter(|r| r.holders.iter().any(|h| truth.contains(*h)))
+            .count();
+        (live.len(), alive)
+    }
+
+    /// Total live replicas (gauge; ≈ keys × R in steady state).
+    pub fn replicas_total(&self, truth: &Table) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.holders.iter().filter(|h| truth.contains(**h)).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(ids: &[u64]) -> Table {
+        Table::from_ids(ids.iter().map(|&x| Id(x)).collect())
+    }
+
+    fn layer(keys: usize, r: usize) -> StoreLayer {
+        let cfg = StoreCfg { keys, replication: r, ..Default::default() };
+        StoreLayer::new(cfg, Rng::new(7))
+    }
+
+    #[test]
+    fn preload_places_r_replicas() {
+        let t = table(&[100, 200, 300, 400, 500]);
+        let mut s = layer(50, 3);
+        s.preload(&t);
+        assert_eq!(s.replicas_total(&t), 150);
+        let (total, alive) = s.retrievable(&t);
+        assert_eq!((total, alive), (50, 50));
+    }
+
+    #[test]
+    fn workload_counts_and_charges() {
+        let t = table(&[100, 200, 300, 400]);
+        let mut s = layer(20, 3);
+        s.preload(&t);
+        for _ in 0..500 {
+            s.workload_step(&t);
+        }
+        let c = &s.counters;
+        assert_eq!(c.puts + c.gets_total(), 500);
+        assert!(c.puts > 20, "puts {}", c.puts);
+        assert_eq!(c.gets_failed, 0, "quiet ring never fails a get");
+        assert_eq!(c.gets_degraded, 0, "owner always holds on a quiet ring");
+        assert!(c.traffic.bits_out > 0 && c.traffic.bits_in > 0);
+        assert!(c.repair_traffic.bits_out > 0, "puts push replicas");
+    }
+
+    #[test]
+    fn repair_recreates_lost_replicas() {
+        let t0 = table(&[100, 200, 300, 400, 500]);
+        let mut s = layer(40, 3);
+        s.preload(&t0);
+        // peer 300 fails
+        let t1 = table(&[100, 200, 400, 500]);
+        s.repair(&t1);
+        assert_eq!(s.counters.keys_lost, 0);
+        assert!(
+            s.counters.repair_transfers + s.counters.handoff_transfers > 0,
+            "300's keys re-replicate"
+        );
+        assert_eq!(s.replicas_total(&t1), 120, "back to keys x R");
+        let (total, alive) = s.retrievable(&t1);
+        assert_eq!(alive, total);
+    }
+
+    #[test]
+    fn remove_tombstones_and_blocks_resurrection() {
+        let t = table(&[100, 200, 300, 400]);
+        let mut s = layer(30, 3);
+        s.preload(&t);
+        s.remove(&t, 5);
+        assert_eq!(s.counters.removes, 1);
+        let (total, _) = s.retrievable(&t);
+        assert_eq!(total, 29, "deleted key leaves the live population");
+        // reads of the deleted key succeed (authoritative absence), and
+        // repair must not count it as lost or resurrect it
+        s.cfg.put_fraction = 0.0;
+        s.repair(&t);
+        assert_eq!(s.counters.keys_lost, 0);
+        let (total, alive) = s.retrievable(&t);
+        assert_eq!((total, alive), (29, 29));
+        // a rewrite revives it
+        s.put(&t, 5);
+        let (total, alive) = s.retrievable(&t);
+        assert_eq!((total, alive), (30, 30));
+    }
+
+    #[test]
+    fn total_loss_detected_once() {
+        let t0 = table(&[100, 200, 300]);
+        let mut s = layer(10, 3);
+        s.preload(&t0);
+        // everyone who held anything departs; 999 never held any key
+        let t1 = table(&[999]);
+        s.repair(&t1);
+        assert_eq!(s.counters.keys_lost, 10, "all keys lost");
+        s.repair(&t1);
+        assert_eq!(s.counters.keys_lost, 10, "loss counted once");
+        let (total, alive) = s.retrievable(&t1);
+        assert_eq!((total, alive), (10, 0));
+        // a rewrite revives the key on the new population
+        s.put(&t1, 0);
+        let (_, alive) = s.retrievable(&t1);
+        assert_eq!(alive, 1);
+    }
+
+    #[test]
+    fn degraded_get_after_owner_change() {
+        // Ring-spanning peer IDs (keys are SHA-1-uniform over u64, so a
+        // joiner must land inside the occupied arc to take ownership):
+        // a peer at 2Q joins and becomes owner of the (Q, 2Q] keys, but
+        // holds none of them until repair runs.
+        const Q: u64 = u64::MAX / 8;
+        let t0 = table(&[Q, 3 * Q, 5 * Q]);
+        let mut s = layer(60, 2);
+        s.preload(&t0);
+        let t1 = table(&[Q, 2 * Q, 3 * Q, 5 * Q]);
+        s.cfg.put_fraction = 0.0;
+        for _ in 0..400 {
+            s.workload_step(&t1);
+        }
+        assert!(s.counters.gets_degraded > 0, "new owner misses until repair");
+        assert_eq!(s.counters.gets_failed, 0, "old replicas still serve");
+        // after repair the owner holds everything again
+        s.repair(&t1);
+        let before = s.counters.gets_degraded;
+        for _ in 0..200 {
+            s.workload_step(&t1);
+        }
+        assert_eq!(s.counters.gets_degraded, before, "repair restored one-hop reads");
+    }
+}

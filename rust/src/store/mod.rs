@@ -1,0 +1,35 @@
+//! Replicated key–value storage over single-hop lookups.
+//!
+//! D1HT only *routes*: the paper's application claims (§I, §IX — serving
+//! directory workloads for millions of users) need keys that are stored,
+//! replicated, and repaired. This subsystem layers successor-list
+//! replication over the routing substrate, in the style of DHash /
+//! DistHash:
+//!
+//! * [`replication`] — placement: key `k` lives on `succ(k)` and the next
+//!   `R − 1` distinct ring successors (default `R = 3`).
+//! * [`kv`] — the per-peer versioned store the socket runtime uses
+//!   (real bytes; version-idempotent writes make repair safe to repeat).
+//! * [`zipf`] — the workload's key-popularity distribution.
+//! * [`layer`] — [`StoreLayer`]: the simulator's storage model, driven
+//!   by [`crate::dht::d1ht::D1htSim`]. Values are tracked as payload
+//!   sizes (the simulator never materializes bytes); every message is
+//!   charged its exact Figure-2-style wire size from
+//!   [`crate::proto::sizes`].
+//!
+//! EDRA membership events drive repair: a joining peer receives the keys
+//! it now owns (handoff), and replicas of a departed peer's keys are
+//! re-created from the surviving copies. A key is lost only if all `R`
+//! holders depart within one repair interval — with `R = 3` and the
+//! Eq. III.1 churn model this is what keeps ≥ 99.9 % of keys retrievable
+//! (measured by `experiments::store`).
+
+pub mod kv;
+pub mod layer;
+pub mod replication;
+pub mod zipf;
+
+pub use kv::KvStore;
+pub use layer::{StoreCfg, StoreLayer};
+pub use replication::replica_set;
+pub use zipf::Zipf;

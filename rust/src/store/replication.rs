@@ -1,0 +1,71 @@
+//! Replica placement: successor-list replication (DHash/DistHash style).
+
+use crate::id::Id;
+use crate::routing::Table;
+
+/// The peers that should hold `key`: its successor (the *owner*) and the
+/// next `r − 1` distinct ring successors. Clamped to the table size, so
+/// the result always contains distinct live-table members with the owner
+/// first. Empty iff the table is empty or `r == 0`.
+pub fn replica_set(table: &Table, key: Id, r: usize) -> Vec<Id> {
+    if r == 0 {
+        return Vec::new();
+    }
+    let Some(owner) = table.successor(key) else {
+        return Vec::new();
+    };
+    let r = r.min(table.len());
+    let mut set = Vec::with_capacity(r);
+    let mut cur = owner;
+    for _ in 0..r {
+        set.push(cur);
+        match table.succ(cur, 1) {
+            Some(next) => cur = next,
+            None => break, // unreachable: cur is always a member
+        }
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ids: &[u64]) -> Table {
+        Table::from_ids(ids.iter().map(|&x| Id(x)).collect())
+    }
+
+    #[test]
+    fn owner_first_then_successors() {
+        let tb = t(&[10, 20, 30, 40]);
+        assert_eq!(replica_set(&tb, Id(15), 3), vec![Id(20), Id(30), Id(40)]);
+        // wraps around the ring
+        assert_eq!(replica_set(&tb, Id(35), 3), vec![Id(40), Id(10), Id(20)]);
+    }
+
+    #[test]
+    fn clamps_to_population() {
+        let tb = t(&[10, 20]);
+        let s = replica_set(&tb, Id(0), 5);
+        assert_eq!(s, vec![Id(10), Id(20)], "r > n holds every peer once");
+    }
+
+    #[test]
+    fn distinct_members() {
+        let tb = t(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        for key in [0u64, 3, 7, 100] {
+            let s = replica_set(&tb, Id(key), 3);
+            let mut d = s.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), s.len(), "replicas distinct for key {key}");
+        }
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert!(replica_set(&Table::new(), Id(1), 3).is_empty());
+        assert!(replica_set(&t(&[5]), Id(1), 0).is_empty());
+        assert_eq!(replica_set(&t(&[5]), Id(1), 3), vec![Id(5)]);
+    }
+}

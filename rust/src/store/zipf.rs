@@ -1,0 +1,100 @@
+//! Zipf key-popularity sampling for the storage workload.
+//!
+//! Directory-style workloads are heavily skewed; the storage experiment
+//! uses the classic Zipf(s) distribution over a fixed key population
+//! (s ≈ 1 models web/P2P object popularity). Sampling is inversion over
+//! a precomputed CDF: O(K) memory once, O(log K) per sample.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Distribution over ranks `0..n` with exponent `s` (`s = 0` is
+    /// uniform). `n` must be ≥ 1.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1, "Zipf over an empty population");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Sample a rank in `0..n` (rank 0 most popular).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freqs(n: usize, s: f64, samples: usize) -> Vec<u64> {
+        let z = Zipf::new(n, s);
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0u64; n];
+        for _ in 0..samples {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn in_bounds_and_rank0_most_popular() {
+        let c = freqs(100, 0.99, 100_000);
+        assert_eq!(c.iter().sum::<u64>(), 100_000);
+        let max = *c.iter().max().unwrap();
+        assert_eq!(c[0], max, "rank 0 dominates: {c:?}");
+        // head-heavy: the top 10 ranks draw well over a third of mass
+        let head: u64 = c[..10].iter().sum();
+        assert!(head > 35_000, "head mass {head}");
+    }
+
+    #[test]
+    fn zipf_frequency_matches_law() {
+        // P(rank k) ∝ 1/(k+1)^s: rank 0 should appear ~2^s times as
+        // often as rank 1
+        let c = freqs(1000, 1.0, 200_000);
+        let ratio = c[0] as f64 / c[1].max(1) as f64;
+        assert!((1.7..2.4).contains(&ratio), "r0/r1 = {ratio}");
+    }
+
+    #[test]
+    fn exponent_zero_is_uniform() {
+        let c = freqs(10, 0.0, 100_000);
+        for (i, &x) in c.iter().enumerate() {
+            assert!((x as f64 - 10_000.0).abs() < 600.0, "rank {i}: {x}");
+        }
+    }
+
+    #[test]
+    fn single_key_population() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}

@@ -113,6 +113,58 @@ fn mass_failure_recovery() {
     assert!(m.one_hop_ratio() > 0.985, "post-mass-failure one-hop {}", m.one_hop_ratio());
 }
 
+/// §V end-to-end: a quarantined joiner is invisible to the overlay until
+/// promoted — it enters no routing table, triggers no join event, and
+/// receives no maintenance traffic; only after T_q does it join and
+/// start receiving keepalives.
+#[test]
+fn quarantine_gate_blocks_joiners_until_promoted() {
+    let tq = 600.0;
+    let cfg = D1htCfg {
+        churn: ChurnCfg::none(), // isolate the admission gate itself
+        quarantine_tq: Some(tq),
+        lookup_rate: 0.0,
+        ..Default::default()
+    };
+    let mut sim = D1htSim::new(cfg);
+    let mut q = Queue::new();
+    sim.bootstrap(48, &mut q);
+    sim.begin_recording(0.0);
+    let initial: std::collections::BTreeSet<_> =
+        sim.truth().ids().iter().copied().collect();
+    for i in 0..16 {
+        q.at(1.0 + i as f64, Ev::Arrive { label: u64::MAX });
+    }
+    // run to just before T_q: arrivals must be fully invisible
+    run_until(&mut sim, &mut q, tq - 10.0);
+    assert_eq!(sim.size(), 48, "no arrival entered the overlay before T_q");
+    let known = sim.all_known_ids();
+    assert!(
+        known.iter().all(|id| initial.contains(id)),
+        "a quarantined joiner leaked into a routing table"
+    );
+    let msgs_before = sim.metrics().maintenance.msgs_in;
+    assert!(msgs_before > 0, "maintenance keepalives flow among members");
+    // past T_q the survivors are promoted, announced, and fed
+    run_until(&mut sim, &mut q, tq + 400.0);
+    assert_eq!(sim.size(), 48 + 16, "all survivors promoted after T_q");
+    let promoted: Vec<_> = sim
+        .maintenance_msgs_in_by_peer()
+        .into_iter()
+        .filter(|(id, _)| !initial.contains(id))
+        .collect();
+    assert_eq!(promoted.len(), 16);
+    assert!(
+        promoted.iter().all(|&(_, msgs_in)| msgs_in > 0),
+        "every promoted peer receives maintenance traffic: {promoted:?}"
+    );
+    let known = sim.all_known_ids();
+    assert!(
+        known.len() >= 48 + 16,
+        "promoted peers announced into routing tables"
+    );
+}
+
 /// The Quarantine mechanism reduces measured maintenance traffic under
 /// heavy-tailed churn (Fig. 8's simulated counterpart).
 #[test]

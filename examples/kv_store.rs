@@ -37,6 +37,8 @@ fn main() -> d1ht::anyhow::Result<()> {
     t.row(vec!["reads before churn".into(), format!("{}/100 ok", rep.gets_ok)]);
     t.row(vec!["reads after churn".into(), format!("{ok}/100 ok, {missing} missing, {bad} bad")]);
     t.row(vec!["replication msgs".into(), rep.repl_msgs.to_string()]);
+    t.row(vec!["bulk transfers (table/handoff)".into(), rep.bulk_transfers.to_string()]);
+    t.row(vec!["bulk resumes".into(), rep.bulk_resumes.to_string()]);
     println!("{}", t.render());
 
     d1ht::anyhow::ensure!(bad == 0, "corruption after churn");

@@ -6,7 +6,10 @@
 //! Also home of [`TransportTuning`], the reliable-UDP knobs
 //! (`net/transport.rs`) tests and deployments tune via config keys
 //! `rto-ms`, `max-retries`, `seen-cap`, `seen-expiry-secs` (env:
-//! `D1HT_RTO_MS`, ...).
+//! `D1HT_RTO_MS`, ...), and of [`BulkTuning`], the bulk-transfer
+//! channel knobs (`net/bulk.rs`) behind `bulk-frame-bytes`,
+//! `bulk-window-frames`, `bulk-resume-retries`, `bulk-stall-ms`,
+//! `bulk-ack-every`, `bulk-tcp`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -123,6 +126,77 @@ impl TransportTuning {
     }
 }
 
+/// Bulk-transfer channel knobs (`net/bulk.rs`): frame size, in-flight
+/// window, resume/stall budget. The channel moves routing tables and
+/// store key ranges that no longer fit a datagram; see docs/WIRE.md for
+/// the frame layouts these parameters govern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BulkTuning {
+    /// Data payload bytes per frame. Must fit a datagram in the
+    /// chunked-UDP fallback, so it is clamped to 60 000 at use sites;
+    /// the default stays far below typical path MTUs on purpose.
+    pub frame_bytes: usize,
+    /// Max unacknowledged frames in flight per transfer (the chunked-UDP
+    /// fallback's send window; TCP gets backpressure from the kernel).
+    pub window_frames: usize,
+    /// Stalled-progress periods tolerated before a sender gives a
+    /// transfer up (the receiver is presumed dead) or a receiver drops a
+    /// half-received transfer. Defaults to [`TransportTuning::max_retries`]
+    /// so datagram and bulk retry budgets move together.
+    pub resume_retries: u32,
+    /// How long a transfer may make no progress before the endpoint
+    /// re-offers / re-pulls (and spends one of `resume_retries`).
+    pub stall: Duration,
+    /// Cumulative-ack frequency, in data frames.
+    pub ack_every: usize,
+    /// Serve the data plane over a TCP listener (§VI's transfer channel).
+    /// When false — or when the listener cannot bind — data frames fall
+    /// back to chunked-UDP datagrams behind the same
+    /// [`crate::net::bulk::DataPlane`] trait, which keeps single-socket
+    /// tests loopback-friendly.
+    pub use_tcp: bool,
+}
+
+impl Default for BulkTuning {
+    fn default() -> Self {
+        Self::for_transport(&TransportTuning::default())
+    }
+}
+
+impl BulkTuning {
+    /// Derive the bulk knobs from the datagram transport's: the stall
+    /// timeout covers a full datagram retry cycle (`rto × (retries + 1)`)
+    /// so the bulk layer never declares a stall while the control plane
+    /// may still legitimately be retransmitting, and the resume budget
+    /// equals `max_retries` (the ISSUE-2 bounded-handoff-retry fix).
+    pub fn for_transport(t: &TransportTuning) -> Self {
+        BulkTuning {
+            frame_bytes: 1200,
+            window_frames: 32,
+            resume_retries: t.max_retries,
+            stall: t.rto.saturating_mul(t.max_retries + 1),
+            ack_every: 8,
+            use_tcp: true,
+        }
+    }
+
+    /// Read the tuning from a [`Config`] (missing keys keep the defaults
+    /// derived from `transport`; `D1HT_*` env overrides win as usual).
+    pub fn from_config(cfg: &Config, transport: &TransportTuning) -> Result<Self> {
+        let d = Self::for_transport(transport);
+        Ok(BulkTuning {
+            frame_bytes: cfg.get_usize("bulk-frame-bytes", d.frame_bytes)?.clamp(64, 60_000),
+            window_frames: cfg.get_usize("bulk-window-frames", d.window_frames)?.max(1),
+            resume_retries: cfg.get_usize("bulk-resume-retries", d.resume_retries as usize)? as u32,
+            stall: Duration::from_millis(
+                cfg.get_usize("bulk-stall-ms", d.stall.as_millis() as usize)?.max(1) as u64,
+            ),
+            ack_every: cfg.get_usize("bulk-ack-every", d.ack_every)?.max(1),
+            use_tcp: cfg.get_bool("bulk-tcp", d.use_tcp)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +235,27 @@ mod tests {
         assert_eq!(t.seen_cap, 128);
         assert_eq!(t.seen_expiry, TransportTuning::default().seen_expiry);
         assert!(TransportTuning::from_config(&Config::parse("rto-ms = x\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn bulk_tuning_from_config() {
+        let tr = TransportTuning::default();
+        let d = BulkTuning::from_config(&Config::new(), &tr).unwrap();
+        assert_eq!(d, BulkTuning::default());
+        assert_eq!(d.resume_retries, tr.max_retries, "retry budgets tied together");
+        assert_eq!(d.stall, tr.rto * (tr.max_retries + 1));
+        let c = Config::parse(
+            "bulk-frame-bytes = 4096\nbulk-window-frames = 4\nbulk-tcp = false\nbulk-stall-ms = 50\n",
+        )
+        .unwrap();
+        let b = BulkTuning::from_config(&c, &tr).unwrap();
+        assert_eq!(b.frame_bytes, 4096);
+        assert_eq!(b.window_frames, 4);
+        assert!(!b.use_tcp);
+        assert_eq!(b.stall, Duration::from_millis(50));
+        // frame size is clamped to datagram-safe bounds
+        let c = Config::parse("bulk-frame-bytes = 1000000\n").unwrap();
+        assert_eq!(BulkTuning::from_config(&c, &tr).unwrap().frame_bytes, 60_000);
     }
 
     #[test]

@@ -697,12 +697,14 @@ impl D1htSim {
             None => (self.truth.clone(), 0.0),
         };
         if self.peers.contains_key(&succ_id) {
-            // table transfer over TCP: total traffic, not maintenance
-            let bits = 320 + table.len() as u64 * 48;
+            // table transfer streamed over the bulk channel (TCP in the
+            // real runtime, `net/bulk.rs`): total traffic, not
+            // maintenance — §VII-A excludes transfers from the figures
+            let bits = sizes::table_transfer_bits(table.len());
             self.charge_send(succ_id, bits, false);
         }
         table.insert(id);
-        self.charge_recv(id, 320 + table.len() as u64 * 48, false);
+        self.charge_recv(id, sizes::table_transfer_bits(table.len()), false);
         let mut edra = Edra::new(id, self.cfg.f, now);
         edra.tuner = crate::edra::ThetaTuner::with_prior_rate(self.cfg.f, rate_prior);
         self.next_epoch += 1;

@@ -10,7 +10,9 @@
 //!   multi-hop DHT (the paper's Chimera), and a central directory server.
 //! * [`sim`] — deterministic discrete-event simulator standing in for the
 //!   paper's PlanetLab / HPC testbeds (DESIGN.md §4 lists substitutions).
-//! * [`net`] — a *real* D1HT over UDP/TCP sockets (std::net + threads).
+//! * [`net`] — a *real* D1HT over UDP/TCP sockets (std::net + threads),
+//!   including [`net::bulk`], the streamed bulk-transfer channel behind
+//!   §VI routing-table transfers and store key handoffs.
 //! * [`analysis`] — the closed-form maintenance-bandwidth models (§VIII).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   lookup and analytics graphs (`artifacts/*.hlo.txt`).
@@ -22,6 +24,11 @@
 //!
 //! Layering: python (JAX + Pallas) runs only at build time (`make
 //! artifacts`); this crate is self-contained at run time.
+//!
+//! Repository-level companions to this rustdoc: `ARCHITECTURE.md` maps
+//! every paper section to its module and walks the join/handoff flows;
+//! `docs/WIRE.md` specifies each datagram and bulk frame byte-by-byte
+//! with its Figure-2 wire cost.
 //!
 //! # The `store/` subsystem: replication and repair
 //!
@@ -48,7 +55,9 @@
 //!   sizes ([`proto::sizes`]): `Get` costs `V_STORE` (the four common
 //!   fields + a 20-byte key, like a lookup), `Put`/`GetResp` add the
 //!   value payload, `Replicate` adds a 64-bit version, and bulk
-//!   `Handoff` uses TCP-style framing like the §VI table transfer.
+//!   `Handoff` streams over the [`net::bulk`] channel and is charged
+//!   its offer/frame/ack costs ([`proto::sizes::handoff_bits`]) — the
+//!   same framing the §VI routing-table transfer uses.
 //!
 //! Both runtimes implement the same protocol: the deterministic
 //! simulator ([`store::StoreLayer`] driven by [`dht::d1ht::D1htSim`],

@@ -1,0 +1,1186 @@
+//! Streamed bulk-transfer channel for routing-table transfer and store
+//! key handoff (§VI).
+//!
+//! D1HT's single-hop guarantee is only sustainable if a joiner receives
+//! the *full* routing table, and §V's Quarantine exists precisely
+//! because those transfers are expensive — so, like DHash's replica
+//! mover and DistHash's table streamer, bulk movement is a first-class
+//! protocol here, distinct from the routing datagrams:
+//!
+//! * **Framed.** A transfer is one encoded [`BulkPayload`] blob, cut
+//!   into `[offset | len | crc | bytes]` frames. Every frame carries its
+//!   byte offset and a checksum, so delivery is verifiable per-frame and
+//!   the whole blob re-checks against the offered 64-bit digest.
+//! * **Resumable.** The receiver acknowledges a *contiguous prefix*
+//!   (`BulkAck { next }`). An interrupted transfer — lost frames, a cut
+//!   connection, even a restarted sender endpoint — resumes from that
+//!   offset: transfer ids are content-addressed (kind ⊕ digest ⊕ length
+//!   ⊕ destination), so a re-offer of the same blob matches the
+//!   receiver's partial state and `BulkAccept { from }` picks up where
+//!   it stopped instead of restarting.
+//! * **Backpressured.** Over TCP the kernel window throttles the
+//!   sender (plus a per-pump pacing cap); the chunked-UDP fallback
+//!   keeps at most [`BulkTuning::window_frames`] unacknowledged frames
+//!   in flight.
+//! * **Bounded.** A transfer that makes no progress for
+//!   [`BulkTuning::stall`] spends one of
+//!   [`BulkTuning::resume_retries`]; when the budget is gone the sender
+//!   drops the transfer (and reports it via
+//!   [`BulkEndpoint::take_completed_sends`]) instead of retrying a dead
+//!   peer forever.
+//!
+//! The *control* plane (offer / accept / ack / nack / done) always
+//! travels as datagrams on the peer's existing reliable-UDP
+//! [`Transport`]. The *data* plane is pluggable behind [`DataPlane`]:
+//! [`TcpPlane`] serves receiver-driven pulls from a listener advertised
+//! in the offer (the paper's "transfers use TCP"), and [`UdpPlane`] is
+//! the chunked-datagram fallback that keeps single-socket tests
+//! loopback-friendly. Frame layouts and exact wire costs are specified
+//! in `docs/WIRE.md` and charged via [`crate::proto::sizes`].
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, SocketAddrV4, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::anyhow::{bail, Result};
+use crate::config::BulkTuning;
+use crate::net::transport::Transport;
+use crate::net::wire::{self, NetMsg, Rd};
+
+/// Payload kind tags carried in `BulkOffer` (wire-stable).
+pub const K_TABLE: u8 = 1;
+pub const K_HANDOFF: u8 = 2;
+
+/// Hard cap on an offered transfer: a spoofed `total` beyond this is
+/// rejected before any buffer grows.
+const MAX_TOTAL: u64 = 1 << 30;
+/// Sanity cap on a single frame's payload (both planes).
+const MAX_FRAME: usize = 1 << 20;
+/// TCP pull-request magic, so stray connections to the serve port are
+/// dropped instead of misparsed.
+const PULL_MAGIC: u32 = 0xD1B7_B41C;
+/// How long a completed transfer is remembered so a retransmitted offer
+/// gets a fresh `BulkDone` instead of a ghost restart.
+const DONE_CACHE_TTL: Duration = Duration::from_secs(30);
+
+/// What the bulk channel moves: the §VI routing-table transfer, or a
+/// store key-range handoff (key, version, tombstone, value).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BulkPayload {
+    Table { addrs: Vec<SocketAddrV4> },
+    Handoff { pairs: Vec<(u64, u64, bool, Vec<u8>)> },
+}
+
+impl BulkPayload {
+    pub fn kind(&self) -> u8 {
+        match self {
+            BulkPayload::Table { .. } => K_TABLE,
+            BulkPayload::Handoff { .. } => K_HANDOFF,
+        }
+    }
+
+    /// Encode to the blob the frames carry (layouts in docs/WIRE.md;
+    /// same big-endian field conventions as `net/wire.rs`).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            BulkPayload::Table { addrs } => {
+                let mut b = Vec::with_capacity(4 + addrs.len() * 6);
+                b.extend_from_slice(&(addrs.len() as u32).to_be_bytes());
+                for a in addrs {
+                    wire::push_addr(&mut b, a);
+                }
+                b
+            }
+            BulkPayload::Handoff { pairs } => {
+                let mut b = Vec::with_capacity(4 + pairs.len() * 24);
+                b.extend_from_slice(&(pairs.len() as u32).to_be_bytes());
+                for (k, v, tomb, bytes) in pairs {
+                    b.extend_from_slice(&k.to_be_bytes());
+                    b.extend_from_slice(&v.to_be_bytes());
+                    b.push(*tomb as u8);
+                    wire::push_bytes(&mut b, bytes);
+                }
+                b
+            }
+        }
+    }
+
+    pub fn decode(kind: u8, buf: &[u8]) -> Result<BulkPayload> {
+        let mut r = Rd::new(buf);
+        match kind {
+            K_TABLE => Ok(BulkPayload::Table { addrs: r.addrs()? }),
+            K_HANDOFF => {
+                let n = r.u32()? as usize;
+                // each entry costs >= 21 encoded bytes (see net/wire.rs)
+                if n > r.remaining() / 21 {
+                    bail!("implausible handoff count {n}");
+                }
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pairs.push((r.u64()?, r.u64()?, r.u8()? != 0, r.bytes()?));
+                }
+                Ok(BulkPayload::Handoff { pairs })
+            }
+            k => bail!("unknown bulk payload kind {k}"),
+        }
+    }
+}
+
+/// FNV-1a, the channel's checksum (integrity against truncation and
+/// reassembly bugs, not an adversarial MAC).
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn fnv32(bytes: &[u8]) -> u32 {
+    let h = fnv64(bytes);
+    (h ^ (h >> 32)) as u32
+}
+
+/// Content-addressed transfer id: a restarted sender re-offering the
+/// same blob to the same destination computes the same id, which is what
+/// lets the receiver resume from its partial state.
+fn transfer_id(kind: u8, total: u64, crc: u64, to: SocketAddrV4) -> u64 {
+    let mut b = Vec::with_capacity(23);
+    b.push(kind);
+    b.extend_from_slice(&total.to_be_bytes());
+    b.extend_from_slice(&crc.to_be_bytes());
+    b.extend_from_slice(&to.ip().octets());
+    b.extend_from_slice(&to.port().to_be_bytes());
+    fnv64(&b).max(1)
+}
+
+/// Transfer-progress counters surfaced in `PeerStats` and the cluster
+/// reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BulkCounters {
+    pub sends_started: u64,
+    pub sends_completed: u64,
+    /// Senders that exhausted their resume budget (receiver presumed
+    /// dead) — the bounded-retry headline.
+    pub sends_gave_up: u64,
+    pub recvs_completed: u64,
+    /// Transfers that completed but failed the whole-blob checksum or
+    /// payload decode.
+    pub recvs_corrupt: u64,
+    /// Transfers continued from a nonzero offset instead of restarting.
+    pub resumes: u64,
+    /// Data-plane payload bytes (frame payloads, both planes).
+    pub data_bytes_sent: u64,
+    pub data_bytes_recv: u64,
+    /// Payload bytes pushed again below the high-water mark (chunked-UDP
+    /// fallback rewinds; TCP re-pulls are counted by `resumes`).
+    pub data_bytes_resent: u64,
+}
+
+/// Sender-side state of one in-flight transfer.
+pub struct SendState {
+    to: SocketAddrV4,
+    kind: u8,
+    blob: Vec<u8>,
+    crc: u64,
+    /// Receiver's confirmed contiguous prefix.
+    acked: u64,
+    /// Next byte the UDP push plane will send.
+    cursor: u64,
+    /// Highest byte ever sent (resend accounting).
+    high_water: u64,
+    accepted: bool,
+    /// Already counted in `BulkCounters::resumes` (count once per
+    /// transfer, however many stalls it takes).
+    resumed: bool,
+    last_progress: Instant,
+    stalls: u32,
+}
+
+impl SendState {
+    fn len(&self) -> u64 {
+        self.blob.len() as u64
+    }
+}
+
+/// Receiver-side state of one in-flight transfer (the sender's
+/// transport address lives in the `recvs` map key).
+struct RecvState {
+    kind: u8,
+    total: u64,
+    crc: u64,
+    /// Contiguous prefix received so far (`buf.len()` = acked offset).
+    buf: Vec<u8>,
+    sender_tcp: u16,
+    /// Already counted in `BulkCounters::resumes`.
+    resumed: bool,
+    last_progress: Instant,
+    nacks: u32,
+    frames_since_ack: usize,
+}
+
+impl RecvState {
+    fn got(&self) -> u64 {
+        self.buf.len() as u64
+    }
+
+    /// Append a frame if it extends the contiguous prefix; duplicates
+    /// and out-of-order frames are dropped (the cumulative-ack/stall
+    /// machinery recovers the gap).
+    fn accept_data(&mut self, offset: u64, crc: u32, bytes: &[u8], c: &mut BulkCounters) -> bool {
+        if offset != self.got()
+            || bytes.is_empty()
+            || self.got() + bytes.len() as u64 > self.total
+            || fnv32(bytes) != crc
+        {
+            return false;
+        }
+        self.buf.extend_from_slice(bytes);
+        c.data_bytes_recv += bytes.len() as u64;
+        self.frames_since_ack += 1;
+        self.last_progress = Instant::now();
+        self.nacks = 0;
+        true
+    }
+}
+
+/// The transfer data plane: moves `Data` frames, while control always
+/// rides the reliable-UDP transport. Two implementations: [`TcpPlane`]
+/// (receiver-driven pulls from a listener, §VI) and the [`UdpPlane`]
+/// chunked-datagram fallback.
+pub trait DataPlane {
+    /// Serve port advertised in offers; 0 means "no listener — push
+    /// chunked-UDP data frames instead".
+    fn listen_port(&self) -> u16;
+
+    /// Sender side: move pending blob bytes toward their receivers.
+    fn pump_send(
+        &mut self,
+        tr: &mut Transport,
+        sends: &mut BTreeMap<u64, SendState>,
+        tuning: &BulkTuning,
+        counters: &mut BulkCounters,
+    );
+}
+
+/// Chunked-UDP fallback: pushes `BulkData` datagrams with a bounded
+/// in-flight window; loss is recovered by stall-driven rewinds to the
+/// cumulative ack.
+pub struct UdpPlane;
+
+impl DataPlane for UdpPlane {
+    fn listen_port(&self) -> u16 {
+        0
+    }
+
+    fn pump_send(
+        &mut self,
+        tr: &mut Transport,
+        sends: &mut BTreeMap<u64, SendState>,
+        tuning: &BulkTuning,
+        counters: &mut BulkCounters,
+    ) {
+        let frame = tuning.frame_bytes.clamp(64, 60_000) as u64;
+        for (&id, st) in sends.iter_mut() {
+            if !st.accepted {
+                continue;
+            }
+            let window_end = st.acked + tuning.window_frames as u64 * frame;
+            let mut budget = tuning.window_frames;
+            while st.cursor < st.len() && st.cursor < window_end && budget > 0 {
+                let end = (st.cursor + frame).min(st.len());
+                let chunk = &st.blob[st.cursor as usize..end as usize];
+                let msg = NetMsg::BulkData {
+                    id,
+                    offset: st.cursor,
+                    crc: fnv32(chunk),
+                    bytes: chunk.to_vec(),
+                };
+                tr.send(st.to, &msg).ok();
+                counters.data_bytes_sent += chunk.len() as u64;
+                if end <= st.high_water {
+                    counters.data_bytes_resent += chunk.len() as u64;
+                }
+                st.cursor = end;
+                st.high_water = st.high_water.max(end);
+                budget -= 1;
+            }
+        }
+    }
+}
+
+/// One accepted pull connection on the serve listener.
+struct ServeConn {
+    stream: TcpStream,
+    hdr: Vec<u8>,
+    id: u64,
+    cursor: u64,
+    started: bool,
+    dead: bool,
+    /// Frame bytes built but not yet accepted by the kernel.
+    out: Vec<u8>,
+    out_pos: usize,
+    opened_at: Instant,
+}
+
+/// TCP data plane: a non-blocking listener serving receiver-driven
+/// pulls. The receiver connects to the port advertised in the offer,
+/// writes `[PULL_MAGIC | id | from]`, and reads length-prefixed frames
+/// from that offset; reconnecting with a higher offset *is* the resume.
+pub struct TcpPlane {
+    listener: TcpListener,
+    port: u16,
+    conns: Vec<ServeConn>,
+}
+
+impl TcpPlane {
+    pub fn bind() -> Result<TcpPlane> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let port = listener.local_addr()?.port();
+        Ok(TcpPlane { listener, port, conns: Vec::new() })
+    }
+}
+
+impl DataPlane for TcpPlane {
+    fn listen_port(&self) -> u16 {
+        self.port
+    }
+
+    fn pump_send(
+        &mut self,
+        tr: &mut Transport,
+        sends: &mut BTreeMap<u64, SendState>,
+        tuning: &BulkTuning,
+        counters: &mut BulkCounters,
+    ) {
+        // accept new pulls
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.conns.push(ServeConn {
+                        stream,
+                        hdr: Vec::with_capacity(20),
+                        id: 0,
+                        cursor: 0,
+                        started: false,
+                        dead: false,
+                        out: Vec::new(),
+                        out_pos: 0,
+                        opened_at: Instant::now(),
+                    });
+                }
+                Err(_) => break, // WouldBlock or transient — retry next pump
+            }
+        }
+        let frame = tuning.frame_bytes.clamp(64, MAX_FRAME) as u64;
+        // per-pump pacing: at most one window's worth of payload per
+        // connection, so a kill mid-transfer cannot hide behind kernel
+        // buffering and huge blobs don't monopolize the peer tick
+        let pace = tuning.window_frames as u64 * frame;
+        for conn in &mut self.conns {
+            if conn.dead {
+                continue;
+            }
+            if !conn.started {
+                // read the 20-byte pull request
+                let mut tmp = [0u8; 20];
+                let want = 20 - conn.hdr.len();
+                match conn.stream.read(&mut tmp[..want]) {
+                    Ok(0) => conn.dead = true,
+                    Ok(n) => conn.hdr.extend_from_slice(&tmp[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => conn.dead = true,
+                }
+                if conn.hdr.len() == 20 {
+                    let magic = u32::from_be_bytes(conn.hdr[0..4].try_into().unwrap());
+                    let id = u64::from_be_bytes(conn.hdr[4..12].try_into().unwrap());
+                    let from = u64::from_be_bytes(conn.hdr[12..20].try_into().unwrap());
+                    match sends.get(&id) {
+                        Some(st) if magic == PULL_MAGIC && from <= st.len() => {
+                            conn.id = id;
+                            conn.cursor = from;
+                            conn.started = true;
+                        }
+                        _ => conn.dead = true, // stray or stale connection
+                    }
+                } else if conn.opened_at.elapsed() > Duration::from_secs(5) {
+                    conn.dead = true; // header never arrived
+                }
+                if !conn.started {
+                    continue;
+                }
+            }
+            let Some(st) = sends.get_mut(&conn.id) else {
+                conn.dead = true; // transfer completed or gave up
+                continue;
+            };
+            let mut moved = 0u64;
+            loop {
+                // flush whatever frame bytes are pending
+                while conn.out_pos < conn.out.len() {
+                    match conn.stream.write(&conn.out[conn.out_pos..]) {
+                        Ok(0) => {
+                            conn.dead = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            conn.out_pos += n;
+                            tr.charge_stream(n, 0);
+                            st.last_progress = Instant::now();
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            conn.dead = true;
+                            break;
+                        }
+                    }
+                }
+                if conn.dead || conn.out_pos < conn.out.len() {
+                    break; // backpressure (or error): resume next pump
+                }
+                conn.out.clear();
+                conn.out_pos = 0;
+                if conn.cursor >= st.len() || moved >= pace {
+                    break;
+                }
+                // build the next frame
+                let end = (conn.cursor + frame).min(st.len());
+                let chunk = &st.blob[conn.cursor as usize..end as usize];
+                conn.out.extend_from_slice(&conn.cursor.to_be_bytes());
+                conn.out.extend_from_slice(&(chunk.len() as u32).to_be_bytes());
+                conn.out.extend_from_slice(&fnv32(chunk).to_be_bytes());
+                conn.out.extend_from_slice(chunk);
+                counters.data_bytes_sent += chunk.len() as u64;
+                if end <= st.high_water {
+                    counters.data_bytes_resent += chunk.len() as u64;
+                }
+                moved += chunk.len() as u64;
+                conn.cursor = end;
+                st.high_water = st.high_water.max(end);
+            }
+            if conn.started && conn.out_pos >= conn.out.len() && conn.cursor >= st.len() {
+                conn.dead = true; // fully served; FIN after the last frame
+            }
+        }
+        self.conns.retain(|c| !c.dead);
+    }
+}
+
+/// Receiver side of one TCP pull.
+struct PullConn {
+    key: (SocketAddrV4, u64),
+    stream: TcpStream,
+    hdr: Vec<u8>,
+    hdr_pos: usize,
+    /// Unparsed inbound stream bytes (partial frames).
+    buf: Vec<u8>,
+}
+
+/// One peer's bulk endpoint: sender and receiver state for every
+/// in-flight transfer, the pluggable data plane, and the stall/resume
+/// machinery. Drive it from the owner's event loop: feed inbound bulk
+/// control datagrams to [`handle`](BulkEndpoint::handle) and call
+/// [`pump`](BulkEndpoint::pump) every tick; collect finished payloads
+/// with [`take_ready`](BulkEndpoint::take_ready) and send outcomes with
+/// [`take_completed_sends`](BulkEndpoint::take_completed_sends).
+pub struct BulkEndpoint {
+    tuning: BulkTuning,
+    plane: Box<dyn DataPlane + Send>,
+    sends: BTreeMap<u64, SendState>,
+    recvs: BTreeMap<(SocketAddrV4, u64), RecvState>,
+    pulls: Vec<PullConn>,
+    ready: Vec<(SocketAddrV4, BulkPayload)>,
+    completed_sends: Vec<(u64, bool)>,
+    done_cache: Vec<((SocketAddrV4, u64), Instant)>,
+    pub counters: BulkCounters,
+}
+
+impl BulkEndpoint {
+    /// Build an endpoint. With `use_tcp` the data plane is a TCP
+    /// listener on an ephemeral loopback port (advertised per-offer);
+    /// if the listener cannot bind — or `use_tcp` is off — the
+    /// chunked-UDP fallback serves the same trait.
+    pub fn new(tuning: BulkTuning) -> BulkEndpoint {
+        let plane: Box<dyn DataPlane + Send> = if tuning.use_tcp {
+            match TcpPlane::bind() {
+                Ok(p) => Box::new(p),
+                Err(_) => Box::new(UdpPlane),
+            }
+        } else {
+            Box::new(UdpPlane)
+        };
+        BulkEndpoint {
+            tuning,
+            plane,
+            sends: BTreeMap::new(),
+            recvs: BTreeMap::new(),
+            pulls: Vec::new(),
+            ready: Vec::new(),
+            completed_sends: Vec::new(),
+            done_cache: Vec::new(),
+            counters: BulkCounters::default(),
+        }
+    }
+
+    /// The serve port the next offer will advertise (0 = UDP fallback).
+    pub fn listen_port(&self) -> u16 {
+        self.plane.listen_port()
+    }
+
+    pub fn sends_in_flight(&self) -> usize {
+        self.sends.len()
+    }
+
+    pub fn recvs_in_flight(&self) -> usize {
+        self.recvs.len()
+    }
+
+    /// Receiver progress snapshots: `(transfer id, bytes got, total)`.
+    pub fn recv_progress(&self) -> Vec<(u64, u64, u64)> {
+        self.recvs.iter().map(|(&(_, id), st)| (id, st.got(), st.total)).collect()
+    }
+
+    /// Completed inbound payloads, with the sender's transport address.
+    pub fn take_ready(&mut self) -> Vec<(SocketAddrV4, BulkPayload)> {
+        std::mem::take(&mut self.ready)
+    }
+
+    /// Outcomes of finished outbound transfers: `(id, delivered)`.
+    /// `false` means the resume budget ran out or the receiver reported
+    /// corruption — the payload was NOT delivered.
+    pub fn take_completed_sends(&mut self) -> Vec<(u64, bool)> {
+        std::mem::take(&mut self.completed_sends)
+    }
+
+    /// Start (or join) a transfer of `payload` to `to`; returns the
+    /// content-addressed transfer id. Re-starting an identical payload
+    /// while it is still in flight is a no-op returning the same id.
+    pub fn start(&mut self, tr: &mut Transport, to: SocketAddrV4, payload: &BulkPayload) -> u64 {
+        let blob = payload.encode();
+        let crc = fnv64(&blob);
+        let kind = payload.kind();
+        let id = transfer_id(kind, blob.len() as u64, crc, to);
+        if self.sends.contains_key(&id) {
+            return id;
+        }
+        let total = blob.len() as u64;
+        self.sends.insert(
+            id,
+            SendState {
+                to,
+                kind,
+                blob,
+                crc,
+                acked: 0,
+                cursor: 0,
+                high_water: 0,
+                accepted: false,
+                resumed: false,
+                last_progress: Instant::now(),
+                stalls: 0,
+            },
+        );
+        self.counters.sends_started += 1;
+        let seq = tr.fresh_seq();
+        tr.send(
+            to,
+            &NetMsg::BulkOffer { seq, id, kind, total, crc, tcp_port: self.plane.listen_port() },
+        )
+        .ok();
+        id
+    }
+
+    /// Feed one inbound datagram; returns `true` iff it was a bulk
+    /// control/data message (consumed), `false` to let the caller's own
+    /// dispatch handle it.
+    pub fn handle(&mut self, tr: &mut Transport, from: SocketAddrV4, msg: &NetMsg) -> bool {
+        match msg {
+            NetMsg::BulkOffer { id, kind, total, crc, tcp_port, .. } => {
+                self.on_offer(tr, from, *id, *kind, *total, *crc, *tcp_port);
+            }
+            NetMsg::BulkAccept { id, from: off } => {
+                // sender-side control is only trusted from the transfer's
+                // destination — a stray/forged datagram must not be able
+                // to advance, rewind, or complete someone else's transfer
+                if let Some(st) = self.sends.get_mut(id) {
+                    if st.to == from && *off <= st.len() {
+                        st.accepted = true;
+                        st.acked = st.acked.max(*off);
+                        // a stale duplicate accept must not rewind below
+                        // what later acks already confirmed
+                        st.cursor = st.acked;
+                        st.stalls = 0;
+                        st.last_progress = Instant::now();
+                        if *off > 0 && !st.resumed {
+                            st.resumed = true;
+                            self.counters.resumes += 1;
+                        }
+                    }
+                }
+            }
+            NetMsg::BulkData { id, offset, crc, bytes } => {
+                if let Some(st) = self.recvs.get_mut(&(from, *id)) {
+                    st.accept_data(*offset, *crc, bytes, &mut self.counters);
+                }
+            }
+            NetMsg::BulkAck { id, next } => {
+                let mut finished = false;
+                if let Some(st) = self.sends.get_mut(id) {
+                    if st.to != from {
+                        return true;
+                    }
+                    if *next > st.acked && *next <= st.len() {
+                        st.acked = *next;
+                        st.stalls = 0;
+                        st.last_progress = Instant::now();
+                    }
+                    finished = st.acked >= st.len();
+                }
+                if finished {
+                    self.sends.remove(id);
+                    self.counters.sends_completed += 1;
+                    self.completed_sends.push((*id, true));
+                }
+            }
+            NetMsg::BulkNack { id, from: off } => {
+                if let Some(st) = self.sends.get_mut(id) {
+                    if st.to == from && *off <= st.len() {
+                        st.accepted = true;
+                        st.acked = *off;
+                        st.cursor = *off; // rewind (UDP push plane)
+                        st.last_progress = Instant::now();
+                    }
+                }
+            }
+            NetMsg::BulkDone { id, ok, .. } => {
+                if self.sends.get(id).map(|st| st.to == from).unwrap_or(false) {
+                    self.sends.remove(id);
+                    if *ok {
+                        self.counters.sends_completed += 1;
+                    } else {
+                        self.counters.sends_gave_up += 1;
+                    }
+                    self.completed_sends.push((*id, *ok));
+                }
+            }
+            _ => return false,
+        }
+        true
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_offer(
+        &mut self,
+        tr: &mut Transport,
+        from: SocketAddrV4,
+        id: u64,
+        kind: u8,
+        total: u64,
+        crc: u64,
+        tcp_port: u16,
+    ) {
+        let key = (from, id);
+        let now = Instant::now();
+        self.done_cache.retain(|(_, t)| now.duration_since(*t) < DONE_CACHE_TTL);
+        if self.done_cache.iter().any(|(k, _)| *k == key) {
+            // retransmitted offer for a transfer we already finished
+            let seq = tr.fresh_seq();
+            tr.send(from, &NetMsg::BulkDone { seq, id, ok: true }).ok();
+            return;
+        }
+        if total == 0 || total > MAX_TOTAL {
+            let seq = tr.fresh_seq();
+            tr.send(from, &NetMsg::BulkDone { seq, id, ok: false }).ok();
+            return;
+        }
+        let stale = self
+            .recvs
+            .get(&key)
+            .map(|st| st.kind != kind || st.total != total || st.crc != crc)
+            .unwrap_or(false);
+        if stale {
+            self.recvs.remove(&key);
+        }
+        let st = self.recvs.entry(key).or_insert_with(|| RecvState {
+            kind,
+            total,
+            crc,
+            buf: Vec::new(),
+            sender_tcp: tcp_port,
+            resumed: false,
+            last_progress: now,
+            nacks: 0,
+            frames_since_ack: 0,
+        });
+        st.sender_tcp = tcp_port;
+        st.last_progress = now;
+        let got = st.got();
+        if got > 0 && !st.resumed {
+            st.resumed = true;
+            self.counters.resumes += 1;
+        }
+        tr.send(from, &NetMsg::BulkAccept { id, from: got }).ok();
+        if tcp_port != 0 {
+            self.begin_pull(from, tcp_port, id, got);
+        }
+    }
+
+    /// Open (or reopen) the receiver-driven pull connection for a
+    /// TCP-served transfer, asking for bytes from `offset`.
+    fn begin_pull(&mut self, from: SocketAddrV4, tcp_port: u16, id: u64, offset: u64) {
+        let key = (from, id);
+        self.pulls.retain(|p| p.key != key);
+        let target = SocketAddr::V4(SocketAddrV4::new(*from.ip(), tcp_port));
+        // The one blocking call in the channel. On the loopback paths
+        // this runtime binds, connect either completes or is refused
+        // immediately; the timeout only bounds pathological SYN loss so
+        // a dead sender cannot freeze the peer's event loop for long
+        // (re-pull attempts are already bounded by `resume_retries`).
+        let Ok(stream) = TcpStream::connect_timeout(&target, Duration::from_millis(75)) else {
+            return; // stall sweep retries via nack + re-pull
+        };
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let mut hdr = Vec::with_capacity(20);
+        hdr.extend_from_slice(&PULL_MAGIC.to_be_bytes());
+        hdr.extend_from_slice(&id.to_be_bytes());
+        hdr.extend_from_slice(&offset.to_be_bytes());
+        self.pulls.push(PullConn { key, stream, hdr, hdr_pos: 0, buf: Vec::new() });
+    }
+
+    /// Drive all transfers one step: serve/push outbound data, read
+    /// inbound pull streams, flush cumulative acks, finish completed
+    /// blobs, and run the stall/give-up sweep. Call once per event-loop
+    /// tick.
+    pub fn pump(&mut self, tr: &mut Transport) {
+        self.plane.pump_send(tr, &mut self.sends, &self.tuning, &mut self.counters);
+        self.pump_pulls(tr);
+        self.flush_acks(tr);
+        self.finish_recvs(tr);
+        self.sweep(tr);
+    }
+
+    fn pump_pulls(&mut self, tr: &mut Transport) {
+        let mut dead: Vec<(SocketAddrV4, u64)> = Vec::new();
+        for conn in &mut self.pulls {
+            if !self.recvs.contains_key(&conn.key) {
+                dead.push(conn.key);
+                continue;
+            }
+            // finish writing the pull request
+            while conn.hdr_pos < conn.hdr.len() {
+                match conn.stream.write(&conn.hdr[conn.hdr_pos..]) {
+                    Ok(0) => {
+                        dead.push(conn.key);
+                        break;
+                    }
+                    Ok(n) => conn.hdr_pos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead.push(conn.key);
+                        break;
+                    }
+                }
+            }
+            if conn.hdr_pos < conn.hdr.len() {
+                continue;
+            }
+            // read available frames (bounded per pump: unread bytes stay
+            // in the kernel buffer, which is the backpressure)
+            let mut tmp = [0u8; 16384];
+            let mut budget = 8;
+            loop {
+                if budget == 0 {
+                    break;
+                }
+                budget -= 1;
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        // EOF: either fully served (finish_recvs sees the
+                        // complete blob) or the sender died mid-stream
+                        // (stall sweep re-pulls)
+                        dead.push(conn.key);
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&tmp[..n]);
+                        tr.charge_stream(0, n);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead.push(conn.key);
+                        break;
+                    }
+                }
+            }
+            // parse complete frames: [offset u64 | len u32 | crc u32 | bytes]
+            let st = self.recvs.get_mut(&conn.key).expect("checked above");
+            let mut pos = 0usize;
+            while conn.buf.len() - pos >= 16 {
+                let offset = u64::from_be_bytes(conn.buf[pos..pos + 8].try_into().unwrap());
+                let len =
+                    u32::from_be_bytes(conn.buf[pos + 8..pos + 12].try_into().unwrap()) as usize;
+                let crc = u32::from_be_bytes(conn.buf[pos + 12..pos + 16].try_into().unwrap());
+                if len == 0 || len > MAX_FRAME {
+                    dead.push(conn.key); // corrupt stream
+                    break;
+                }
+                if conn.buf.len() - pos - 16 < len {
+                    break; // partial frame: wait for more bytes
+                }
+                let bytes = &conn.buf[pos + 16..pos + 16 + len];
+                st.accept_data(offset, crc, bytes, &mut self.counters);
+                pos += 16 + len;
+            }
+            if pos > 0 {
+                conn.buf.drain(..pos);
+            }
+        }
+        self.pulls.retain(|c| !dead.contains(&c.key));
+    }
+
+    fn flush_acks(&mut self, tr: &mut Transport) {
+        // never ack less often than the push window refills, or a
+        // misconfigured ack_every > window_frames would stall the
+        // chunked-UDP fallback into stall-driven progress
+        let every = self.tuning.ack_every.min(self.tuning.window_frames).max(1);
+        for (&(from, id), st) in self.recvs.iter_mut() {
+            if st.frames_since_ack >= every
+                || (st.frames_since_ack > 0 && st.got() >= st.total)
+            {
+                st.frames_since_ack = 0;
+                tr.send(from, &NetMsg::BulkAck { id, next: st.got() }).ok();
+            }
+        }
+    }
+
+    fn finish_recvs(&mut self, tr: &mut Transport) {
+        let done: Vec<(SocketAddrV4, u64)> = self
+            .recvs
+            .iter()
+            .filter(|(_, st)| st.got() >= st.total)
+            .map(|(&k, _)| k)
+            .collect();
+        for key in done {
+            let st = self.recvs.remove(&key).expect("just listed");
+            let (from, id) = key;
+            let ok = fnv64(&st.buf) == st.crc;
+            let payload = if ok { BulkPayload::decode(st.kind, &st.buf).ok() } else { None };
+            let ok = payload.is_some();
+            let seq = tr.fresh_seq();
+            tr.send(from, &NetMsg::BulkDone { seq, id, ok }).ok();
+            self.pulls.retain(|p| p.key != key);
+            if let Some(p) = payload {
+                self.counters.recvs_completed += 1;
+                self.done_cache.push((key, Instant::now()));
+                if self.done_cache.len() > 256 {
+                    self.done_cache.remove(0);
+                }
+                self.ready.push((from, p));
+            } else {
+                self.counters.recvs_corrupt += 1;
+            }
+        }
+    }
+
+    /// Stall handling, sender and receiver side — every stalled period
+    /// spends one retry; an exhausted budget drops the transfer (bounded
+    /// retry: a peer that died mid-transfer cannot pin state forever).
+    fn sweep(&mut self, tr: &mut Transport) {
+        let now = Instant::now();
+        let stall = self.tuning.stall;
+        let budget = self.tuning.resume_retries;
+        let plane_port = self.plane.listen_port();
+        let mut gave_up: Vec<u64> = Vec::new();
+        for (&id, st) in self.sends.iter_mut() {
+            if now.duration_since(st.last_progress) < stall {
+                continue;
+            }
+            st.last_progress = now;
+            st.stalls += 1;
+            if st.stalls > budget {
+                gave_up.push(id);
+                continue;
+            }
+            // re-offer: recovers a lost offer, a restarted receiver, and
+            // a dead pull connection alike
+            let seq = tr.fresh_seq();
+            tr.send(
+                st.to,
+                &NetMsg::BulkOffer {
+                    seq,
+                    id,
+                    kind: st.kind,
+                    total: st.len(),
+                    crc: st.crc,
+                    tcp_port: plane_port,
+                },
+            )
+            .ok();
+            if plane_port == 0 && st.accepted {
+                st.cursor = st.acked; // rewind the push plane
+            }
+        }
+        for id in gave_up {
+            self.sends.remove(&id);
+            self.counters.sends_gave_up += 1;
+            self.completed_sends.push((id, false));
+        }
+        let mut drop_keys: Vec<(SocketAddrV4, u64)> = Vec::new();
+        let mut repull: Vec<(SocketAddrV4, u16, u64, u64)> = Vec::new();
+        for (&key, st) in self.recvs.iter_mut() {
+            if now.duration_since(st.last_progress) < stall {
+                continue;
+            }
+            st.last_progress = now;
+            st.nacks += 1;
+            if st.nacks > budget {
+                drop_keys.push(key);
+                continue;
+            }
+            let (from, id) = key;
+            tr.send(from, &NetMsg::BulkNack { id, from: st.got() }).ok();
+            if st.sender_tcp != 0 {
+                repull.push((from, st.sender_tcp, id, st.got()));
+            }
+        }
+        for key in drop_keys {
+            self.recvs.remove(&key);
+            self.pulls.retain(|p| p.key != key);
+        }
+        for (from, port, id, got) in repull {
+            self.begin_pull(from, port, id, got);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(p: u16) -> SocketAddrV4 {
+        SocketAddrV4::new(std::net::Ipv4Addr::LOCALHOST, p)
+    }
+
+    fn test_tuning(use_tcp: bool) -> BulkTuning {
+        BulkTuning {
+            frame_bytes: 2048,
+            window_frames: 4,
+            resume_retries: 25,
+            stall: Duration::from_millis(40),
+            ack_every: 2,
+            use_tcp,
+        }
+    }
+
+    fn big_handoff(pairs: usize, value_len: usize) -> BulkPayload {
+        BulkPayload::Handoff {
+            pairs: (0..pairs as u64)
+                .map(|k| (k, k + 1, k % 7 == 0, vec![(k % 251) as u8; value_len]))
+                .collect(),
+        }
+    }
+
+    /// One event-loop turn for an endpoint pair.
+    fn turn(tr: &mut Transport, ep: &mut BulkEndpoint) {
+        let msgs = tr.poll();
+        for (from, m) in msgs {
+            ep.handle(tr, from, &m);
+        }
+        ep.pump(tr);
+        tr.tick_retransmit();
+    }
+
+    fn transfer_roundtrip(use_tcp: bool) {
+        let mut ta = Transport::bind_local().unwrap();
+        let mut tb = Transport::bind_local().unwrap();
+        let mut ea = BulkEndpoint::new(test_tuning(use_tcp));
+        let mut eb = BulkEndpoint::new(test_tuning(use_tcp));
+        // >= 4x the old single-datagram bound (65,507 B)
+        let payload = big_handoff(260, 1024);
+        assert!(payload.encode().len() > 4 * 65_507);
+        ea.start(&mut ta, tb.addr(), &payload);
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut got = Vec::new();
+        while Instant::now() < deadline && got.is_empty() {
+            turn(&mut ta, &mut ea);
+            turn(&mut tb, &mut eb);
+            got = eb.take_ready();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(got.len(), 1, "payload delivered");
+        assert_eq!(got[0].0, ta.addr());
+        assert_eq!(got[0].1, payload, "byte-identical after reassembly");
+        assert_eq!(eb.counters.recvs_completed, 1);
+        assert_eq!(eb.counters.recvs_corrupt, 0);
+        // sender learns of completion (ack/done) and drops its state
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline && ea.sends_in_flight() > 0 {
+            turn(&mut ta, &mut ea);
+            turn(&mut tb, &mut eb);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(ea.sends_in_flight(), 0);
+        assert_eq!(ea.counters.sends_completed, 1);
+        assert!(ea.take_completed_sends().iter().all(|&(_, ok)| ok));
+    }
+
+    #[test]
+    fn payload_codec_roundtrip() {
+        let t = BulkPayload::Table { addrs: (1..=5000).map(addr).collect() };
+        assert_eq!(BulkPayload::decode(K_TABLE, &t.encode()).unwrap(), t);
+        let h = big_handoff(40, 100);
+        assert_eq!(BulkPayload::decode(K_HANDOFF, &h.encode()).unwrap(), h);
+        assert!(BulkPayload::decode(99, &[]).is_err());
+        // truncation never panics
+        let enc = h.encode();
+        for cut in 0..enc.len().min(200) {
+            let _ = BulkPayload::decode(K_HANDOFF, &enc[..cut]);
+        }
+    }
+
+    #[test]
+    fn content_addressed_ids() {
+        let p = big_handoff(3, 8);
+        let blob = p.encode();
+        let crc = fnv64(&blob);
+        let a = transfer_id(K_HANDOFF, blob.len() as u64, crc, addr(1000));
+        assert_eq!(a, transfer_id(K_HANDOFF, blob.len() as u64, crc, addr(1000)));
+        assert_ne!(a, transfer_id(K_HANDOFF, blob.len() as u64, crc, addr(1001)));
+        assert_ne!(a, transfer_id(K_TABLE, blob.len() as u64, crc, addr(1000)));
+    }
+
+    #[test]
+    fn large_transfer_roundtrip_udp_fallback() {
+        transfer_roundtrip(false);
+    }
+
+    #[test]
+    fn large_transfer_roundtrip_tcp() {
+        transfer_roundtrip(true);
+    }
+
+    fn killed_sender_resumes(use_tcp: bool) {
+        let mut ta = Transport::bind_local().unwrap();
+        let mut tb = Transport::bind_local().unwrap();
+        let mut ea = BulkEndpoint::new(test_tuning(use_tcp));
+        let mut eb = BulkEndpoint::new(test_tuning(use_tcp));
+        let payload = big_handoff(300, 1024);
+        let total = payload.encode().len() as u64;
+        ea.start(&mut ta, tb.addr(), &payload);
+        // run until the receiver holds a decent partial prefix
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            turn(&mut ta, &mut ea);
+            turn(&mut tb, &mut eb);
+            let progressed =
+                eb.recv_progress().first().map(|&(_, got, _)| got > 40_000).unwrap_or(false);
+            if progressed {
+                break;
+            }
+            assert!(Instant::now() < deadline, "no partial progress");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(eb.take_ready().is_empty(), "transfer must not be complete yet");
+        // kill the sender endpoint mid-transfer (its listener, serve
+        // connections and send state all vanish) ...
+        drop(ea);
+        // ... and restart it: same payload + destination => same
+        // content-addressed id, so the receiver resumes, not restarts
+        let mut ea2 = BulkEndpoint::new(test_tuning(use_tcp));
+        ea2.start(&mut ta, tb.addr(), &payload);
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut got = Vec::new();
+        while Instant::now() < deadline && got.is_empty() {
+            turn(&mut ta, &mut ea2);
+            turn(&mut tb, &mut eb);
+            got = eb.take_ready();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(got.len(), 1, "payload delivered after restart");
+        assert_eq!(got[0].1, payload, "byte-identical after resume");
+        assert!(ea2.counters.resumes >= 1, "restarted sender saw Accept.from > 0");
+        assert!(
+            ea2.counters.data_bytes_sent < total,
+            "resumed from the acked offset: second sender pushed {} of {total} bytes",
+            ea2.counters.data_bytes_sent,
+        );
+    }
+
+    #[test]
+    fn killed_and_restarted_sender_resumes_udp_fallback() {
+        killed_sender_resumes(false);
+    }
+
+    #[test]
+    fn killed_and_restarted_sender_resumes_tcp() {
+        killed_sender_resumes(true);
+    }
+
+    #[test]
+    fn sender_gives_up_on_dead_receiver() {
+        let mut ta = Transport::bind_local().unwrap();
+        // destination bound then dropped: nothing will ever answer
+        let dead = Transport::bind_local().unwrap().addr();
+        let tuning = BulkTuning {
+            stall: Duration::from_millis(15),
+            resume_retries: 3,
+            ..test_tuning(false)
+        };
+        let mut ea = BulkEndpoint::new(tuning);
+        let id = ea.start(&mut ta, dead, &big_handoff(4, 64));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while Instant::now() < deadline && ea.sends_in_flight() > 0 {
+            turn(&mut ta, &mut ea);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(ea.sends_in_flight(), 0, "bounded retry: no eternal sender state");
+        assert_eq!(ea.counters.sends_gave_up, 1);
+        assert_eq!(ea.take_completed_sends(), vec![(id, false)]);
+    }
+
+    #[test]
+    fn duplicate_offer_after_completion_answers_done() {
+        let mut ta = Transport::bind_local().unwrap();
+        let mut tb = Transport::bind_local().unwrap();
+        let mut ea = BulkEndpoint::new(test_tuning(false));
+        let mut eb = BulkEndpoint::new(test_tuning(false));
+        let payload = BulkPayload::Table { addrs: (1..=10).map(addr).collect() };
+        ea.start(&mut ta, tb.addr(), &payload);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut got = Vec::new();
+        while Instant::now() < deadline && got.is_empty() {
+            turn(&mut ta, &mut ea);
+            turn(&mut tb, &mut eb);
+            got = eb.take_ready();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(got.len(), 1);
+        // a duplicate offer (e.g. datagram retransmit after the done was
+        // lost) must NOT resurrect receive state
+        let mut ea2 = BulkEndpoint::new(test_tuning(false));
+        ea2.start(&mut ta, tb.addr(), &payload);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline && ea2.sends_in_flight() > 0 {
+            turn(&mut ta, &mut ea2);
+            turn(&mut tb, &mut eb);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(ea2.sends_in_flight(), 0, "answered from the done cache");
+        assert_eq!(eb.recvs_in_flight(), 0, "no ghost receive state");
+        assert_eq!(eb.counters.recvs_completed, 1, "not re-received");
+    }
+}

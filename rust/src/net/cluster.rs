@@ -51,9 +51,15 @@ pub struct KvReport {
     /// Reads that returned bytes differing from what was stored.
     pub corrupted: usize,
     pub wall: Duration,
-    /// Replicate/Handoff messages across the cluster (replication +
-    /// repair traffic).
+    /// Replicate messages + bulk handoff transfers across the cluster
+    /// (replication + repair traffic).
     pub repl_msgs: u64,
+    /// Completed bulk-channel transfers (table transfers + handoffs)
+    /// across the cluster, receiver side.
+    pub bulk_transfers: u64,
+    /// Transfers that resumed from a partial offset instead of
+    /// restarting.
+    pub bulk_resumes: u64,
 }
 
 impl Cluster {
@@ -188,10 +194,14 @@ impl Cluster {
             corrupted,
             wall: t0.elapsed(),
             repl_msgs: 0,
+            bulk_transfers: 0,
+            bulk_resumes: 0,
         };
         for p in &self.peers {
             if let Ok(s) = p.stats() {
                 rep.repl_msgs += s.store_repl_sent;
+                rep.bulk_transfers += s.bulk_recvs_ok;
+                rep.bulk_resumes += s.bulk_resumes;
             }
         }
         rep

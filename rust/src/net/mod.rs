@@ -7,18 +7,25 @@
 //! payload on the wire *is* the address of the joined/left peer (that is
 //! what `m = 32 bit` means in Fig. 2); receivers re-derive the ID.
 //!
-//! Deviation from §VI: routing-table transfers use one (loopback-sized)
-//! datagram instead of TCP, which bounds this runtime at ~4,000 peers per
-//! transfer — the scale of the paper's largest experiment. A TCP bulk
-//! channel is a straightforward extension.
+//! Bulk movement — the §VI routing-table transfer a joiner receives and
+//! the store layer's key-range handoffs — does NOT ride in datagrams:
+//! [`bulk`] is a framed, resumable, backpressured stream channel (TCP
+//! data plane with a chunked-UDP fallback behind the same trait), so
+//! transfer size is bounded by memory, not by the 65,507-byte UDP
+//! payload limit that used to cap this runtime at ~4,000 peers per
+//! table transfer. Frame layouts and wire costs are specified in
+//! `docs/WIRE.md`; the per-section paper mapping lives in
+//! `ARCHITECTURE.md`.
 //!
 //! [`cluster`] spins up whole in-process clusters for the end-to-end
 //! example and the integration tests.
 
+pub mod bulk;
 pub mod cluster;
 pub mod peer;
 pub mod transport;
 pub mod wire;
 
+pub use bulk::{BulkCounters, BulkEndpoint, BulkPayload, DataPlane, TcpPlane, UdpPlane};
 pub use cluster::{Cluster, KvReport};
 pub use peer::{NetPeerCfg, PeerHandle, PeerStats};

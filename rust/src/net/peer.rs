@@ -5,7 +5,7 @@
 //! and stat snapshots over mpsc channels; the peer thread multiplexes
 //! those with the socket.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::net::SocketAddrV4;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
@@ -13,9 +13,10 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow::Result;
 
-use crate::config::TransportTuning;
+use crate::config::{BulkTuning, TransportTuning};
 use crate::edra::Edra;
 use crate::id::{space, Id};
+use crate::net::bulk::{BulkEndpoint, BulkPayload};
 use crate::net::transport::Transport;
 use crate::net::wire::NetMsg;
 use crate::proto::messages::Event;
@@ -41,6 +42,10 @@ pub struct NetPeerCfg {
     /// Reliable-UDP knobs (RTO, retries, dedup bounds) — load from a
     /// config file with [`TransportTuning::from_config`].
     pub transport: TransportTuning,
+    /// Bulk-transfer channel knobs (frame size, window, resume budget) —
+    /// routing-table transfers and key handoffs stream through
+    /// `net/bulk.rs` instead of riding datagrams.
+    pub bulk: BulkTuning,
 }
 
 impl Default for NetPeerCfg {
@@ -52,6 +57,7 @@ impl Default for NetPeerCfg {
             replication: 3,
             repair_every: Duration::from_millis(1000),
             transport: TransportTuning::default(),
+            bulk: BulkTuning::default(),
         }
     }
 }
@@ -66,8 +72,17 @@ pub struct PeerStats {
     pub lookups_retried: u64,
     /// Values held in the local KV store.
     pub keys_stored: usize,
-    /// Replicate/Handoff messages sent by write replication + repair.
+    /// Replicate messages + bulk handoff transfers sent by write
+    /// replication and repair.
     pub store_repl_sent: u64,
+    /// Bulk-channel transfer progress (table transfers + key handoffs).
+    pub bulk_sends_ok: u64,
+    pub bulk_sends_gave_up: u64,
+    pub bulk_recvs_ok: u64,
+    pub bulk_resumes: u64,
+    /// Bulk data-plane payload bytes moved by this peer.
+    pub bulk_bytes_out: u64,
+    pub bulk_bytes_in: u64,
     pub uptime: Duration,
 }
 
@@ -197,11 +212,20 @@ struct PeerState {
     replication: usize,
     kv: KvStore,
     /// Replica set each held key was last pushed to; anti-entropy only
-    /// re-pushes when membership changed it.
+    /// re-pushes when membership changed it. For keys we no longer
+    /// replicate it also pins the set a handoff was last *attempted*
+    /// for, so a failed transfer is not retried until membership
+    /// changes again (bounded handoff retry).
     repair_sets: BTreeMap<Id, Vec<Id>>,
-    /// Keys we no longer replicate, mapped to the seqs of the handoff
-    /// `Replicate`s in flight; dropped once all are acknowledged.
-    handoff_pending: BTreeMap<Id, Vec<u32>>,
+    /// In-flight bulk handoffs: transfer id → the keys it carries.
+    bulk_handoff_pending: BTreeMap<u64, Vec<Id>>,
+    /// Keys in flight to a new replica set, with the number of
+    /// destination transfers still outstanding; the local copy is
+    /// dropped only when every one confirms.
+    handoff_refs: BTreeMap<Id, u32>,
+    /// Keys whose handoff had at least one failed destination — the
+    /// local copy is kept as the safety net.
+    handoff_failed: BTreeSet<Id>,
     last_repair: Instant,
     store_repl_sent: u64,
 }
@@ -320,92 +344,143 @@ impl PeerState {
     /// the redundancy harmless, and *every* holder pushing (not just the
     /// owner) is what re-creates copies when the owner itself died.
     ///
-    /// Keys we no longer replicate are handed to the current set and
-    /// dropped, so the store stays bounded under churn (matching the
-    /// simulator's repair semantics) instead of every ex-holder
-    /// re-pushing its whole history forever. The drop is deferred: the
-    /// local copy goes away only on a later pass, once every handoff
-    /// `Replicate` of the previous pass was acknowledged
-    /// ([`Transport::seq_confirmed`]) — an unconfirmed or undeliverable
-    /// handoff keeps the copy and retries.
-    fn repair_tick(&mut self, tr: &mut Transport) {
+    /// Keys we no longer replicate are *handed off*: batched per
+    /// destination and streamed over the bulk channel, then dropped once
+    /// every destination transfer confirms — so the store stays bounded
+    /// under churn without the old per-key datagram flood. A transfer
+    /// that exhausts its resume budget (destination died mid-transfer)
+    /// keeps the local copy and pins the attempted replica set in
+    /// `repair_sets`, so the handoff is retried only when membership
+    /// changes again — never forever against a dead peer.
+    fn repair_tick(&mut self, tr: &mut Transport, bulk: &mut BulkEndpoint) {
         let keys: Vec<Id> = self.kv.iter().map(|(k, _)| *k).collect();
+        // destination → (pairs to stream, the key ids they carry)
+        let mut batches: BTreeMap<Id, Vec<(u64, u64, bool, Vec<u8>)>> = BTreeMap::new();
+        let mut batch_keys: BTreeMap<Id, Vec<Id>> = BTreeMap::new();
         for kid in keys {
             let set = replica_set(&self.table, kid, self.replication);
             let still_ours = set.contains(&self.me);
             if still_ours {
-                self.handoff_pending.remove(&kid);
+                // a key that came back to us cancels any handoff intent —
+                // including its membership in already-launched transfers,
+                // so a stale transfer's completion cannot decrement a
+                // refcount this key acquires in some *later* handoff
+                if self.handoff_refs.remove(&kid).is_some() {
+                    for kids in self.bulk_handoff_pending.values_mut() {
+                        kids.retain(|k| *k != kid);
+                    }
+                }
+                self.handoff_failed.remove(&kid);
                 if self.repair_sets.get(&kid) == Some(&set) {
                     continue;
                 }
-            } else if let Some(seqs) = self.handoff_pending.get(&kid) {
-                if !seqs.is_empty() && seqs.iter().all(|s| tr.seq_confirmed(*s)) {
-                    // previous pass's handoff fully acknowledged: safe
-                    // to drop our copy
-                    self.kv.remove(kid);
-                    self.repair_sets.remove(&kid);
-                    self.handoff_pending.remove(&kid);
-                    continue;
+                let (version, tombstone, bytes) = {
+                    let v = self.kv.get(kid).expect("key just listed");
+                    (v.version, v.tombstone, v.bytes.clone())
+                };
+                for rid in &set {
+                    if *rid == self.me {
+                        continue;
+                    }
+                    if let Some(&a) = self.members.get(rid) {
+                        let seq = tr.fresh_seq();
+                        tr.send(
+                            a,
+                            &NetMsg::Replicate {
+                                seq,
+                                key: kid.0,
+                                version,
+                                tombstone,
+                                value: bytes.clone(),
+                            },
+                        )
+                        .ok();
+                        self.store_repl_sent += 1;
+                    }
                 }
-            }
-            let (version, tombstone, bytes) = {
-                let v = self.kv.get(kid).expect("key just listed");
-                (v.version, v.tombstone, v.bytes.clone())
-            };
-            let mut seqs = Vec::new();
-            for rid in &set {
-                if *rid == self.me {
-                    continue;
-                }
-                if let Some(&a) = self.members.get(rid) {
-                    let seq = tr.fresh_seq();
-                    tr.send(
-                        a,
-                        &NetMsg::Replicate {
-                            seq,
-                            key: kid.0,
-                            version,
-                            tombstone,
-                            value: bytes.clone(),
-                        },
-                    )
-                    .ok();
-                    seqs.push(seq);
-                    self.store_repl_sent += 1;
-                }
-            }
-            if still_ours {
                 self.repair_sets.insert(kid, set);
             } else {
-                // re-attempt the handoff; confirmation is checked on
-                // the next pass
-                self.handoff_pending.insert(kid, seqs);
+                if self.handoff_refs.contains_key(&kid)
+                    || self.repair_sets.get(&kid) == Some(&set)
+                {
+                    continue; // in flight, or already attempted for this set
+                }
+                let (version, tombstone, bytes) = {
+                    let v = self.kv.get(kid).expect("key just listed");
+                    (v.version, v.tombstone, v.bytes.clone())
+                };
+                let mut targets = 0u32;
+                for rid in &set {
+                    if self.members.contains_key(rid) {
+                        batches
+                            .entry(*rid)
+                            .or_default()
+                            .push((kid.0, version, tombstone, bytes.clone()));
+                        batch_keys.entry(*rid).or_default().push(kid);
+                        targets += 1;
+                    }
+                }
+                if targets > 0 {
+                    self.handoff_refs.insert(kid, targets);
+                    self.repair_sets.insert(kid, set);
+                }
+            }
+        }
+        for (rid, pairs) in batches {
+            let Some(&a) = self.members.get(&rid) else { continue };
+            let tid = bulk.start(tr, a, &BulkPayload::Handoff { pairs });
+            self.store_repl_sent += 1;
+            self.bulk_handoff_pending
+                .entry(tid)
+                .or_default()
+                .extend(batch_keys.remove(&rid).unwrap_or_default());
+        }
+    }
+
+    /// A bulk handoff transfer finished (`ok` = delivered and decoded).
+    /// Drop each carried key only after its *last* outstanding transfer,
+    /// and only if none of them failed — otherwise the local copy is the
+    /// safety net until membership changes re-trigger the handoff.
+    fn finish_handoff(&mut self, tid: u64, ok: bool) {
+        let Some(kids) = self.bulk_handoff_pending.remove(&tid) else { return };
+        for kid in kids {
+            let Some(r) = self.handoff_refs.get_mut(&kid) else { continue };
+            *r = r.saturating_sub(1);
+            if !ok {
+                self.handoff_failed.insert(kid);
+            }
+            if *r == 0 {
+                self.handoff_refs.remove(&kid);
+                if !self.handoff_failed.remove(&kid) {
+                    self.kv.remove(kid);
+                    self.repair_sets.remove(&kid);
+                }
             }
         }
     }
-}
 
-/// Bulk-transfer `pairs` in datagram-sized chunks, budgeted by encoded
-/// bytes (not entry count): the 65,507-byte UDP payload limit is what
-/// actually bounds a Handoff, and values are caller-sized.
-fn send_handoff(tr: &mut Transport, to: SocketAddrV4, pairs: Vec<(u64, u64, bool, Vec<u8>)>) {
-    const BUDGET: usize = 48_000; // margin under the UDP max + recv_buf
-    let mut chunk: Vec<(u64, u64, bool, Vec<u8>)> = Vec::new();
-    let mut used = 0usize;
-    for pair in pairs {
-        // key + version + tombstone + len + bytes
-        let sz = 8 + 8 + 1 + 4 + pair.3.len();
-        if !chunk.is_empty() && used + sz > BUDGET {
-            let seq = tr.fresh_seq();
-            tr.send(to, &NetMsg::Handoff { seq, pairs: std::mem::take(&mut chunk) }).ok();
-            used = 0;
+    /// Apply a completed inbound bulk payload: a routing-table transfer
+    /// (join) or a key-range handoff (join admission, graceful leave,
+    /// repair rebalancing).
+    fn apply_bulk_payload(&mut self, payload: BulkPayload) -> bool {
+        match payload {
+            BulkPayload::Table { addrs } => {
+                for a in addrs {
+                    self.insert(a);
+                }
+                true
+            }
+            BulkPayload::Handoff { pairs } => {
+                for (key, version, tombstone, value) in pairs {
+                    if tombstone {
+                        self.kv.put_tombstone(Id(key), version);
+                    } else {
+                        self.kv.put(Id(key), version, value);
+                    }
+                }
+                false
+            }
         }
-        used += sz;
-        chunk.push(pair);
-    }
-    if !chunk.is_empty() {
-        let seq = tr.fresh_seq();
-        tr.send(to, &NetMsg::Handoff { seq, pairs: chunk }).ok();
     }
 }
 
@@ -434,22 +509,38 @@ fn run_peer(
         replication: cfg.replication.max(1),
         kv: KvStore::new(),
         repair_sets: BTreeMap::new(),
-        handoff_pending: BTreeMap::new(),
+        bulk_handoff_pending: BTreeMap::new(),
+        handoff_refs: BTreeMap::new(),
+        handoff_failed: BTreeSet::new(),
         last_repair: Instant::now(),
         store_repl_sent: 0,
     };
+    let mut bulk = BulkEndpoint::new(cfg.bulk);
 
-    // ---- join protocol (§VI): ask bootstrap, successor sends table ----
+    // ---- join protocol (§VI): ask bootstrap, successor streams the
+    // routing table over the bulk channel (plus the key-range handoff
+    // for keys the joiner now replicates) ----
     if let Some(boot) = cfg.bootstrap {
         tr.send(boot, &NetMsg::JoinReq { joiner: addr }).ok();
         let deadline = Instant::now() + Duration::from_secs(10);
         let mut joined = false;
         while Instant::now() < deadline && !joined {
-            for (_, msg) in tr.poll() {
+            let msgs = tr.poll();
+            for (from, msg) in msgs {
+                if bulk.handle(&mut tr, from, &msg) {
+                    continue;
+                }
                 if let NetMsg::Table { addrs, .. } = msg {
+                    // legacy single-datagram transfer from a pre-bulk peer
                     for a in addrs {
                         st.insert(a);
                     }
+                    joined = true;
+                }
+            }
+            bulk.pump(&mut tr);
+            for (_, payload) in bulk.take_ready() {
+                if st.apply_bulk_payload(payload) {
                     joined = true;
                 }
             }
@@ -543,12 +634,19 @@ fn run_peer(
                     lookups_retried: st.lookups_retried,
                     keys_stored: st.kv.live_len(),
                     store_repl_sent: st.store_repl_sent,
+                    bulk_sends_ok: bulk.counters.sends_completed,
+                    bulk_sends_gave_up: bulk.counters.sends_gave_up,
+                    bulk_recvs_ok: bulk.counters.recvs_completed,
+                    bulk_resumes: bulk.counters.resumes,
+                    bulk_bytes_out: bulk.counters.data_bytes_sent,
+                    bulk_bytes_in: bulk.counters.data_bytes_recv,
                     uptime: st.started.elapsed(),
                 });
             }
             Cmd::Leave => {
-                // graceful: hand the stored keys to the successor, then
-                // tell it we are leaving so it can announce
+                // graceful: stream the stored keys to the successor over
+                // the bulk channel, then tell it we are leaving so it
+                // can announce
                 if let Some(sid) = st.table.successor_excl(st.me) {
                     if sid != st.me {
                         if let Some(&sa) = st.members.get(&sid) {
@@ -558,16 +656,22 @@ fn run_peer(
                                 .map(|(k, v)| (k.0, v.version, v.tombstone, v.bytes.clone()))
                                 .collect();
                             if !pairs.is_empty() {
-                                send_handoff(&mut tr, sa, pairs);
+                                bulk.start(&mut tr, sa, &BulkPayload::Handoff { pairs });
                             }
                             let seq = tr.fresh_seq();
                             tr.send(sa, &NetMsg::LeaveNotice { seq, leaver: addr }).ok();
-                            // give the handoff + notice acks a moment
-                            let end = Instant::now() + Duration::from_millis(600);
-                            while Instant::now() < end && tr.pending_count() > 0 {
-                                tr.poll();
+                            // drain the handoff stream + notice acks
+                            let end = Instant::now() + Duration::from_millis(1500);
+                            while Instant::now() < end
+                                && (tr.pending_count() > 0 || bulk.sends_in_flight() > 0)
+                            {
+                                let msgs = tr.poll();
+                                for (from, m) in msgs {
+                                    bulk.handle(&mut tr, from, &m);
+                                }
+                                bulk.pump(&mut tr);
                                 tr.tick_retransmit();
-                                std::thread::sleep(Duration::from_millis(5));
+                                std::thread::sleep(Duration::from_millis(2));
                             }
                         }
                     }
@@ -578,12 +682,18 @@ fn run_peer(
             }
         }
 
-        // 2. socket
-        for (from, msg) in tr.poll() {
+        // 2. socket (bulk control/data frames are consumed by the
+        // endpoint; everything else goes through normal dispatch)
+        let msgs = tr.poll();
+        for (from, msg) in msgs {
+            if bulk.handle(&mut tr, from, &msg) {
+                continue;
+            }
             handle_msg(
                 &cfg,
                 &mut st,
                 &mut tr,
+                &mut bulk,
                 &mut pending_lookups,
                 &mut pending_writes,
                 &mut pending_gets,
@@ -591,6 +701,16 @@ fn run_peer(
                 from,
                 msg,
             );
+        }
+
+        // 2b. bulk channel: move stream/window data, then apply finished
+        // inbound payloads and settle finished outbound handoffs
+        bulk.pump(&mut tr);
+        for (_, payload) in bulk.take_ready() {
+            st.apply_bulk_payload(payload);
+        }
+        for (tid, ok) in bulk.take_completed_sends() {
+            st.finish_handoff(tid, ok);
         }
 
         // 3. retransmission + failure inference. Rule 5 designates one
@@ -756,7 +876,7 @@ fn run_peer(
         }
         if st.last_repair.elapsed() >= cfg.repair_every && !st.kv.is_empty() {
             st.last_repair = Instant::now();
-            st.repair_tick(&mut tr);
+            st.repair_tick(&mut tr, &mut bulk);
         }
     }
 }
@@ -855,6 +975,7 @@ fn handle_msg(
     _cfg: &NetPeerCfg,
     st: &mut PeerState,
     tr: &mut Transport,
+    bulk: &mut BulkEndpoint,
     pending_lookups: &mut BTreeMap<u32, (Instant, Sender<LookupOutcome>, u64, u32, SocketAddrV4)>,
     pending_writes: &mut BTreeMap<u32, (Instant, Sender<bool>, u64, Option<Vec<u8>>, u32)>,
     pending_gets: &mut BTreeMap<u32, (Instant, Sender<Option<Vec<u8>>>, u64, Vec<Id>)>,
@@ -916,13 +1037,13 @@ fn handle_msg(
             // fresh table); if that is us, admit
             match st.table.successor(jid) {
                 Some(sid) if sid == st.me || st.members.get(&sid).is_none() => {
-                    admit(st, tr, joiner);
+                    admit(st, tr, bulk, joiner);
                 }
                 Some(sid) => {
                     let &sa = st.members.get(&sid).unwrap();
                     tr.send(sa, &NetMsg::JoinReq { joiner }).ok();
                 }
-                None => admit(st, tr, joiner),
+                None => admit(st, tr, bulk, joiner),
             }
         }
         NetMsg::Table { .. } => { /* only meaningful during join */ }
@@ -1002,6 +1123,7 @@ fn handle_msg(
             }
         }
         NetMsg::Handoff { pairs, .. } => {
+            // legacy single-datagram handoff from a pre-bulk peer
             for (key, version, tombstone, value) in pairs {
                 if tombstone {
                     st.kv.put_tombstone(Id(key), version);
@@ -1011,6 +1133,14 @@ fn handle_msg(
             }
         }
         NetMsg::Ack { .. } => {}
+        // bulk control/data frames are consumed by `BulkEndpoint::handle`
+        // before dispatch reaches this function
+        NetMsg::BulkOffer { .. }
+        | NetMsg::BulkAccept { .. }
+        | NetMsg::BulkData { .. }
+        | NetMsg::BulkAck { .. }
+        | NetMsg::BulkNack { .. }
+        | NetMsg::BulkDone { .. } => {}
     }
 }
 
@@ -1018,19 +1148,20 @@ fn id_of(a: SocketAddrV4) -> Id {
     space::peer_id(&std::net::SocketAddr::V4(a))
 }
 
-fn admit(st: &mut PeerState, tr: &mut Transport, joiner: SocketAddrV4) {
+fn admit(st: &mut PeerState, tr: &mut Transport, bulk: &mut BulkEndpoint, joiner: SocketAddrV4) {
     let jid = id_of(joiner);
-    // transfer the routing table (single loopback datagram; see mod docs)
+    // stream the routing table over the bulk channel (§VI: transfers are
+    // a separate stream protocol, not a maintenance datagram) — this is
+    // what lifts the old ~4,000-peers-per-transfer loopback bound
     let addrs: Vec<SocketAddrV4> = st.members.values().copied().collect();
-    let seq = tr.fresh_seq();
-    tr.send(joiner, &NetMsg::Table { seq, addrs }).ok();
+    bulk.start(tr, joiner, &BulkPayload::Table { addrs });
     if st.insert(joiner) {
         let n = st.table.len().max(2);
         let now = st.now_secs();
         st.edra.detect_local(Event::join(jid), n, now);
         // §VI: keep the joiner fed with events for a grace period
         st.recent_joiners.push((joiner, Instant::now()));
-        // store layer: hand over the keys the joiner now owns/replicates
+        // store layer: stream the keys the joiner now owns/replicates
         let pairs: Vec<(u64, u64, bool, Vec<u8>)> = st
             .kv
             .iter()
@@ -1038,7 +1169,8 @@ fn admit(st: &mut PeerState, tr: &mut Transport, joiner: SocketAddrV4) {
             .map(|(k, v)| (k.0, v.version, v.tombstone, v.bytes.clone()))
             .collect();
         if !pairs.is_empty() {
-            send_handoff(tr, joiner, pairs);
+            bulk.start(tr, joiner, &BulkPayload::Handoff { pairs });
+            st.store_repl_sent += 1;
         }
     }
 }

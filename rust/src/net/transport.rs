@@ -192,6 +192,20 @@ impl Transport {
         self.pending.len()
     }
 
+    /// Charge stream-plane bytes (the TCP bulk channel, `net/bulk.rs`)
+    /// to this peer's traffic counters, so datagram and stream transfers
+    /// report through one ledger. Charged as raw payload bytes; frame
+    /// headers are part of the stream, TCP/IP segment headers are not
+    /// modeled (see docs/WIRE.md).
+    pub fn charge_stream(&mut self, bytes_out: usize, bytes_in: usize) {
+        if bytes_out > 0 {
+            self.traffic.send(bytes_out as u64 * 8);
+        }
+        if bytes_in > 0 {
+            self.traffic.recv(bytes_in as u64 * 8);
+        }
+    }
+
     /// True iff reliable `seq` was acknowledged by its destination —
     /// i.e. it is no longer pending and did not exhaust its retries.
     pub fn seq_confirmed(&self, seq: u32) -> bool {

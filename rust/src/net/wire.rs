@@ -19,7 +19,10 @@ pub enum NetMsg {
     LookupResp { nonce: u32, owner: SocketAddrV4 },
     /// Join request (forwarded to the joiner's successor).
     JoinReq { joiner: SocketAddrV4 },
-    /// Routing-table transfer: every member's address.
+    /// Legacy single-datagram routing-table transfer. Since ISSUE 2 the
+    /// admitting successor streams the table over the bulk channel
+    /// (`net/bulk.rs`); joiners still accept this form for compatibility
+    /// with pre-bulk peers.
     Table { seq: u32, addrs: Vec<SocketAddrV4> },
     /// Graceful-leave notice to the successor (§VII-A's non-SIGKILL half).
     LeaveNotice { seq: u32, leaver: SocketAddrV4 },
@@ -40,9 +43,37 @@ pub enum NetMsg {
     /// reliable, version-idempotent at the receiver. `tombstone` carries
     /// a delete (empty value).
     Replicate { seq: u32, key: u64, version: u64, tombstone: bool, value: Vec<u8> },
-    /// Bulk ownership transfer on join/leave:
-    /// (key, version, tombstone, value).
+    /// Legacy single-datagram ownership transfer on join/leave:
+    /// (key, version, tombstone, value). Since ISSUE 2 handoffs travel
+    /// over the bulk channel; receivers still accept this form.
     Handoff { seq: u32, pairs: Vec<(u64, u64, bool, Vec<u8>)> },
+    /// Bulk channel, sender → receiver: a transfer of `total` payload
+    /// bytes (whole-blob checksum `crc`) is available. `kind` selects the
+    /// [`crate::net::bulk::BulkPayload`] decoding; `tcp_port` is the
+    /// sender's serve port (0 = the chunked-UDP fallback will push
+    /// `BulkData` datagrams instead). Reliable; re-sent on stall, which
+    /// is also how an interrupted transfer announces it can resume.
+    BulkOffer { seq: u32, id: u64, kind: u8, total: u64, crc: u64, tcp_port: u16 },
+    /// Bulk channel, receiver → sender: start (or resume) streaming from
+    /// byte offset `from` — the receiver's contiguous prefix, so a
+    /// re-offered transfer continues instead of restarting.
+    BulkAccept { id: u64, from: u64 },
+    /// Bulk channel data frame (chunked-UDP fallback only; over TCP the
+    /// same `[offset | len | crc | bytes]` framing travels in-stream).
+    /// Unreliable: loss shows up as a cumulative-ack stall and is
+    /// repaired by rewinding to the acked offset.
+    BulkData { id: u64, offset: u64, crc: u32, bytes: Vec<u8> },
+    /// Bulk channel, receiver → sender: cumulative ack — every byte
+    /// below `next` has been received and checksummed.
+    BulkAck { id: u64, next: u64 },
+    /// Bulk channel, receiver → sender: resume request after a stall —
+    /// re-send (or re-serve) from byte offset `from`.
+    BulkNack { id: u64, from: u64 },
+    /// Bulk channel, receiver → sender: the transfer is over. `ok` means
+    /// the blob arrived complete with a matching checksum and decoded;
+    /// `!ok` tells the sender to give up (corrupt or undecodable).
+    /// Reliable.
+    BulkDone { seq: u32, id: u64, ok: bool },
 }
 
 const T_MAINT: u8 = 1;
@@ -62,27 +93,39 @@ const T_REPLICATE: u8 = 14;
 const T_HANDOFF: u8 = 15;
 const T_REMOVE: u8 = 16;
 const T_REMOVE_RESP: u8 = 17;
+const T_BULK_OFFER: u8 = 18;
+const T_BULK_ACCEPT: u8 = 19;
+const T_BULK_DATA: u8 = 20;
+const T_BULK_ACK: u8 = 21;
+const T_BULK_NACK: u8 = 22;
+const T_BULK_DONE: u8 = 23;
 
 impl NetMsg {
     /// Messages that require an acknowledgment + retransmission.
+    /// Bulk control: only `BulkOffer` and `BulkDone` are reliable — the
+    /// data/ack/nack flow carries its own redundancy (cumulative acks,
+    /// stall-driven resume), so datagram-level retransmission would only
+    /// duplicate it.
     pub fn reliable_seq(&self) -> Option<u32> {
         match self {
             NetMsg::Maintenance { seq, .. }
             | NetMsg::Table { seq, .. }
             | NetMsg::LeaveNotice { seq, .. }
             | NetMsg::Replicate { seq, .. }
-            | NetMsg::Handoff { seq, .. } => Some(*seq),
+            | NetMsg::Handoff { seq, .. }
+            | NetMsg::BulkOffer { seq, .. }
+            | NetMsg::BulkDone { seq, .. } => Some(*seq),
             _ => None,
         }
     }
 }
 
-fn push_addr(buf: &mut Vec<u8>, a: &SocketAddrV4) {
+pub(crate) fn push_addr(buf: &mut Vec<u8>, a: &SocketAddrV4) {
     buf.extend_from_slice(&a.ip().octets());
     buf.extend_from_slice(&a.port().to_be_bytes());
 }
 
-fn push_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+pub(crate) fn push_bytes(buf: &mut Vec<u8>, b: &[u8]) {
     buf.extend_from_slice(&(b.len() as u32).to_be_bytes());
     buf.extend_from_slice(b);
 }
@@ -114,6 +157,12 @@ pub fn encode(msg: &NetMsg) -> Vec<u8> {
         NetMsg::RemoveResp { nonce, .. } => (T_REMOVE_RESP, *nonce),
         NetMsg::Replicate { seq, .. } => (T_REPLICATE, *seq),
         NetMsg::Handoff { seq, .. } => (T_HANDOFF, *seq),
+        NetMsg::BulkOffer { seq, .. } => (T_BULK_OFFER, *seq),
+        NetMsg::BulkAccept { .. } => (T_BULK_ACCEPT, 0),
+        NetMsg::BulkData { .. } => (T_BULK_DATA, 0),
+        NetMsg::BulkAck { .. } => (T_BULK_ACK, 0),
+        NetMsg::BulkNack { .. } => (T_BULK_NACK, 0),
+        NetMsg::BulkDone { seq, .. } => (T_BULK_DONE, *seq),
     };
     buf.push(tag);
     buf.extend_from_slice(&seq.to_be_bytes());
@@ -157,6 +206,31 @@ pub fn encode(msg: &NetMsg) -> Vec<u8> {
                 buf.push(*tomb as u8);
                 push_bytes(&mut buf, bytes);
             }
+        }
+        NetMsg::BulkOffer { id, kind, total, crc, tcp_port, .. } => {
+            buf.extend_from_slice(&id.to_be_bytes());
+            buf.push(*kind);
+            buf.extend_from_slice(&total.to_be_bytes());
+            buf.extend_from_slice(&crc.to_be_bytes());
+            buf.extend_from_slice(&tcp_port.to_be_bytes());
+        }
+        NetMsg::BulkAccept { id, from } | NetMsg::BulkNack { id, from } => {
+            buf.extend_from_slice(&id.to_be_bytes());
+            buf.extend_from_slice(&from.to_be_bytes());
+        }
+        NetMsg::BulkData { id, offset, crc, bytes } => {
+            buf.extend_from_slice(&id.to_be_bytes());
+            buf.extend_from_slice(&offset.to_be_bytes());
+            buf.extend_from_slice(&crc.to_be_bytes());
+            push_bytes(&mut buf, bytes);
+        }
+        NetMsg::BulkAck { id, next } => {
+            buf.extend_from_slice(&id.to_be_bytes());
+            buf.extend_from_slice(&next.to_be_bytes());
+        }
+        NetMsg::BulkDone { id, ok, .. } => {
+            buf.extend_from_slice(&id.to_be_bytes());
+            buf.push(*ok as u8);
         }
         NetMsg::Ack { .. } | NetMsg::Probe { .. } | NetMsg::ProbeReply { .. } => {}
     }
@@ -218,16 +292,36 @@ pub fn decode(buf: &[u8]) -> Result<NetMsg> {
             }
             NetMsg::Handoff { seq, pairs }
         }
+        T_BULK_OFFER => NetMsg::BulkOffer {
+            seq,
+            id: r.u64()?,
+            kind: r.u8()?,
+            total: r.u64()?,
+            crc: r.u64()?,
+            tcp_port: r.u16()?,
+        },
+        T_BULK_ACCEPT => NetMsg::BulkAccept { id: r.u64()?, from: r.u64()? },
+        T_BULK_DATA => {
+            NetMsg::BulkData { id: r.u64()?, offset: r.u64()?, crc: r.u32()?, bytes: r.bytes()? }
+        }
+        T_BULK_ACK => NetMsg::BulkAck { id: r.u64()?, next: r.u64()? },
+        T_BULK_NACK => NetMsg::BulkNack { id: r.u64()?, from: r.u64()? },
+        T_BULK_DONE => NetMsg::BulkDone { seq, id: r.u64()?, ok: r.u8()? != 0 },
         t => bail!("unknown type {t}"),
     })
 }
 
-struct Rd<'a> {
+/// Bounds-checked big-endian reader, shared with the bulk-payload codec
+/// (`net/bulk.rs`).
+pub(crate) struct Rd<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Rd<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             bail!("truncated at {}", self.pos);
@@ -236,27 +330,27 @@ impl<'a> Rd<'a> {
         self.pos += n;
         Ok(s)
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
-    fn u16(&mut self) -> Result<u16> {
+    pub(crate) fn u16(&mut self) -> Result<u16> {
         Ok(u16::from_be_bytes(self.take(2)?.try_into().context("u16")?))
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_be_bytes(self.take(4)?.try_into().context("u32")?))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_be_bytes(self.take(8)?.try_into().context("u64")?))
     }
-    fn addr(&mut self) -> Result<SocketAddrV4> {
+    pub(crate) fn addr(&mut self) -> Result<SocketAddrV4> {
         let ip = self.take(4)?;
         let port = self.u16()?;
         Ok(SocketAddrV4::new(Ipv4Addr::new(ip[0], ip[1], ip[2], ip[3]), port))
     }
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len().saturating_sub(self.pos)
     }
-    fn addrs(&mut self) -> Result<Vec<SocketAddrV4>> {
+    pub(crate) fn addrs(&mut self) -> Result<Vec<SocketAddrV4>> {
         let n = self.u32()? as usize;
         // 6 encoded bytes per address; bound by the remaining buffer so
         // a spoofed count cannot force a large preallocation
@@ -269,7 +363,7 @@ impl<'a> Rd<'a> {
         }
         Ok(out)
     }
-    fn bytes(&mut self) -> Result<Vec<u8>> {
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u32()? as usize;
         if n > 16 * 1024 * 1024 {
             bail!("implausible value size {n}");
@@ -314,6 +408,38 @@ mod tests {
             seq: 9,
             pairs: vec![(1, 1, false, vec![1]), (2, 3, true, vec![])],
         });
+        rt(NetMsg::BulkOffer {
+            seq: 11,
+            id: u64::MAX,
+            kind: 2,
+            total: 1 << 33,
+            crc: 0xDEAD_BEEF_CAFE_F00D,
+            tcp_port: 40001,
+        });
+        rt(NetMsg::BulkAccept { id: 7, from: 65_508 });
+        rt(NetMsg::BulkData { id: 7, offset: 1 << 20, crc: 0xABCD_1234, bytes: vec![9; 1200] });
+        rt(NetMsg::BulkAck { id: 7, next: 1 << 21 });
+        rt(NetMsg::BulkNack { id: 7, from: 0 });
+        rt(NetMsg::BulkDone { seq: 12, id: 7, ok: true });
+        rt(NetMsg::BulkDone { seq: 13, id: 8, ok: false });
+    }
+
+    #[test]
+    fn bulk_reliability_classification() {
+        // control anchors (offer/done) ride the reliable transport; the
+        // data/ack/nack flow recovers loss itself (cumulative acks +
+        // stall-driven resume), so it must NOT be datagram-retransmitted
+        let offer =
+            NetMsg::BulkOffer { seq: 3, id: 1, kind: 1, total: 10, crc: 0, tcp_port: 0 };
+        assert_eq!(offer.reliable_seq(), Some(3));
+        assert_eq!(NetMsg::BulkDone { seq: 4, id: 1, ok: true }.reliable_seq(), Some(4));
+        assert_eq!(NetMsg::BulkAccept { id: 1, from: 0 }.reliable_seq(), None);
+        assert_eq!(
+            NetMsg::BulkData { id: 1, offset: 0, crc: 0, bytes: vec![] }.reliable_seq(),
+            None
+        );
+        assert_eq!(NetMsg::BulkAck { id: 1, next: 0 }.reliable_seq(), None);
+        assert_eq!(NetMsg::BulkNack { id: 1, from: 0 }.reliable_seq(), None);
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Binary codec for the real socket runtime (`net/`).
+//! Binary codec for the simulator's logical [`Message`] type.
 //!
 //! Layout follows Figure 2's field order: Type(1) SeqNo(4) PortNo(2)
 //! SystemID(4), then the body. IDs travel as 8-byte big-endian ring
 //! points. (The simulator never serializes — it charges `wire_bits()`
-//! directly — so this codec is exercised only by `net/` and its tests.)
+//! directly — so this codec exists for tests and tooling; the socket
+//! runtime's datagrams and bulk frames have their own codecs in
+//! `net/wire.rs` and `net/bulk.rs`, specified byte-by-byte in
+//! docs/WIRE.md.)
 
 use crate::anyhow::{bail, Context, Result};
 

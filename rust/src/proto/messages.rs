@@ -79,7 +79,9 @@ pub enum MessageBody {
     Remove { key: Id },
     /// Owner-to-replica copy (write replication and churn repair).
     Replicate { key: Id, version: u64, value_bits: u64 },
-    /// Bulk ownership transfer on join/leave: `(key, value_bits)` pairs.
+    /// Bulk ownership transfer on join/leave: `(key, value_bits)` pairs,
+    /// streamed over the bulk channel (`net/bulk.rs`) and charged its
+    /// frame costs.
     Handoff { keys: Vec<(Id, u64)> },
 }
 
@@ -96,9 +98,10 @@ impl Message {
             MessageBody::Heartbeat => sizes::V_H,
             MessageBody::Lookup { .. } | MessageBody::LookupResp { .. } => sizes::V_LOOKUP,
             MessageBody::JoinRequest { .. } => sizes::V_M,
-            // Bulk transfer: 6 B per entry (§VI memory layout) + TCP-ish
-            // 40 B framing, expressed in bits.
-            MessageBody::TableTransfer { ids } => 320 + ids.len() as u64 * 48,
+            // Streamed over the bulk channel: 6 B per entry (§VI memory
+            // layout) plus the offer/accept/done handshake and per-frame
+            // headers of `net/bulk.rs`.
+            MessageBody::TableTransfer { ids } => sizes::table_transfer_bits(ids.len()),
             MessageBody::Probe | MessageBody::ProbeReply => sizes::V_A,
             MessageBody::Put { value_bits, .. } => sizes::put_bits(*value_bits),
             MessageBody::Get { .. } | MessageBody::Remove { .. } => sizes::V_GET,

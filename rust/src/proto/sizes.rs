@@ -69,12 +69,59 @@ pub fn replicate_bits(value_bits: u64) -> u64 {
     V_STORE + 64 + value_bits
 }
 
+// ---------------------------------------------------------------------
+// Bulk channel (`net/bulk.rs`): the streamed transfer protocol behind
+// §VI routing-table transfers and store key handoffs. Control frames
+// are Figure-2-style datagrams (four common fields = `V_A`, plus their
+// body); data frames add a per-frame header to each
+// `BULK_FRAME_PAYLOAD` payload slice. docs/WIRE.md holds the byte-level
+// layouts these constants mirror.
+// ---------------------------------------------------------------------
+
+/// `BulkOffer`: common fields + id(8) + kind(1) + total(8) + crc(8) +
+/// tcp port(2) = 63 B.
+pub const V_BULK_OFFER: u64 = V_A + 216;
+
+/// `BulkAccept` / `BulkAck` / `BulkNack`: common fields + id(8) +
+/// offset(8) = 52 B.
+pub const V_BULK_CTRL: u64 = V_A + 128;
+
+/// `BulkDone`: common fields + id(8) + ok(1) = 45 B.
+pub const V_BULK_DONE: u64 = V_A + 72;
+
+/// Per-data-frame header: datagram common fields + offset(8) + len(4) +
+/// crc(4) (the TCP plane carries the same 16-byte frame header
+/// in-stream; charging the datagram form keeps both planes comparable).
+pub const BULK_FRAME_HDR: u64 = V_A + 128;
+
+/// Default accounting frame payload, matching
+/// `config::BulkTuning::frame_bytes` (1200 B).
+pub const BULK_FRAME_PAYLOAD: u64 = 1200 * 8;
+
+/// Total wire bits to move `payload_bits` through the bulk channel:
+/// offer/accept/done handshake, per-frame headers, and one cumulative
+/// ack per 8 frames (`BulkTuning::ack_every`).
+#[inline]
+pub fn bulk_bits(payload_bits: u64) -> u64 {
+    let frames = ((payload_bits + BULK_FRAME_PAYLOAD - 1) / BULK_FRAME_PAYLOAD).max(1);
+    let acks = (frames + 7) / 8;
+    V_BULK_OFFER + V_BULK_CTRL + V_BULK_DONE + frames * BULK_FRAME_HDR + acks * V_BULK_CTRL
+        + payload_bits
+}
+
+/// §VI routing-table transfer of `members` entries over the bulk
+/// channel: 6 B (IPv4 + port) per member, the paper's in-memory layout.
+#[inline]
+pub fn table_transfer_bits(members: usize) -> u64 {
+    bulk_bits(members as u64 * 48)
+}
+
 /// Bulk `Handoff` of `keys` entries totalling `value_bits_total` payload
-/// bits: TCP-style 40-byte framing (like the §VI table transfer) plus a
-/// 160-bit key and 64-bit version per entry.
+/// bits, streamed over the bulk channel: a 160-bit key, 64-bit version
+/// and tombstone flag per entry plus the values, in bulk framing.
 #[inline]
 pub fn handoff_bits(keys: usize, value_bits_total: u64) -> u64 {
-    320 + keys as u64 * (160 + 64) + value_bits_total
+    bulk_bits(keys as u64 * (160 + 64 + 8) + value_bits_total)
 }
 
 #[cfg(test)]
@@ -103,7 +150,38 @@ mod tests {
         assert_eq!(put_bits(1024), V_STORE + 1024);
         assert_eq!(get_resp_bits(0), V_STORE + 8, "miss carries no value");
         assert_eq!(replicate_bits(1024), V_STORE + 64 + 1024);
-        // handoff amortizes framing: 2 entries cost less than 2 replicates
-        assert!(handoff_bits(2, 2048) < 2 * replicate_bits(1024) + 320);
+    }
+
+    #[test]
+    fn bulk_channel_sizes() {
+        // byte values of the control frames (headers included)
+        assert_eq!(V_BULK_OFFER / 8, 63);
+        assert_eq!(V_BULK_CTRL / 8, 52);
+        assert_eq!(V_BULK_DONE / 8, 45);
+        // one frame moves up to BULK_FRAME_PAYLOAD payload bits
+        let one = bulk_bits(100);
+        assert_eq!(one, V_BULK_OFFER + 2 * V_BULK_CTRL + V_BULK_DONE + BULK_FRAME_HDR + 100);
+        // framing grows with ceil(payload / frame)
+        let frames = 10u64;
+        let p = frames * BULK_FRAME_PAYLOAD;
+        assert_eq!(
+            bulk_bits(p),
+            V_BULK_OFFER + V_BULK_DONE + frames * BULK_FRAME_HDR + 3 * V_BULK_CTRL + p,
+            "10 frames, accept + 2 cumulative acks"
+        );
+        // the per-byte overhead of a big transfer stays small (< 5%)
+        let big = 10_000_000u64;
+        assert!(bulk_bits(big) - big < big / 20, "overhead {}", bulk_bits(big) - big);
+    }
+
+    #[test]
+    fn bulk_handoff_amortizes_replicates() {
+        // moving 100 x 1 KiB values: one bulk handoff costs far less
+        // than 100 acked Replicate datagrams
+        let vb = 100 * 8192u64;
+        assert!(handoff_bits(100, vb) < 100 * (replicate_bits(8192) + V_A));
+        // table transfer: 1M peers at 6 B each ~ 6 MB + ~4% framing
+        let t = table_transfer_bits(1_000_000);
+        assert!(t > 48_000_000 && t < 51_000_000, "{t}");
     }
 }

@@ -25,7 +25,7 @@ pub const PAD: u32 = u32::MAX;
 /// the (up to TABLE_SIZE) peer ids, PAD-filled tail, plus the id map.
 pub struct Snapshot {
     pub ring32: Vec<u32>,
-    /// ids[i] corresponds to ring32[i] for i < live.
+    /// `ids[i]` corresponds to `ring32[i]` for `i < live`.
     pub ids: Vec<Id>,
     pub live: usize,
 }

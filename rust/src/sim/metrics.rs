@@ -29,6 +29,10 @@ pub struct StoreCounters {
     pub repair_transfers: u64,
     /// Ownership transfers to a peer that newly owns the key (join driven).
     pub handoff_transfers: u64,
+    /// Batched bulk-channel transfers those ownership handoffs rode in
+    /// (one per destination per repair pass, charged
+    /// `sizes::handoff_bits` — the sim twin of `net/bulk.rs` streaming).
+    pub bulk_handoffs: u64,
     /// Put/Get/GetResp wire traffic (client-facing).
     pub traffic: Traffic,
     /// Replicate/Handoff wire traffic (replication + churn repair).
@@ -69,6 +73,7 @@ impl StoreCounters {
         self.keys_lost += o.keys_lost;
         self.repair_transfers += o.repair_transfers;
         self.handoff_transfers += o.handoff_transfers;
+        self.bulk_handoffs += o.bulk_handoffs;
         self.traffic.merge(&o.traffic);
         self.repair_traffic.merge(&o.repair_traffic);
     }
@@ -166,10 +171,12 @@ mod tests {
         let mut other = StoreCounters::default();
         other.keys_lost = 2;
         other.repair_transfers = 10;
+        other.bulk_handoffs = 3;
         other.repair_traffic.send(640);
         s.merge(&other);
         assert_eq!(s.keys_lost, 2);
         assert_eq!(s.repair_transfers, 10);
+        assert_eq!(s.bulk_handoffs, 3);
         assert_eq!(s.repair_traffic.bits_out, 640);
         assert_eq!(s.gets_total(), 1000);
     }

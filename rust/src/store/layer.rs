@@ -251,9 +251,18 @@ impl StoreLayer {
     /// Anti-entropy: drop departed holders, re-create missing replicas
     /// from surviving copies, and hand keys to peers that newly own
     /// them. Keys whose every holder departed are counted lost.
+    ///
+    /// Ownership handoffs are batched per destination and charged as
+    /// one bulk-channel transfer each ([`sizes::handoff_bits`]),
+    /// mirroring the real runtime's `net/bulk.rs` streaming; replica
+    /// re-creation toward non-owners stays per-key `Replicate`
+    /// datagrams, as the socket runtime sends them.
     pub fn repair(&mut self, truth: &Table) {
         let r = self.cfg.replication;
         let value_bits = self.cfg.value_bits;
+        // new-owner destination → (keys in the batch, total value bits)
+        let mut handoff_batches: std::collections::BTreeMap<Id, (usize, u64)> =
+            std::collections::BTreeMap::new();
         for rec in &mut self.records {
             let vb = if rec.deleted { 0 } else { value_bits };
             let old_primary = rec.holders.first().copied();
@@ -278,16 +287,27 @@ impl StoreLayer {
                 // a surviving holder streams a copy to the new replica
                 if Some(*d) == desired.first().copied() && old_primary != Some(*d) {
                     self.counters.handoff_transfers += 1;
+                    let batch = handoff_batches.entry(*d).or_insert((0, 0));
+                    batch.0 += 1;
+                    batch.1 += vb;
                 } else {
                     self.counters.repair_transfers += 1;
+                    charge(
+                        &mut self.counters.repair_traffic,
+                        bits(MessageBody::Replicate {
+                            key: rec.id,
+                            version: rec.version,
+                            value_bits: vb,
+                        }),
+                    );
+                    charge(&mut self.counters.repair_traffic, sizes::V_A);
                 }
-                charge(
-                    &mut self.counters.repair_traffic,
-                    bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: vb }),
-                );
-                charge(&mut self.counters.repair_traffic, sizes::V_A);
             }
             rec.holders = desired;
+        }
+        for (_, (keys, vb_total)) in handoff_batches {
+            self.counters.bulk_handoffs += 1;
+            charge(&mut self.counters.repair_traffic, sizes::handoff_bits(keys, vb_total));
         }
     }
 

@@ -1,10 +1,14 @@
 //! End-to-end over the REAL socket runtime: boots genuine UDP peers on
 //! loopback (threads, reliable-UDP, EDRA), exercises joins, lookups,
-//! graceful leaves and SIGKILL-style failures.
+//! graceful leaves, SIGKILL-style failures, and the bulk-transfer
+//! channel (routing-table transfer + key handoff beyond datagram size).
 
 use std::time::Duration;
 
 use d1ht::net::{Cluster, NetPeerCfg};
+
+/// The payload bound the bulk channel removed: max UDP payload bytes.
+const OLD_DATAGRAM_BOUND: usize = 65_507;
 
 #[test]
 fn cluster_converges_and_resolves() {
@@ -55,4 +59,144 @@ fn late_joiner_gets_full_table() {
     assert_eq!(size, 7, "late joiner table");
     extra.leave();
     cluster.shutdown();
+}
+
+/// ISSUE 2 acceptance: a join whose key handoff is ≥ 4× the old
+/// single-datagram bound completes via the bulk channel, end-to-end
+/// over real sockets, and the joiner serves the values afterwards.
+#[test]
+fn join_with_oversized_handoff_streams_via_bulk() {
+    // R ≥ cluster size ⇒ every peer replicates every key, so the
+    // admitting successor must hand the joiner the full key set
+    let mk = |bootstrap| NetPeerCfg { replication: 8, bootstrap, ..Default::default() };
+    let boot = d1ht::net::peer::spawn(mk(None)).expect("boot");
+    let boot_addr = boot.addr;
+    let mut peers = vec![boot];
+    for _ in 0..2 {
+        std::thread::sleep(Duration::from_millis(150));
+        peers.push(d1ht::net::peer::spawn(mk(Some(boot_addr))).expect("join"));
+    }
+    std::thread::sleep(Duration::from_millis(1500));
+    // 8 values × 33 KiB = 264 KiB of handoff payload — each value still
+    // fits a Put datagram, but the handoff of all of them cannot fit
+    // any datagram (≥ 4 × 65,507 B)
+    let value_len = 33 * 1024;
+    let keys: Vec<u64> = (1u64..=8).map(|k| k.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+    assert!(keys.len() * value_len >= 4 * OLD_DATAGRAM_BOUND);
+    for (i, &k) in keys.iter().enumerate() {
+        let origin = &peers[i % peers.len()];
+        assert!(origin.put(k, vec![i as u8; value_len]).expect("put"), "put {i} confirmed");
+    }
+    // join a fourth peer: table + 264 KiB handoff stream through bulk
+    let joiner = d1ht::net::peer::spawn(mk(Some(boot_addr))).expect("late joiner");
+    let deadline = std::time::Instant::now() + Duration::from_secs(15);
+    let mut stats = joiner.stats().expect("stats");
+    while std::time::Instant::now() < deadline
+        && !(stats.table_size == 4 && stats.keys_stored == keys.len() && stats.bulk_recvs_ok >= 2)
+    {
+        std::thread::sleep(Duration::from_millis(50));
+        stats = joiner.stats().expect("stats");
+    }
+    assert_eq!(stats.table_size, 4, "routing table transferred");
+    assert_eq!(stats.keys_stored, keys.len(), "full key range handed off");
+    assert!(stats.bulk_recvs_ok >= 2, "table + handoff rode the bulk channel: {stats:?}");
+    assert!(
+        stats.bulk_bytes_in as usize >= keys.len() * value_len,
+        "bulk payload exceeded any datagram: {} bytes",
+        stats.bulk_bytes_in
+    );
+    // the joiner serves the handed-off values itself
+    for (i, &k) in keys.iter().enumerate() {
+        let got = joiner.get(k).expect("get");
+        assert_eq!(got.as_deref(), Some(vec![i as u8; value_len].as_slice()), "value {i}");
+    }
+    joiner.kill();
+    for p in peers {
+        p.kill();
+    }
+}
+
+/// ISSUE 2 acceptance: a routing-table transfer far beyond datagram
+/// size survives the sender being killed mid-transfer — the restarted
+/// sender resumes from the receiver's last acked offset instead of
+/// restarting from zero.
+#[test]
+fn oversized_table_transfer_resumes_after_interruption() {
+    use d1ht::config::BulkTuning;
+    use d1ht::net::transport::Transport;
+    use d1ht::net::{BulkEndpoint, BulkPayload};
+    use std::net::{Ipv4Addr, SocketAddrV4};
+    use std::time::Instant;
+
+    let tuning = BulkTuning {
+        frame_bytes: 8192,
+        window_frames: 4,
+        resume_retries: 40,
+        stall: Duration::from_millis(30),
+        ack_every: 2,
+        use_tcp: true,
+    };
+    let mut ta = Transport::bind_local().expect("ta");
+    let mut tb = Transport::bind_local().expect("tb");
+    let mut sender = BulkEndpoint::new(tuning);
+    let mut receiver = BulkEndpoint::new(tuning);
+    // 50,000 members × 6 B ≈ 300 KB — ~4.6× the single-datagram bound
+    let addrs: Vec<SocketAddrV4> = (0..50_000u32)
+        .map(|i| {
+            SocketAddrV4::new(
+                Ipv4Addr::new(10, (i >> 16) as u8, (i >> 8) as u8, i as u8),
+                5000 + (i % 1000) as u16,
+            )
+        })
+        .collect();
+    let table = BulkPayload::Table { addrs };
+    let total = table.encode().len();
+    assert!(total >= 4 * OLD_DATAGRAM_BOUND);
+
+    let turn = |tr: &mut Transport, ep: &mut BulkEndpoint| {
+        let msgs = tr.poll();
+        for (from, m) in msgs {
+            ep.handle(tr, from, &m);
+        }
+        ep.pump(tr);
+        tr.tick_retransmit();
+    };
+
+    sender.start(&mut ta, tb.addr(), &table);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        turn(&mut ta, &mut sender);
+        turn(&mut tb, &mut receiver);
+        let partial =
+            receiver.recv_progress().first().map(|&(_, got, _)| got > 60_000).unwrap_or(false);
+        if partial {
+            break;
+        }
+        assert!(Instant::now() < deadline, "transfer never progressed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(receiver.take_ready().is_empty(), "must be interrupted mid-transfer");
+    // kill the sender (listener, serve connections, all transfer state)
+    drop(sender);
+    // restart: same payload + destination ⇒ same content-addressed id,
+    // so the receiver's partial state resumes from its acked offset
+    let mut sender2 = BulkEndpoint::new(tuning);
+    sender2.start(&mut ta, tb.addr(), &table);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut got = Vec::new();
+    while got.is_empty() {
+        turn(&mut ta, &mut sender2);
+        turn(&mut tb, &mut receiver);
+        got = receiver.take_ready();
+        assert!(Instant::now() < deadline, "transfer never completed after restart");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(got[0].1, table, "table byte-identical after resume");
+    assert!(sender2.counters.resumes >= 1, "receiver reported a nonzero resume offset");
+    assert!(
+        (sender2.counters.data_bytes_sent as usize) < total,
+        "resumed, not restarted: {} of {} bytes re-sent",
+        sender2.counters.data_bytes_sent,
+        total
+    );
 }

@@ -7,6 +7,8 @@
 //! d1ht serve --peers <n> [--lookups <k>] [--churn-steps <k>]
 //! d1ht sim --peers <n> --savg-min <mins> [--secs <s>] [--quarantine-tq <s>]
 //! d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--secs <s>]
+//! d1ht report [--peers <n>] [--secs <s>] [--seed <s>] [--trace drop|stderr]
+//! d1ht bench [--smoke] [--dir <d>] [--label <l>] [--verify]
 //! ```
 
 use crate::anyhow::{bail, Context, Result};
@@ -80,6 +82,8 @@ pub fn run(argv: &[String], out: &mut dyn std::io::Write) -> Result<()> {
         Some("serve") => cmd_serve(&args, out),
         Some("sim") => cmd_sim(&args, out),
         Some("store") => cmd_store(&args, out),
+        Some("report") => cmd_report(&args, out),
+        Some("bench") => cmd_bench(&args, out),
         Some("help") | None => {
             writeln!(out, "{}", HELP)?;
             Ok(())
@@ -103,6 +107,14 @@ USAGE:
   d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--savg-min <m>]
              [--secs <s>] [--repair-secs <s>]
                                          replicated KV durability run
+  d1ht report [--peers <n>] [--secs <s>] [--seed <s>] [--savg-min <m>]
+              [--trace drop|stderr]
+                                         machine-readable observability
+                                         report (JSON on stdout): per-peer
+                                         class flows + latency histograms
+  d1ht bench [--smoke] [--dir <d>] [--label <l>]
+                                         append a run to BENCH_*.json
+  d1ht bench --verify [--dir <d>]        schema-check the BENCH files
   d1ht help";
 
 fn fidelity(args: &Args) -> Fidelity {
@@ -299,6 +311,64 @@ fn cmd_store(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
     emit(&[t], args.has("csv"), out)
 }
 
+/// One observed simulator run dumped as `d1ht.report.v1` JSON: bootstrap
+/// + settle, then a recorded window with lookups, the store layer, and
+/// periodic `sim_snapshot` trace events between event chunks.
+fn cmd_report(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    use crate::dht::d1ht::{D1htCfg, D1htSim};
+    use crate::obs::Sink;
+    use crate::sim::churn::ChurnCfg;
+    use crate::sim::engine::{run_until, run_until_observed, Queue};
+    use crate::store::StoreCfg;
+
+    let n = args.get_usize("peers", 64)?;
+    let secs = args.get_f64("secs", 120.0)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let savg = args.get_f64("savg-min", 174.0)? * 60.0;
+    let cfg = D1htCfg {
+        churn: ChurnCfg::exponential(savg),
+        lookup_rate: 2.0,
+        seed,
+        ..Default::default()
+    };
+    let mut sim = D1htSim::new(cfg);
+    match args.get("trace").unwrap_or("drop") {
+        "drop" => {}
+        "stderr" => sim.tracer.set_sink(Sink::Stderr),
+        other => bail!("--trace {other}: expected drop|stderr"),
+    }
+    let mut q = Queue::new();
+    sim.bootstrap(n, &mut q);
+    run_until(&mut sim, &mut q, 60.0);
+    sim.enable_store(StoreCfg { keys: (4 * n).max(64), ..Default::default() }, &mut q);
+    sim.begin_recording(q.now());
+    sim.start_lookups(&mut q);
+    let every = (secs / 4.0).max(1.0);
+    run_until_observed(&mut sim, &mut q, 60.0 + secs, every, |sim, t| sim.trace_snapshot(t));
+    sim.end_recording(q.now());
+    writeln!(out, "{}", sim.report_json().render())?;
+    Ok(())
+}
+
+/// Run (or verify) the bench trajectory: `BENCH_<topic>.json` files,
+/// one labeled run appended per invocation (schema `d1ht.bench.v1`).
+fn cmd_bench(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    use crate::util::bench;
+
+    let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("."));
+    if args.has("verify") {
+        bench::verify_trajectory(&dir)?;
+        writeln!(out, "bench trajectory OK ({} topics)", bench::TOPICS.len())?;
+        return Ok(());
+    }
+    let smoke = args.has("smoke");
+    let label = args.get("label").unwrap_or(if smoke { "smoke" } else { "full" });
+    for path in bench::run_trajectory(&dir, smoke, label)? {
+        writeln!(out, "wrote {}", path.display())?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +422,93 @@ mod tests {
     fn csv_mode() {
         let s = run_to_string(&["exp", "fig8", "--csv"]).unwrap();
         assert!(s.lines().any(|l| l.starts_with("peers,")), "{s}");
+    }
+
+    #[test]
+    fn report_emits_per_peer_flows_and_latency_histogram() {
+        let s = run_to_string(&["report", "--peers", "64", "--secs", "60", "--seed", "5"]).unwrap();
+        let doc = crate::obs::Json::parse(s.trim()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("d1ht.report.v1"));
+        assert!(doc.get("cluster").unwrap().get("peers").unwrap().as_i64().unwrap() > 0);
+        let reg = doc.get("registry").unwrap();
+        let rtt = reg.get("hists").unwrap().get("lookup.rtt_ns").unwrap();
+        assert!(rtt.get("p50").unwrap().as_f64().unwrap() > 0.0, "non-zero p50");
+        assert!(rtt.get("p99").unwrap().as_f64().unwrap() > 0.0, "non-zero p99");
+        let peers = reg.get("peers").unwrap().as_arr().unwrap();
+        assert!(peers.len() >= 60, "per-peer rows present: {}", peers.len());
+        let mut maint = 0i64;
+        let mut store = 0i64;
+        for p in peers {
+            let classes = p.get("classes").unwrap();
+            for c in ["maintenance", "lookup", "store", "bulk"] {
+                assert!(classes.get(c).is_some(), "class {c} missing");
+            }
+            maint += classes.get("maintenance").unwrap().get("bits_out").unwrap().as_i64().unwrap();
+            store += classes.get("store").unwrap().get("bits_in").unwrap().as_i64().unwrap();
+        }
+        assert!(maint > 0, "maintenance bytes attributed");
+        assert!(store > 0, "store bytes attributed");
+    }
+
+    #[test]
+    fn report_is_deterministic_for_a_seed() {
+        let a = run_to_string(&["report", "--peers", "48", "--secs", "45", "--seed", "9"]).unwrap();
+        let b = run_to_string(&["report", "--peers", "48", "--secs", "45", "--seed", "9"]).unwrap();
+        assert_eq!(a, b, "same seed, byte-identical report");
+        let c = run_to_string(&["report", "--peers", "48", "--secs", "45", "--seed", "10"]).unwrap();
+        assert_ne!(a, c, "different seed, different report");
+    }
+
+    #[test]
+    fn tracing_sink_does_not_perturb_results() {
+        use crate::dht::d1ht::{D1htCfg, D1htSim};
+        use crate::obs::Tracer;
+        use crate::sim::churn::ChurnCfg;
+        use crate::sim::engine::{run_until, Queue};
+        let drive = |traced: bool| {
+            let cfg = D1htCfg {
+                churn: ChurnCfg::exponential(174.0 * 60.0),
+                lookup_rate: 2.0,
+                seed: 3,
+                ..Default::default()
+            };
+            let mut sim = D1htSim::new(cfg);
+            if traced {
+                sim.tracer = Tracer::memory();
+            }
+            let mut q = Queue::new();
+            sim.bootstrap(32, &mut q);
+            run_until(&mut sim, &mut q, 60.0);
+            sim.begin_recording(q.now());
+            sim.start_lookups(&mut q);
+            run_until(&mut sim, &mut q, 120.0);
+            sim.end_recording(q.now());
+            let lines = sim.tracer.memory_lines().len();
+            (sim.report_json().render(), lines)
+        };
+        let (plain, none) = drive(false);
+        let (traced, lines) = drive(true);
+        assert_eq!(plain, traced, "tracing is observation-only");
+        assert_eq!(none, 0);
+        assert!(lines > 0, "memory sink captured lookup events");
+    }
+
+    #[test]
+    fn bench_smoke_writes_and_verifies_trajectory() {
+        let dir = std::env::temp_dir().join(format!("d1ht-cli-bench-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = dir.to_str().unwrap().to_string();
+        assert!(
+            run_to_string(&["bench", "--verify", "--dir", &d]).is_err(),
+            "verify fails before any run"
+        );
+        let s = run_to_string(&["bench", "--smoke", "--dir", &d, "--label", "t"]).unwrap();
+        assert!(s.contains("BENCH_lookup.json"), "{s}");
+        assert!(s.contains("BENCH_store.json"), "{s}");
+        let v = run_to_string(&["bench", "--verify", "--dir", &d]).unwrap();
+        assert!(v.contains("OK"), "{v}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

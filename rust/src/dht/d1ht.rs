@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 
 use crate::edra::Edra;
 use crate::id::{space, Id};
+use crate::obs::{self, Json, MsgClass, Registry, Tracer};
 use crate::proto::messages::{Event, Message, MessageBody};
 use crate::proto::sizes;
 use crate::routing::Table;
@@ -174,6 +175,18 @@ pub struct D1htSim {
     pub probes: u64,
     /// Diagnostics: how often each event was locally detected (should be 1).
     pub detect_counts: std::collections::HashMap<Event, u32>,
+    /// Shared observability table: per-peer `(direction, msg_class)`
+    /// traffic attribution plus lookup/EDRA latency histograms. Written
+    /// only inside the measurement window; merged with the store
+    /// layer's registry by [`D1htSim::report_json`].
+    pub obs: Registry,
+    /// Structured event tracing. Defaults to the null sink; swapping in
+    /// any other sink is observation-only (no RNG, no queue effects),
+    /// so results stay bit-identical — asserted in `cli.rs` tests.
+    pub tracer: Tracer,
+    /// Birth time (first local detection) of each membership event —
+    /// the reference point for the Fig. 6 propagation-delay histogram.
+    event_born: std::collections::HashMap<Event, f64>,
 }
 
 impl D1htSim {
@@ -196,6 +209,9 @@ impl D1htSim {
             closes_cap: 0,
             probes: 0,
             detect_counts: Default::default(),
+            obs: Registry::new(),
+            tracer: Tracer::default(),
+            event_born: Default::default(),
         }
     }
 
@@ -262,6 +278,8 @@ impl D1htSim {
     pub fn begin_recording(&mut self, now: f64) {
         self.recording = true;
         self.record_start = now;
+        // the registry is window-scoped, like the per-peer Metrics
+        self.obs.clear();
     }
 
     pub fn end_recording(&mut self, now: f64) {
@@ -287,6 +305,61 @@ impl D1htSim {
         }
         all.window_secs = (self.record_end - self.record_start).max(0.0);
         all
+    }
+
+    /// One structured trace event summarizing cluster state — emitted
+    /// periodically during `d1ht report` runs (no-op under the null
+    /// sink). Observation-only: reads registry state, touches no RNG.
+    pub fn trace_snapshot(&mut self, t: f64) {
+        if self.tracer.is_null() {
+            return;
+        }
+        let lookup = self.obs.rollup(obs::names::LOOKUP_RTT_NS);
+        self.tracer.emit(t, "sim_snapshot", 0, vec![
+            ("peers", Json::u(self.truth.len() as u64)),
+            ("lookups", Json::u(lookup.count())),
+            ("lookup_p50_ns", Json::f(lookup.p50())),
+            ("edra_applied", Json::u(self.obs.counter(obs::names::EDRA_EVENTS_APPLIED))),
+        ]);
+    }
+
+    /// Full machine-readable report (`schema: d1ht.report.v1`): run
+    /// summary plus the merged observability registry (sim + store
+    /// layer) with per-peer class flows and histogram rollups. The
+    /// output is deterministic for a given seed — `Registry::snapshot`
+    /// iterates `BTreeMap`s and the JSON writer is order-preserving —
+    /// which `cli.rs` tests assert byte-for-byte.
+    pub fn report_json(&self) -> Json {
+        let mut reg = self.obs.clone();
+        if let Some(s) = &self.store {
+            reg.merge(&s.obs);
+        }
+        reg.set_gauge(obs::names::PEERS_LIVE, self.truth.len() as f64);
+        reg.set_gauge(
+            obs::names::WINDOW_SECS,
+            (self.record_end - self.record_start).max(0.0),
+        );
+        let m = self.metrics();
+        Json::Obj(vec![
+            ("schema".into(), Json::s("d1ht.report.v1")),
+            ("seed".into(), Json::u(self.cfg.seed)),
+            (
+                "cluster".into(),
+                Json::Obj(vec![
+                    ("peers".into(), Json::u(self.truth.len() as u64)),
+                    ("window_secs".into(), Json::f(m.window_secs)),
+                    ("lookups".into(), Json::u(m.lookups_total())),
+                    ("one_hop_ratio".into(), Json::f(m.one_hop_ratio())),
+                    (
+                        "maintenance_bps_out_per_peer".into(),
+                        Json::f(self.per_peer_maintenance_bps()),
+                    ),
+                    ("store_availability".into(), Json::f(m.store.availability())),
+                    ("store_keys_lost".into(), Json::u(m.store.keys_lost)),
+                ]),
+            ),
+            ("registry".into(), reg.snapshot()),
+        ])
     }
 
     // ------------------------------------------------------------------
@@ -336,9 +409,26 @@ impl D1htSim {
     }
 
     fn store_repair(&mut self, q: &mut Queue<Ev>) {
+        let now = q.now();
         let Some(store) = self.store.as_mut() else { return };
+        let before =
+            (store.counters.repair_transfers, store.counters.bulk_handoffs, store.counters.keys_lost);
         store.repair(&self.truth);
-        q.after(store.cfg.repair_interval, Ev::StoreRepair);
+        let c = &store.counters;
+        let (d_repairs, d_handoffs, d_lost) = (
+            c.repair_transfers - before.0,
+            c.bulk_handoffs - before.1,
+            c.keys_lost - before.2,
+        );
+        let interval = store.cfg.repair_interval;
+        if !self.tracer.is_null() {
+            self.tracer.emit(now, "store_repair", 0, vec![
+                ("repair_transfers", Json::u(d_repairs)),
+                ("bulk_handoffs", Json::u(d_handoffs)),
+                ("keys_lost", Json::u(d_lost)),
+            ]);
+        }
+        q.after(interval, Ev::StoreRepair);
     }
 
     /// Per-peer average outgoing maintenance bandwidth (bps).
@@ -417,27 +507,29 @@ impl D1htSim {
         q.after(peer.edra.t_detect(n), Ev::PredCheck { peer: peer.id, epoch: peer.epoch });
     }
 
-    fn charge_send(&mut self, id: Id, bits: u64, maintenance: bool) {
+    fn charge_send(&mut self, id: Id, bits: u64, class: MsgClass) {
         if !self.recording {
             return;
         }
         if let Some(p) = self.peers.get_mut(&id) {
-            if maintenance {
+            if class == MsgClass::Maintenance {
                 p.metrics.maintenance.send(bits);
             }
             p.metrics.total.send(bits);
+            self.obs.charge_out(id.0, class, bits);
         }
     }
 
-    fn charge_recv(&mut self, id: Id, bits: u64, maintenance: bool) {
+    fn charge_recv(&mut self, id: Id, bits: u64, class: MsgClass) {
         if !self.recording {
             return;
         }
         if let Some(p) = self.peers.get_mut(&id) {
-            if maintenance {
+            if class == MsgClass::Maintenance {
                 p.metrics.maintenance.recv(bits);
             }
             p.metrics.total.recv(bits);
+            self.obs.charge_in(id.0, class, bits);
         }
     }
 
@@ -445,7 +537,7 @@ impl D1htSim {
     /// semantics (acks are charged inline; losses recharge after RTO).
     fn send_maintenance(&mut self, msg: Message, q: &mut Queue<Ev>, attempt: u8) {
         let bits = msg.wire_bits();
-        self.charge_send(msg.from, bits, true);
+        self.charge_send(msg.from, bits, MsgClass::Maintenance);
         if self.rng.chance(self.cfg.net.loss()) && attempt < 3 {
             let to = msg.to;
             q.after(RTO_SECS, Ev::Redeliver { to, msg, attempt: attempt + 1 });
@@ -515,6 +607,12 @@ impl D1htSim {
     fn deliver(&mut self, to: Id, msg: Message, q: &mut Queue<Ev>) {
         let now = q.now();
         let bits = msg.wire_bits();
+        // bound the Fig. 6 birth-time map under extreme churn (entries
+        // are only read while their event is still circulating)
+        if self.event_born.len() > 100_000 {
+            let cutoff = now - EVENT_SEEN_EXPIRY;
+            self.event_born.retain(|_, &mut t| t > cutoff);
+        }
         if self.peers.get(&to).is_none() {
             // Recipient departed while the message was in flight. The
             // sender's ack timeout fires (§III reliability): it learns
@@ -524,7 +622,7 @@ impl D1htSim {
                 let from = msg.from;
                 if self.peers.contains_key(&from) {
                     // two timed-out retransmissions charged to the sender
-                    self.charge_send(from, 2 * bits, true);
+                    self.charge_send(from, 2 * bits, MsgClass::Maintenance);
                     let sender = self.peers.get_mut(&from).unwrap();
                     // §IV-C learning is LOCAL-ONLY: the sender cleans its
                     // table but does not announce — Rule 5 designates one
@@ -557,12 +655,13 @@ impl D1htSim {
             }
             return;
         }
-        self.charge_recv(to, bits, true);
+        self.charge_recv(to, bits, MsgClass::Maintenance);
         match msg.body {
             MessageBody::Maintenance { ttl, events } => {
                 // explicit UDP ack (Fig. 2): charged both ways, no event
-                self.charge_send(to, sizes::V_A, true);
-                self.charge_recv(msg.from, sizes::V_A, true);
+                self.charge_send(to, sizes::V_A, MsgClass::Maintenance);
+                self.charge_recv(msg.from, sizes::V_A, MsgClass::Maintenance);
+                let mut applied: Vec<Event> = Vec::new();
                 let peer = self.peers.get_mut(&to).unwrap();
                 if ttl == 0 && msg.from == peer.predecessor {
                     peer.last_pred_seen = now;
@@ -584,6 +683,7 @@ impl D1htSim {
                         peer.edra.acknowledge(ev, ttl, now);
                     }
                     if peer.table.apply(&ev) {
+                        applied.push(ev);
                         if ev.peer == peer.predecessor
                             && ev.kind == crate::proto::messages::EventKind::Leave
                         {
@@ -596,6 +696,22 @@ impl D1htSim {
                                 peer.predecessor = ev.peer;
                                 peer.last_pred_seen = now;
                             }
+                        }
+                    }
+                }
+                // Fig. 6 metric: delay from an event's first local
+                // detection to its application at this peer's table
+                if self.recording {
+                    for ev in &applied {
+                        let Some(&born) = self.event_born.get(ev) else { continue };
+                        let ns = ((now - born).max(0.0) * 1e9) as u64;
+                        self.obs.record_peer(to.0, obs::names::EDRA_PROP_NS, ns);
+                        self.obs.inc(obs::names::EDRA_EVENTS_APPLIED, 1);
+                        if !self.tracer.is_null() {
+                            self.tracer.emit(now, "edra_apply", to.0, vec![
+                                ("delay_ns", Json::u(ns)),
+                                ("event_peer", Json::Str(format!("{:016x}", ev.peer.0))),
+                            ]);
                         }
                     }
                 }
@@ -626,12 +742,12 @@ impl D1htSim {
         if overdue {
             // Rule 5: probe, then report on silence.
             self.probes += 1;
-            self.charge_send(id, sizes::V_A, true);
+            self.charge_send(id, sizes::V_A, MsgClass::Maintenance);
             let pred_alive = self.truth.contains(pred);
             if pred_alive {
-                self.charge_recv(pred, sizes::V_A, true);
-                self.charge_send(pred, sizes::V_A, true);
-                self.charge_recv(id, sizes::V_A, true);
+                self.charge_recv(pred, sizes::V_A, MsgClass::Maintenance);
+                self.charge_send(pred, sizes::V_A, MsgClass::Maintenance);
+                self.charge_recv(id, sizes::V_A, MsgClass::Maintenance);
                 if let Some(p) = self.peers.get_mut(&id) {
                     p.last_pred_seen = now;
                 }
@@ -642,6 +758,7 @@ impl D1htSim {
                 if peer.first_ack(ev, now) {
                     peer.edra.detect_local(ev, n, now);
                     *self.detect_counts.entry(ev).or_insert(0) += 1;
+                    self.event_born.entry(ev).or_insert(now);
                 }
                 let peer = self.peers.get_mut(&id).unwrap();
                 peer.predecessor = peer.table.predecessor_excl(peer.id).unwrap_or(peer.id);
@@ -701,10 +818,10 @@ impl D1htSim {
             // real runtime, `net/bulk.rs`): total traffic, not
             // maintenance — §VII-A excludes transfers from the figures
             let bits = sizes::table_transfer_bits(table.len());
-            self.charge_send(succ_id, bits, false);
+            self.charge_send(succ_id, bits, MsgClass::Bulk);
         }
         table.insert(id);
-        self.charge_recv(id, sizes::table_transfer_bits(table.len()), false);
+        self.charge_recv(id, sizes::table_transfer_bits(table.len()), MsgClass::Bulk);
         let mut edra = Edra::new(id, self.cfg.f, now);
         edra.tuner = crate::edra::ThetaTuner::with_prior_rate(self.cfg.f, rate_prior);
         self.next_epoch += 1;
@@ -730,6 +847,7 @@ impl D1htSim {
             if s.first_ack(Event::join(id), now) {
                 s.edra.detect_local(Event::join(id), n, now);
                 *self.detect_counts.entry(Event::join(id)).or_insert(0) += 1;
+                self.event_born.entry(Event::join(id)).or_insert(now);
             }
             if id.in_arc(s.predecessor, s.id) {
                 s.predecessor = id;
@@ -767,8 +885,8 @@ impl D1htSim {
                     let flushed: u64 =
                         buffered.iter().map(|o| o.events.len() as u64).sum();
                     let bits = sizes::V_M + flushed * sizes::M_EVENT_AVG;
-                    self.charge_send(id, bits, true);
-                    self.charge_recv(sid, bits, true);
+                    self.charge_send(id, bits, MsgClass::Maintenance);
+                    self.charge_recv(sid, bits, MsgClass::Maintenance);
                     if let Some(s) = self.peers.get_mut(&sid) {
                         for o in &buffered {
                             for ev in &o.events {
@@ -783,6 +901,7 @@ impl D1htSim {
                         if s.first_ack(lv, now) {
                             s.edra.detect_local(lv, n, now);
                             *self.detect_counts.entry(lv).or_insert(0) += 1;
+                            self.event_born.entry(lv).or_insert(now);
                         }
                         if s.predecessor == id {
                             s.predecessor = s.table.predecessor_excl(s.id).unwrap_or(s.id);
@@ -815,7 +934,7 @@ impl D1htSim {
     }
 
     /// Inline lookup resolution against ground truth (see module docs).
-    fn resolve_lookup(&mut self, origin: Id, target: Id, _now: f64) {
+    fn resolve_lookup(&mut self, origin: Id, target: Id, now: f64) {
         let Some(owner) = self.truth.successor(target) else { return };
         let rtt_half =
             |s: &mut Self| s.cfg.net.delay(&mut s.rng) + s.cfg.cpu.proc_delay();
@@ -837,7 +956,7 @@ impl D1htSim {
         }
         latency += rtt_half(self); // response
         if self.recording {
-            self.charge_send(origin, sizes::V_LOOKUP, false);
+            self.charge_send(origin, sizes::V_LOOKUP, MsgClass::Lookup);
             let p = self.peers.get_mut(&origin).unwrap();
             if one_hop {
                 p.metrics.lookups_one_hop += 1;
@@ -845,6 +964,20 @@ impl D1htSim {
                 p.metrics.lookups_retried += 1;
             }
             p.metrics.lookup_latency.record_secs(latency);
+            let ns = (latency.max(0.0) * 1e9) as u64;
+            let name = if one_hop {
+                obs::names::LOOKUPS_ONE_HOP
+            } else {
+                obs::names::LOOKUPS_RETRIED
+            };
+            self.obs.inc(name, 1);
+            self.obs.record_peer(origin.0, obs::names::LOOKUP_RTT_NS, ns);
+            if !self.tracer.is_null() {
+                self.tracer.emit(now, "lookup", origin.0, vec![
+                    ("rtt_ns", Json::u(ns)),
+                    ("one_hop", Json::Bool(one_hop)),
+                ]);
+            }
         }
     }
 }
@@ -1028,6 +1161,63 @@ mod tests {
         let m = sim.metrics();
         assert_eq!(m.store.gets_total() + m.store.puts, 0);
         assert_eq!(sim.store_retrievable(), (0, 0));
+    }
+
+    #[test]
+    fn obs_flows_reconcile_with_legacy_counters() {
+        // without churn no peer departs, so the registry's per-peer
+        // attribution must sum to exactly the legacy Metrics totals
+        let cfg = D1htCfg { lookup_rate: 5.0, ..Default::default() };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(64, &mut q);
+        sim.begin_recording(0.0);
+        sim.start_lookups(&mut q);
+        run_until(&mut sim, &mut q, 60.0);
+        sim.end_recording(60.0);
+        let m = sim.metrics();
+        let maint = sim.obs.class_total(MsgClass::Maintenance);
+        assert_eq!(maint.msgs_out, m.maintenance.msgs_out);
+        assert_eq!(maint.bits_out, m.maintenance.bits_out);
+        assert_eq!(maint.bits_in, m.maintenance.bits_in);
+        let lookup = sim.obs.class_total(MsgClass::Lookup);
+        assert_eq!(lookup.bits_out, m.lookups_total() * sizes::V_LOOKUP);
+        assert_eq!(sim.obs.counter(obs::names::LOOKUPS_ONE_HOP), m.lookups_one_hop);
+        let rtt = sim.obs.rollup(obs::names::LOOKUP_RTT_NS);
+        assert_eq!(rtt.count(), m.lookups_total());
+        assert!(rtt.p50() > 0.0 && rtt.p99() >= rtt.p50());
+        // every live peer that originated a lookup has a per-peer hist
+        let attributed: u64 = sim
+            .peers
+            .keys()
+            .filter_map(|id| sim.obs.peer_hist(id.0, obs::names::LOOKUP_RTT_NS))
+            .map(|h| h.count())
+            .sum();
+        assert_eq!(attributed, m.lookups_total());
+    }
+
+    #[test]
+    fn obs_records_edra_propagation_under_churn() {
+        let cfg = D1htCfg {
+            churn: ChurnCfg::exponential(174.0 * 60.0),
+            lookup_rate: 0.0,
+            ..Default::default()
+        };
+        let mut sim = D1htSim::new(cfg);
+        let mut q = Queue::new();
+        sim.bootstrap(128, &mut q);
+        run_until(&mut sim, &mut q, 60.0);
+        sim.begin_recording(q.now());
+        run_until(&mut sim, &mut q, 60.0 + 600.0);
+        sim.end_recording(q.now());
+        let applied = sim.obs.counter(obs::names::EDRA_EVENTS_APPLIED);
+        assert!(applied > 100, "churn must drive event applications: {applied}");
+        let prop = sim.obs.rollup(obs::names::EDRA_PROP_NS);
+        assert_eq!(prop.count(), applied);
+        // Fig. 6: propagation is bounded by a few Θ intervals — sanity
+        // bands, not exact values (seconds scale, not ns or hours)
+        assert!(prop.p50() > 1e6, "p50 {} ns", prop.p50());
+        assert!(prop.p999() < 3600.0 * 1e9, "p999 {} ns", prop.p999());
     }
 
     #[test]

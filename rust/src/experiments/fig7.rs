@@ -91,7 +91,10 @@ mod tests {
     #[test]
     fn artifact_series_matches_native() {
         if !crate::runtime::artifacts_available() {
-            eprintln!("SKIP: run `make artifacts` first");
+            crate::obs::trace::diag(
+                "test_skip",
+                &[("test", "artifact_series_matches_native"), ("hint", "run `make artifacts` first")],
+            );
             return;
         }
         let nat = run(174.0, false).unwrap();

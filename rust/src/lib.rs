@@ -20,6 +20,11 @@
 //!   substrate (see the section below).
 //! * [`experiments`] — one driver per paper table/figure, plus the
 //!   storage durability/availability experiment.
+//! * [`obs`] — unified observability: metrics registry with mergeable
+//!   latency histograms, per-peer `(peer, direction, msg_class)` traffic
+//!   attribution, structured tracing with pluggable sinks, and the
+//!   machine-readable bench trajectory (`BENCH_*.json`). Catalog and
+//!   paper-figure mapping in `docs/OBSERVABILITY.md`.
 //! * [`anyhow`] — vendored minimal `anyhow` stand-in (offline build).
 //!
 //! Layering: python (JAX + Pallas) runs only at build time (`make
@@ -28,7 +33,9 @@
 //! Repository-level companions to this rustdoc: `ARCHITECTURE.md` maps
 //! every paper section to its module and walks the join/handoff flows;
 //! `docs/WIRE.md` specifies each datagram and bulk frame byte-by-byte
-//! with its Figure-2 wire cost.
+//! with its Figure-2 wire cost; `docs/OBSERVABILITY.md` catalogs every
+//! metric and trace-event kind and maps `d1ht report` output onto the
+//! paper's Figures 2, 6 and 7.
 //!
 //! # The `store/` subsystem: replication and repair
 //!
@@ -77,6 +84,7 @@ pub mod edra;
 pub mod experiments;
 pub mod id;
 pub mod net;
+pub mod obs;
 pub mod proto;
 pub mod routing;
 pub mod runtime;

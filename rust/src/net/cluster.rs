@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 use crate::anyhow::Result;
 
 use crate::net::peer::{spawn, NetPeerCfg, PeerHandle};
+use crate::obs::ClassFlows;
 use crate::util::rng::Rng;
 use crate::util::stats::LatencyHist;
 
@@ -24,6 +25,9 @@ pub struct WorkloadReport {
     pub wall: Duration,
     /// Aggregate maintenance traffic across peers (bits out).
     pub maintenance_bits_out: u64,
+    /// Cluster-wide per-class traffic (every peer's [`ClassFlows`]
+    /// merged) — the Figure-2-style budget breakdown.
+    pub flows: ClassFlows,
 }
 
 impl WorkloadReport {
@@ -137,6 +141,7 @@ impl Cluster {
         for p in &self.peers {
             if let Ok(s) = p.stats() {
                 rep.maintenance_bits_out += s.traffic.bits_out;
+                rep.flows.merge(&s.flows);
             }
         }
         rep
@@ -264,6 +269,10 @@ mod tests {
         assert_eq!(rep.lookups, 100);
         assert!(rep.resolved >= 99, "resolved {}", rep.resolved);
         assert!(rep.one_hop_ratio() > 0.99, "one-hop {}", rep.one_hop_ratio());
+        let flows = rep.flows.total();
+        assert_eq!(flows.bits_out, rep.maintenance_bits_out, "flows reconcile");
+        assert!(rep.flows.class(crate::obs::MsgClass::Lookup).bits_out > 0);
+        assert!(rep.flows.class(crate::obs::MsgClass::Bulk).bits_out > 0, "join table streams");
         cluster.shutdown();
     }
 }

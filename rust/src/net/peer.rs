@@ -19,6 +19,7 @@ use crate::id::{space, Id};
 use crate::net::bulk::{BulkEndpoint, BulkPayload};
 use crate::net::transport::Transport;
 use crate::net::wire::NetMsg;
+use crate::obs::{self, ClassFlows, Hist, Json};
 use crate::proto::messages::Event;
 use crate::routing::Table;
 use crate::store::{replica_set, KvStore};
@@ -46,6 +47,11 @@ pub struct NetPeerCfg {
     /// routing-table transfers and key handoffs stream through
     /// `net/bulk.rs` instead of riding datagrams.
     pub bulk: BulkTuning,
+    /// Emit a `peer_snapshot` trace event through the process-global
+    /// tracer ([`crate::obs::trace`]) this often. `None` (the default)
+    /// disables the timer entirely; with the global sink at its `Null`
+    /// default an enabled timer is still nearly free.
+    pub snapshot_every: Option<Duration>,
 }
 
 impl Default for NetPeerCfg {
@@ -58,6 +64,7 @@ impl Default for NetPeerCfg {
             repair_every: Duration::from_millis(1000),
             transport: TransportTuning::default(),
             bulk: BulkTuning::default(),
+            snapshot_every: None,
         }
     }
 }
@@ -67,6 +74,10 @@ pub struct PeerStats {
     pub id: u64,
     pub table_size: usize,
     pub traffic: Traffic,
+    /// `traffic` broken down by [`crate::obs::MsgClass`] — the per-peer
+    /// `(direction, msg_class)` attribution table. Totals always equal
+    /// `traffic`.
+    pub flows: ClassFlows,
     pub lookups_sent: u64,
     pub lookups_one_hop: u64,
     pub lookups_retried: u64,
@@ -83,6 +94,10 @@ pub struct PeerStats {
     /// Bulk data-plane payload bytes moved by this peer.
     pub bulk_bytes_out: u64,
     pub bulk_bytes_in: u64,
+    /// Lifetime of completed outbound bulk transfers, start → settled
+    /// (ok or gave up) — the `bulk.transfer_ns` histogram of the
+    /// [`crate::obs`] catalog, mergeable across peers.
+    pub bulk_send_ns: Hist,
     pub uptime: Duration,
 }
 
@@ -228,6 +243,11 @@ struct PeerState {
     handoff_failed: BTreeSet<Id>,
     last_repair: Instant,
     store_repl_sent: u64,
+    /// Outbound bulk transfers in flight: transfer id → start time,
+    /// settled into `bulk_send_ns` when the transfer completes.
+    bulk_started: BTreeMap<u64, Instant>,
+    bulk_send_ns: Hist,
+    last_snapshot: Instant,
 }
 
 /// How long an admitting successor keeps directly forwarding events to a
@@ -429,6 +449,7 @@ impl PeerState {
         for (rid, pairs) in batches {
             let Some(&a) = self.members.get(&rid) else { continue };
             let tid = bulk.start(tr, a, &BulkPayload::Handoff { pairs });
+            self.bulk_started.insert(tid, Instant::now());
             self.store_repl_sent += 1;
             self.bulk_handoff_pending
                 .entry(tid)
@@ -514,6 +535,9 @@ fn run_peer(
         handoff_failed: BTreeSet::new(),
         last_repair: Instant::now(),
         store_repl_sent: 0,
+        bulk_started: BTreeMap::new(),
+        bulk_send_ns: Hist::default(),
+        last_snapshot: Instant::now(),
     };
     let mut bulk = BulkEndpoint::new(cfg.bulk);
 
@@ -629,6 +653,7 @@ fn run_peer(
                     id: st.me.0,
                     table_size: st.table.len(),
                     traffic: tr.traffic,
+                    flows: tr.flows,
                     lookups_sent: st.lookups_sent,
                     lookups_one_hop: st.lookups_one_hop,
                     lookups_retried: st.lookups_retried,
@@ -640,6 +665,7 @@ fn run_peer(
                     bulk_resumes: bulk.counters.resumes,
                     bulk_bytes_out: bulk.counters.data_bytes_sent,
                     bulk_bytes_in: bulk.counters.data_bytes_recv,
+                    bulk_send_ns: st.bulk_send_ns.clone(),
                     uptime: st.started.elapsed(),
                 });
             }
@@ -710,6 +736,15 @@ fn run_peer(
             st.apply_bulk_payload(payload);
         }
         for (tid, ok) in bulk.take_completed_sends() {
+            if let Some(t0) = st.bulk_started.remove(&tid) {
+                let ns = t0.elapsed().as_nanos() as u64;
+                st.bulk_send_ns.record(ns);
+                obs::trace::trace_event(
+                    "bulk_done",
+                    st.me.0,
+                    &[("lifetime_ns", Json::u(ns)), ("ok", Json::Bool(ok))],
+                );
+            }
             st.finish_handoff(tid, ok);
         }
 
@@ -877,6 +912,25 @@ fn run_peer(
         if st.last_repair.elapsed() >= cfg.repair_every && !st.kv.is_empty() {
             st.last_repair = Instant::now();
             st.repair_tick(&mut tr, &mut bulk);
+        }
+
+        // 8. periodic observability snapshot (opt-in; a no-op beyond the
+        // elapsed check while the global sink is Null)
+        if let Some(every) = cfg.snapshot_every {
+            if st.last_snapshot.elapsed() >= every {
+                st.last_snapshot = Instant::now();
+                obs::trace::trace_event(
+                    "peer_snapshot",
+                    st.me.0,
+                    &[
+                        ("table_size", Json::u(st.table.len() as u64)),
+                        ("keys", Json::u(st.kv.live_len() as u64)),
+                        ("bits_out", Json::u(tr.traffic.bits_out)),
+                        ("bits_in", Json::u(tr.traffic.bits_in)),
+                        ("lookups_sent", Json::u(st.lookups_sent)),
+                    ],
+                );
+            }
         }
     }
 }
@@ -1154,7 +1208,8 @@ fn admit(st: &mut PeerState, tr: &mut Transport, bulk: &mut BulkEndpoint, joiner
     // a separate stream protocol, not a maintenance datagram) — this is
     // what lifts the old ~4,000-peers-per-transfer loopback bound
     let addrs: Vec<SocketAddrV4> = st.members.values().copied().collect();
-    bulk.start(tr, joiner, &BulkPayload::Table { addrs });
+    let tid = bulk.start(tr, joiner, &BulkPayload::Table { addrs });
+    st.bulk_started.insert(tid, Instant::now());
     if st.insert(joiner) {
         let n = st.table.len().max(2);
         let now = st.now_secs();
@@ -1169,7 +1224,8 @@ fn admit(st: &mut PeerState, tr: &mut Transport, bulk: &mut BulkEndpoint, joiner
             .map(|(k, v)| (k.0, v.version, v.tombstone, v.bytes.clone()))
             .collect();
         if !pairs.is_empty() {
-            bulk.start(tr, joiner, &BulkPayload::Handoff { pairs });
+            let tid = bulk.start(tr, joiner, &BulkPayload::Handoff { pairs });
+            st.bulk_started.insert(tid, Instant::now());
             st.store_repl_sent += 1;
         }
     }
@@ -1261,6 +1317,39 @@ mod tests {
         let o_b = p2.lookup(999).unwrap().owner.unwrap();
         assert_eq!(o_a, o_b, "consistent ownership");
         p3.leave();
+        p2.kill();
+        boot.kill();
+    }
+
+    #[test]
+    fn stats_carry_per_class_flows_and_bulk_lifetimes() {
+        let boot = spawn(NetPeerCfg::default()).expect("boot");
+        let cfg = NetPeerCfg { bootstrap: Some(boot.addr), ..Default::default() };
+        let p2 = spawn(cfg).expect("p2");
+        std::thread::sleep(Duration::from_millis(1200));
+        assert!(boot.put(7, b"v".to_vec()).unwrap());
+        let _ = p2.lookup(999).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let s1 = boot.stats().unwrap();
+        let s2 = p2.stats().unwrap();
+        for s in [&s1, &s2] {
+            let tot = s.flows.total();
+            assert_eq!(tot.bits_out, s.traffic.bits_out, "flows reconcile with traffic");
+            assert_eq!(tot.bits_in, s.traffic.bits_in);
+            assert!(s.flows.class(crate::obs::MsgClass::Maintenance).bits_out > 0);
+        }
+        // the admitting boot peer streamed the routing table to p2:
+        // bulk-class bytes on both ends, and a completed-send lifetime
+        assert!(s1.flows.class(crate::obs::MsgClass::Bulk).bits_out > 0, "table stream charged");
+        assert!(s2.flows.class(crate::obs::MsgClass::Bulk).bits_in > 0);
+        assert!(s1.bulk_send_ns.count() >= 1, "bulk transfer lifetime recorded");
+        assert!(s1.bulk_send_ns.max() > 0);
+        // the put replicated owner→replica: store-class traffic moved
+        assert!(
+            s1.flows.class(crate::obs::MsgClass::Store).bits_out > 0
+                || s2.flows.class(crate::obs::MsgClass::Store).bits_out > 0,
+            "store write charged to the store class"
+        );
         p2.kill();
         boot.kill();
     }

@@ -11,6 +11,7 @@ use crate::anyhow::{Context, Result};
 
 use crate::config::TransportTuning;
 use crate::net::wire::{decode, encode, NetMsg};
+use crate::obs::{ClassFlows, MsgClass};
 use crate::util::stats::Traffic;
 
 struct Pending {
@@ -18,6 +19,9 @@ struct Pending {
     bytes: Vec<u8>,
     sent_at: Instant,
     retries: u32,
+    /// Attribution class of the tracked message, so retransmissions and
+    /// the eventual ack are charged to the same budget as the original.
+    class: MsgClass,
 }
 
 /// One peer's socket endpoint with reliability bookkeeping.
@@ -37,6 +41,10 @@ pub struct Transport {
     gave_up: HashMap<u32, Instant>,
     tuning: TransportTuning,
     pub traffic: Traffic,
+    /// Same bytes as `traffic`, broken down by [`MsgClass`] — the
+    /// per-peer `(direction, msg_class)` attribution table of
+    /// [`crate::obs`]. `traffic.bits_* == flows.total().bits_*` always.
+    pub flows: ClassFlows,
     recv_buf: Vec<u8>,
 }
 
@@ -64,6 +72,7 @@ impl Transport {
             gave_up: HashMap::new(),
             tuning,
             traffic: Traffic::default(),
+            flows: ClassFlows::default(),
             recv_buf: vec![0u8; 65536],
         })
     }
@@ -89,13 +98,16 @@ impl Transport {
     /// Send a message; reliable ones are tracked for retransmission.
     pub fn send(&mut self, to: SocketAddrV4, msg: &NetMsg) -> Result<()> {
         let bytes = encode(msg);
+        let class = msg.class();
         // charge the Figure-2 style wire size (payload + ipv4/udp headers)
-        self.traffic.send((bytes.len() as u64 + 28) * 8);
+        let bits = (bytes.len() as u64 + 28) * 8;
+        self.traffic.send(bits);
+        self.flows.out(class, bits);
         let _ = self.sock.send_to(&bytes, to); // best-effort; RTO covers loss
         if let Some(seq) = msg.reliable_seq() {
             self.pending.insert(
                 seq,
-                Pending { to, bytes, sent_at: Instant::now(), retries: 0 },
+                Pending { to, bytes, sent_at: Instant::now(), retries: 0, class },
             );
         }
         Ok(())
@@ -109,17 +121,31 @@ impl Transport {
         loop {
             match self.sock.recv_from(&mut self.recv_buf) {
                 Ok((len, SocketAddr::V4(from))) => {
-                    self.traffic.recv((len as u64 + 28) * 8);
-                    let Ok(msg) = decode(&self.recv_buf[..len]) else { continue };
+                    let bits_in = (len as u64 + 28) * 8;
+                    self.traffic.recv(bits_in);
+                    let Ok(msg) = decode(&self.recv_buf[..len]) else {
+                        // undecodable bytes: count against maintenance
+                        self.flows.inp(MsgClass::Maintenance, bits_in);
+                        continue;
+                    };
                     match msg {
                         NetMsg::Ack { of_seq } => {
-                            self.pending.remove(&of_seq);
+                            // attribute the ack to the class it confirms
+                            let class = self
+                                .pending
+                                .remove(&of_seq)
+                                .map(|p| p.class)
+                                .unwrap_or(MsgClass::Maintenance);
+                            self.flows.inp(class, bits_in);
                         }
                         other => {
+                            self.flows.inp(other.class(), bits_in);
                             if let Some(seq) = other.reliable_seq() {
                                 // ack immediately; drop duplicates
                                 let ack = encode(&NetMsg::Ack { of_seq: seq });
-                                self.traffic.send((ack.len() as u64 + 28) * 8);
+                                let ack_bits = (ack.len() as u64 + 28) * 8;
+                                self.traffic.send(ack_bits);
+                                self.flows.out(other.class(), ack_bits);
                                 let _ = self.sock.send_to(&ack, from);
                                 let key = (from, seq);
                                 let now = Instant::now();
@@ -171,7 +197,9 @@ impl Transport {
                 } else {
                     p.retries += 1;
                     p.sent_at = now;
-                    self.traffic.send((p.bytes.len() as u64 + 28) * 8);
+                    let bits = (p.bytes.len() as u64 + 28) * 8;
+                    self.traffic.send(bits);
+                    self.flows.out(p.class, bits);
                     let _ = self.sock.send_to(&p.bytes, p.to);
                 }
             }
@@ -200,9 +228,11 @@ impl Transport {
     pub fn charge_stream(&mut self, bytes_out: usize, bytes_in: usize) {
         if bytes_out > 0 {
             self.traffic.send(bytes_out as u64 * 8);
+            self.flows.out(MsgClass::Bulk, bytes_out as u64 * 8);
         }
         if bytes_in > 0 {
             self.traffic.recv(bytes_in as u64 * 8);
+            self.flows.inp(MsgClass::Bulk, bytes_in as u64 * 8);
         }
     }
 
@@ -338,5 +368,37 @@ mod tests {
         a.send(b.addr(), &NetMsg::Probe { nonce: 1 }).unwrap();
         assert!(a.traffic.bits_out > 0);
         assert_eq!(a.traffic.msgs_out, 1);
+    }
+
+    #[test]
+    fn class_flows_reconcile_with_traffic() {
+        let mut a = Transport::bind_local().unwrap();
+        let mut b = Transport::bind_local().unwrap();
+        a.send(b.addr(), &NetMsg::Lookup { nonce: 1, target: 9 }).unwrap();
+        let seq = a.fresh_seq();
+        a.send(
+            b.addr(),
+            &NetMsg::Maintenance { seq, ttl: 0, joins: vec![], leaves: vec![] },
+        )
+        .unwrap();
+        a.charge_stream(100, 40);
+        // wait for b to receive + auto-ack, and a to consume the ack
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut got = 0;
+        while Instant::now() < deadline && (got < 2 || a.pending_count() > 0) {
+            got += b.poll().len();
+            a.poll();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for t in [&a, &b] {
+            let tot = t.flows.total();
+            assert_eq!(tot.bits_out, t.traffic.bits_out, "out flows reconcile");
+            assert_eq!(tot.bits_in, t.traffic.bits_in, "in flows reconcile");
+        }
+        assert!(a.flows.class(MsgClass::Lookup).bits_out > 0);
+        assert!(a.flows.class(MsgClass::Maintenance).bits_out > 0);
+        assert_eq!(a.flows.class(MsgClass::Bulk).bits_out, 100 * 8);
+        assert_eq!(a.flows.class(MsgClass::Bulk).bits_in, 40 * 8);
+        assert!(b.flows.class(MsgClass::Maintenance).bits_out > 0, "auto-ack charged");
     }
 }

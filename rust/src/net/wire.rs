@@ -118,6 +118,38 @@ impl NetMsg {
             _ => None,
         }
     }
+
+    /// Traffic class for per-peer attribution ([`crate::obs`]): which of
+    /// the paper's budgets this datagram counts against. Acks are charged
+    /// to the class of the message they acknowledge (the transport knows
+    /// it; standalone acks default to maintenance).
+    pub fn class(&self) -> crate::obs::MsgClass {
+        use crate::obs::MsgClass::*;
+        match self {
+            NetMsg::Maintenance { .. }
+            | NetMsg::Ack { .. }
+            | NetMsg::JoinReq { .. }
+            | NetMsg::LeaveNotice { .. }
+            | NetMsg::Probe { .. }
+            | NetMsg::ProbeReply { .. } => Maintenance,
+            NetMsg::Lookup { .. } | NetMsg::LookupResp { .. } => Lookup,
+            NetMsg::Put { .. }
+            | NetMsg::PutResp { .. }
+            | NetMsg::Get { .. }
+            | NetMsg::GetResp { .. }
+            | NetMsg::Remove { .. }
+            | NetMsg::RemoveResp { .. }
+            | NetMsg::Replicate { .. }
+            | NetMsg::Handoff { .. } => Store,
+            NetMsg::Table { .. }
+            | NetMsg::BulkOffer { .. }
+            | NetMsg::BulkAccept { .. }
+            | NetMsg::BulkData { .. }
+            | NetMsg::BulkAck { .. }
+            | NetMsg::BulkNack { .. }
+            | NetMsg::BulkDone { .. } => Bulk,
+        }
+    }
 }
 
 pub(crate) fn push_addr(buf: &mut Vec<u8>, a: &SocketAddrV4) {

@@ -1,0 +1,294 @@
+//! Mergeable log2-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Same bucket geometry as `util/stats.rs::LatencyHist` — `SUB` linear
+//! sub-buckets per power-of-two octave, ~1/SUB worst-case relative
+//! quantile error — with three upgrades for report quality:
+//!
+//! * **linear interpolation** inside the resolved bucket, instead of
+//!   returning the bucket lower bound,
+//! * **exact min/max** tracked beside the buckets, so `p999`/`max`
+//!   never exceed an actually-recorded value,
+//! * **lazy allocation**: an empty histogram holds no bucket vector, so
+//!   a registry with thousands of per-peer histograms stays small.
+//!
+//! Merging is exact (bucket-wise addition) and associative, which is
+//! what lets per-peer histograms roll up to cluster-wide percentiles;
+//! see the oracle tests at the bottom.
+
+/// Linear sub-buckets per octave (quantile error ≈ 1/SUB ≈ 3%).
+pub const SUB: u64 = 32;
+const SUB_BITS: u64 = 5; // log2(SUB)
+/// Bucket count covering the full `u64` range: values `< SUB` map to
+/// their own bucket; each of the remaining `64 - SUB_BITS - 1` octaves
+/// contributes `SUB` buckets.
+const BUCKETS: usize = ((64 - SUB_BITS) * SUB) as usize;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Hist {
+    /// Empty until the first record (then `BUCKETS` long).
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+fn bucket(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let oct = 63 - v.leading_zeros() as u64; // floor(log2 v), >= SUB_BITS
+    let oct_rel = oct - SUB_BITS;
+    let sub = (v >> oct_rel) - SUB;
+    ((oct_rel + 1) * SUB + sub) as usize
+}
+
+/// Smallest value mapping to bucket `idx`.
+fn lower_bound(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB {
+        return idx;
+    }
+    (SUB + idx % SUB) << (idx / SUB - 1)
+}
+
+/// One past the largest value mapping to bucket `idx` (saturating).
+fn upper_bound(idx: usize) -> u64 {
+    if idx + 1 < BUCKETS { lower_bound(idx + 1) } else { u64::MAX }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.counts[bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+    }
+
+    /// Record a duration given in seconds, stored as integer nanoseconds.
+    pub fn record_secs(&mut self, s: f64) {
+        self.record((s.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum as f64 / self.total as f64 }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.max }
+    }
+
+    /// Quantile estimate for `q ∈ [0,1]`, linearly interpolated within
+    /// the resolved bucket and clamped to the observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.total as f64).max(1.0);
+        let mut acc = 0.0f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = acc + c as f64;
+            if next >= rank {
+                let lo = lower_bound(i) as f64;
+                let hi = upper_bound(i) as f64;
+                let frac = ((rank - acc) / c as f64).clamp(0.0, 1.0);
+                let v = lo + (hi - lo) * frac;
+                return v.clamp(self.min as f64, self.max as f64);
+            }
+            acc = next;
+        }
+        self.max as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Bucket-wise merge; exact and associative.
+    pub fn merge(&mut self, o: &Hist) {
+        if o.total == 0 {
+            return;
+        }
+        if self.total == 0 {
+            *self = o.clone();
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
+            *a += b;
+        }
+        self.total += o.total;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    /// Summary object for reports: count, mean, key percentiles, extremes.
+    pub fn summary_json(&self) -> super::json::Json {
+        use super::json::Json;
+        Json::Obj(vec![
+            ("count".into(), Json::u(self.count())),
+            ("mean".into(), Json::f(self.mean())),
+            ("p50".into(), Json::f(self.p50())),
+            ("p90".into(), Json::f(self.p90())),
+            ("p99".into(), Json::f(self.p99())),
+            ("p999".into(), Json::f(self.p999())),
+            ("min".into(), Json::u(self.min())),
+            ("max".into(), Json::u(self.max())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Nearest-rank quantile over the raw samples — the oracle the
+    /// histogram approximates.
+    fn oracle(sorted: &[u64], q: f64) -> f64 {
+        let n = sorted.len();
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1] as f64
+    }
+
+    #[test]
+    fn bucket_boundaries_roundtrip() {
+        // every bucket's lower bound maps back to that bucket, and the
+        // value just below it maps to the previous bucket
+        for idx in 0..BUCKETS {
+            let lo = lower_bound(idx);
+            assert_eq!(bucket(lo), idx, "lower bound of {idx}");
+            if lo > 0 {
+                assert_eq!(bucket(lo - 1), idx - 1, "below lower bound of {idx}");
+            }
+        }
+        assert_eq!(bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn records_extremes_without_panic() {
+        let mut h = Hist::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), u64::MAX);
+    }
+
+    #[test]
+    fn quantiles_track_oracle_within_bucket_error() {
+        let mut h = Hist::new();
+        let mut vals: Vec<u64> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..20_000 {
+            let v = rng.range(1, 50_000_000);
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let want = oracle(&vals, q);
+            let got = h.quantile(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "q={q}: got {got}, oracle {want}, rel err {rel}");
+        }
+        assert_eq!(h.max(), *vals.last().unwrap());
+        assert_eq!(h.min(), vals[0]);
+    }
+
+    #[test]
+    fn interpolation_beats_lower_bound_on_uniform_fill() {
+        // 1000..2000 uniformly: p50 should land near 1500, not at a
+        // bucket lower bound far below it
+        let mut h = Hist::new();
+        for v in 1000u64..2000 {
+            h.record(v);
+        }
+        let p50 = h.p50();
+        assert!((p50 - 1500.0).abs() < 60.0, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_associative_and_matches_combined() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut parts: Vec<Hist> = (0..5).map(|_| Hist::new()).collect();
+        let mut all = Hist::new();
+        for i in 0..5000 {
+            let v = rng.range(1, 10_000_000);
+            parts[i % 5].record(v);
+            all.record(v);
+        }
+        // left fold
+        let mut left = Hist::new();
+        for p in &parts {
+            left.merge(p);
+        }
+        // right fold
+        let mut right = Hist::new();
+        for p in parts.iter().rev() {
+            right.merge(p);
+        }
+        assert_eq!(left, right, "merge is associative/commutative here");
+        assert_eq!(left, all, "merge equals recording everything in one");
+        assert_eq!(left.count(), 5000);
+    }
+
+    #[test]
+    fn empty_hist_is_cheap_and_quiet() {
+        let h = Hist::new();
+        assert_eq!(h.counts.capacity(), 0, "no bucket allocation until first record");
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut h = Hist::new();
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10_000 {
+            h.record(rng.range(1, 1_000_000_000));
+        }
+        let mut last = 0.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= last, "q={q}: {v} < {last}");
+            last = v;
+        }
+        assert!((h.quantile(1.0) - h.max() as f64).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,98 @@
+//! Unified observability: metrics registry, latency histograms,
+//! structured tracing, and per-peer traffic attribution.
+//!
+//! This is the measurement substrate shared by the deterministic
+//! simulator ([`crate::dht::d1ht`]) and the UDP runtime
+//! ([`crate::net`]); `d1ht report` and the bench trajectory
+//! (`BENCH_*.json`) are built on it. Everything is hand-rolled — no
+//! `serde`, `tracing`, or `hdrhistogram` in the offline registry — and
+//! observation-only: recording never consumes randomness or perturbs
+//! event ordering, so enabling any sink leaves experiment results
+//! bit-identical (asserted in `cli.rs` tests).
+//!
+//! Map of the module:
+//!
+//! * [`registry`] — [`Registry`]: named counters/gauges/histograms plus
+//!   the per-peer `(peer, direction, msg_class)` traffic table;
+//!   mergeable, snapshots to deterministic JSON.
+//! * [`hist`] — [`Hist`]: mergeable log2-bucketed latency histogram
+//!   with interpolated p50/p90/p99/p999 and exact min/max.
+//! * [`trace`] — [`Tracer`]: structured events with ring retention and
+//!   pluggable sinks (drop / stderr JSONL / file / memory).
+//! * [`json`] — [`Json`]: the deterministic writer + small parser both
+//!   of the above serialize through.
+//! * [`names`] — the static metric catalog (`metric_catalog!`).
+//!
+//! The full metric/event catalog and its mapping onto the paper's
+//! Figures 2, 6 and 7 lives in `docs/OBSERVABILITY.md`.
+
+pub mod hist;
+pub mod json;
+pub mod registry;
+pub mod trace;
+
+pub use hist::Hist;
+pub use json::Json;
+pub use registry::{ClassFlows, MsgClass, Registry};
+pub use trace::{Sink, TraceEvent, Tracer};
+
+/// Static metric catalog. Call sites name metrics through these consts
+/// only; the paired `CATALOG` slice is the source of truth for
+/// `docs/OBSERVABILITY.md` (a test asserts every entry is documented).
+pub mod names {
+    crate::metric_catalog! {
+        counter LOOKUPS_ONE_HOP = "lookup.one_hop",
+            "Lookups answered by the key's true owner in a single hop";
+        counter LOOKUPS_RETRIED = "lookup.retried",
+            "Lookups that needed at least one retry (stale routing entry)";
+        counter LOOKUPS_FAILED = "lookup.failed",
+            "Lookups that exhausted retries without reaching the owner";
+        counter EDRA_EVENTS_APPLIED = "edra.events_applied",
+            "Membership events applied to some peer's routing table during the window";
+        counter STORE_PUTS = "store.puts",
+            "Store write operations (rewrites of a key)";
+        counter STORE_GETS = "store.gets",
+            "Store read operations (any outcome)";
+        counter STORE_REMOVES = "store.removes",
+            "Store delete operations (tombstone writes)";
+        counter STORE_REPAIR_TRANSFERS = "store.repair_transfers",
+            "Per-key replica re-creations sent by the anti-entropy pass";
+        counter STORE_BULK_HANDOFFS = "store.bulk_handoffs",
+            "Batched owner-handoff transfers sent over the bulk channel";
+        gauge PEERS_LIVE = "peers.live",
+            "Live peer population at snapshot time";
+        gauge WINDOW_SECS = "window.secs",
+            "Measurement-window length in (virtual) seconds";
+        hist LOOKUP_RTT_NS = "lookup.rtt_ns",
+            "Lookup round-trip time, nanoseconds (paper Fig. 7 latency axis)";
+        hist EDRA_PROP_NS = "edra.propagation_ns",
+            "Membership-event delay from detection to routing-table application (paper Fig. 6)";
+        hist BULK_LIFETIME_NS = "bulk.transfer_ns",
+            "Bulk-channel transfer lifetime from start to completed send";
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn catalog_names_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, kind, help) in super::names::CATALOG {
+            assert!(seen.insert(name), "duplicate metric name {name}");
+            assert!(!help.is_empty());
+            assert!(matches!(*kind, "counter" | "gauge" | "hist"), "kind {kind}");
+        }
+    }
+
+    #[test]
+    fn catalog_documented() {
+        // satellite (d): every metric in the catalog appears in the doc
+        let doc = include_str!("../../../docs/OBSERVABILITY.md");
+        for (name, _, _) in super::names::CATALOG {
+            assert!(doc.contains(name), "docs/OBSERVABILITY.md missing `{name}`");
+        }
+        for class in super::MsgClass::ALL {
+            assert!(doc.contains(class.name()), "doc missing class `{}`", class.name());
+        }
+    }
+}

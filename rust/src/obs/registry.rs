@@ -1,0 +1,391 @@
+//! The shared metric table: named counters/gauges/histograms plus the
+//! per-peer `(peer, direction, msg_class)` traffic attribution that the
+//! Figure-2-style bandwidth breakdown is built from.
+//!
+//! One [`Registry`] instance lives in each producer (`D1htSim`, the
+//! store layer, …); registries are mergeable, so a report merges them
+//! into one table and snapshots it as deterministic JSON ([`Json`]
+//! objects preserve insertion order; all maps here are `BTreeMap`s, so
+//! iteration order is key order, never hash order).
+//!
+//! Metric names are registered statically through [`metric_catalog!`]
+//! (see [`super::names`]): every name used at a call site is a `const`
+//! from the catalog, and the catalog doubles as the documentation
+//! source — a unit test asserts `docs/OBSERVABILITY.md` mentions every
+//! entry.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+use crate::util::stats::Traffic;
+
+pub use super::hist::Hist;
+
+/// Traffic class a wire message is attributed to (§VII of the paper
+/// reports these separately: EDRA maintenance vs. lookup vs. storage
+/// vs. bulk table/key transfer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MsgClass {
+    /// EDRA maintenance messages, acks, probes, join/leave control.
+    Maintenance,
+    /// Lookup requests and responses.
+    Lookup,
+    /// KV store puts/gets/removes/replicates and their acks.
+    Store,
+    /// Bulk-channel streams: routing-table transfers and key handoffs.
+    Bulk,
+}
+
+impl MsgClass {
+    pub const ALL: [MsgClass; 4] =
+        [MsgClass::Maintenance, MsgClass::Lookup, MsgClass::Store, MsgClass::Bulk];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MsgClass::Maintenance => "maintenance",
+            MsgClass::Lookup => "lookup",
+            MsgClass::Store => "store",
+            MsgClass::Bulk => "bulk",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            MsgClass::Maintenance => 0,
+            MsgClass::Lookup => 1,
+            MsgClass::Store => 2,
+            MsgClass::Bulk => 3,
+        }
+    }
+}
+
+/// Per-class [`Traffic`] counters — the value type of the per-peer
+/// attribution table.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassFlows {
+    classes: [Traffic; 4],
+}
+
+impl ClassFlows {
+    pub fn out(&mut self, class: MsgClass, bits: u64) {
+        self.classes[class.idx()].send(bits);
+    }
+
+    pub fn inp(&mut self, class: MsgClass, bits: u64) {
+        self.classes[class.idx()].recv(bits);
+    }
+
+    pub fn class(&self, class: MsgClass) -> &Traffic {
+        &self.classes[class.idx()]
+    }
+
+    /// Sum over all classes.
+    pub fn total(&self) -> Traffic {
+        let mut t = Traffic::default();
+        for c in &self.classes {
+            t.merge(c);
+        }
+        t
+    }
+
+    pub fn merge(&mut self, o: &ClassFlows) {
+        for (a, b) in self.classes.iter_mut().zip(&o.classes) {
+            a.merge(b);
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        Json::Obj(
+            MsgClass::ALL
+                .iter()
+                .map(|&c| {
+                    let t = self.class(c);
+                    (
+                        c.name().to_string(),
+                        Json::Obj(vec![
+                            ("msgs_out".into(), Json::u(t.msgs_out)),
+                            ("msgs_in".into(), Json::u(t.msgs_in)),
+                            ("bits_out".into(), Json::u(t.bits_out)),
+                            ("bits_in".into(), Json::u(t.bits_in)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// The shared table: counters, gauges, global and per-peer histograms,
+/// and per-peer class flows. Cheap when idle (all maps empty).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Hist>,
+    peer_flows: BTreeMap<u64, ClassFlows>,
+    peer_hists: BTreeMap<(u64, &'static str), Hist>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Record into the global histogram `name`.
+    pub fn record(&mut self, name: &'static str, v: u64) {
+        self.hists.entry(name).or_default().record(v);
+    }
+
+    /// Record into peer-local histogram `name` (rolls up cluster-wide
+    /// through [`Registry::rollup`]).
+    pub fn record_peer(&mut self, peer: u64, name: &'static str, v: u64) {
+        self.peer_hists.entry((peer, name)).or_default().record(v);
+    }
+
+    /// Attribute `bits` sent by `peer` in `class`.
+    pub fn charge_out(&mut self, peer: u64, class: MsgClass, bits: u64) {
+        self.peer_flows.entry(peer).or_default().out(class, bits);
+    }
+
+    /// Attribute `bits` received by `peer` in `class`.
+    pub fn charge_in(&mut self, peer: u64, class: MsgClass, bits: u64) {
+        self.peer_flows.entry(peer).or_default().inp(class, bits);
+    }
+
+    pub fn peer_flows(&self, peer: u64) -> Option<&ClassFlows> {
+        self.peer_flows.get(&peer)
+    }
+
+    pub fn peers(&self) -> impl Iterator<Item = (&u64, &ClassFlows)> {
+        self.peer_flows.iter()
+    }
+
+    pub fn peer_hist(&self, peer: u64, name: &'static str) -> Option<&Hist> {
+        // `&'static` because the map key is `(u64, &'static str)` and the
+        // reflexive `Borrow` impl is the only way to query a tuple key.
+        self.peer_hists.get(&(peer, name))
+    }
+
+    /// Global histogram `name` merged with every per-peer histogram of
+    /// the same name — the cluster-wide view.
+    pub fn rollup(&self, name: &str) -> Hist {
+        let mut h = self.hists.get(name).cloned().unwrap_or_default();
+        for ((_, n), ph) in &self.peer_hists {
+            if *n == name {
+                h.merge(ph);
+            }
+        }
+        h
+    }
+
+    /// Sum of one class across every peer.
+    pub fn class_total(&self, class: MsgClass) -> Traffic {
+        let mut t = Traffic::default();
+        for f in self.peer_flows.values() {
+            t.merge(f.class(class));
+        }
+        t
+    }
+
+    /// Fold another registry into this one (counters add, gauges take
+    /// the other's value, histograms and flows merge).
+    pub fn merge(&mut self, o: &Registry) {
+        for (k, v) in &o.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &o.gauges {
+            self.gauges.insert(k, *v);
+        }
+        for (k, h) in &o.hists {
+            self.hists.entry(k).or_default().merge(h);
+        }
+        for (k, f) in &o.peer_flows {
+            self.peer_flows.entry(*k).or_default().merge(f);
+        }
+        for (k, h) in &o.peer_hists {
+            self.peer_hists.entry(*k).or_default().merge(h);
+        }
+    }
+
+    /// Drop all recorded state (measurement-window reset).
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.gauges.clear();
+        self.hists.clear();
+        self.peer_flows.clear();
+        self.peer_hists.clear();
+    }
+
+    /// Deterministic JSON snapshot of the whole table.
+    ///
+    /// Layout: `counters`/`gauges` as flat objects, `hists` as
+    /// cluster-wide rollup summaries (per-peer histograms folded in),
+    /// `peers` as an id-sorted array carrying each peer's per-class
+    /// byte counts and its own histogram summaries.
+    pub fn snapshot(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, v)| (k.to_string(), Json::u(*v))).collect();
+        let gauges = self.gauges.iter().map(|(k, v)| (k.to_string(), Json::f(*v))).collect();
+
+        // every hist name seen globally or on any peer, in name order
+        let mut names: Vec<&'static str> = self.hists.keys().copied().collect();
+        names.extend(self.peer_hists.keys().map(|(_, n)| *n));
+        names.sort_unstable();
+        names.dedup();
+        let hists = names
+            .iter()
+            .map(|n| (n.to_string(), self.rollup(n).summary_json()))
+            .collect();
+
+        let peers = self
+            .peer_flows
+            .iter()
+            .map(|(id, flows)| {
+                let mut members = vec![
+                    ("peer".to_string(), Json::Str(format!("{id:016x}"))),
+                    ("classes".to_string(), flows.json()),
+                ];
+                let hists: Vec<(String, Json)> = self
+                    .peer_hists
+                    .range((*id, "")..)
+                    .take_while(|((p, _), _)| p == id)
+                    .map(|((_, n), h)| (n.to_string(), h.summary_json()))
+                    .collect();
+                if !hists.is_empty() {
+                    members.push(("hists".to_string(), Json::Obj(hists)));
+                }
+                Json::Obj(members)
+            })
+            .collect();
+
+        Json::Obj(vec![
+            ("counters".into(), Json::Obj(counters)),
+            ("gauges".into(), Json::Obj(gauges)),
+            ("hists".into(), Json::Obj(hists)),
+            ("peers".into(), Json::Arr(peers)),
+        ])
+    }
+}
+
+/// Declare the static metric catalog: one `pub const` per metric plus a
+/// `CATALOG` slice of `(name, kind, help)` used by docs and tests.
+#[macro_export]
+macro_rules! metric_catalog {
+    ($($kind:ident $konst:ident = $name:literal, $doc:literal;)*) => {
+        $(
+            #[doc = $doc]
+            pub const $konst: &str = $name;
+        )*
+        /// Every registered metric: `(name, kind, help)`.
+        pub const CATALOG: &[(&str, &str, &str)] = &[
+            $(($name, stringify!($kind), $doc)),*
+        ];
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut r = Registry::new();
+        r.inc("x", 2);
+        r.inc("x", 3);
+        r.set_gauge("g", 1.5);
+        assert_eq!(r.counter("x"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("g"), 1.5);
+    }
+
+    #[test]
+    fn per_peer_flows_and_rollup() {
+        let mut r = Registry::new();
+        r.charge_out(1, MsgClass::Maintenance, 100);
+        r.charge_out(1, MsgClass::Lookup, 50);
+        r.charge_in(2, MsgClass::Lookup, 50);
+        r.record_peer(1, "rtt", 10);
+        r.record_peer(2, "rtt", 30);
+        r.record("rtt", 20);
+
+        let f1 = r.peer_flows(1).unwrap();
+        assert_eq!(f1.class(MsgClass::Maintenance).bits_out, 100);
+        assert_eq!(f1.class(MsgClass::Lookup).bits_out, 50);
+        assert_eq!(f1.total().bits_out, 150);
+        assert_eq!(r.class_total(MsgClass::Lookup).bits_out, 50);
+        assert_eq!(r.class_total(MsgClass::Lookup).bits_in, 50);
+
+        let roll = r.rollup("rtt");
+        assert_eq!(roll.count(), 3);
+        assert_eq!(roll.min(), 10);
+        assert_eq!(roll.max(), 30);
+    }
+
+    #[test]
+    fn merge_folds_everything() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.inc("c", 1);
+        b.inc("c", 2);
+        a.charge_out(7, MsgClass::Store, 10);
+        b.charge_out(7, MsgClass::Store, 30);
+        b.record_peer(7, "h", 5);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3);
+        assert_eq!(a.peer_flows(7).unwrap().class(MsgClass::Store).bits_out, 40);
+        assert_eq!(a.rollup("h").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_deterministic_and_parseable() {
+        let build = || {
+            let mut r = Registry::new();
+            // insertion order differs; snapshot must not care
+            r.charge_out(9, MsgClass::Bulk, 8);
+            r.charge_out(3, MsgClass::Maintenance, 4);
+            r.inc("z", 1);
+            r.inc("a", 2);
+            r.record_peer(3, "rtt", 1000);
+            r
+        };
+        let s1 = build().snapshot().render();
+        let mut r2 = Registry::new();
+        r2.inc("a", 2);
+        r2.record_peer(3, "rtt", 1000);
+        r2.charge_out(3, MsgClass::Maintenance, 4);
+        r2.inc("z", 1);
+        r2.charge_out(9, MsgClass::Bulk, 8);
+        let s2 = r2.snapshot().render();
+        assert_eq!(s1, s2, "snapshot is independent of insertion order");
+        let doc = Json::parse(&s1).unwrap();
+        let peers = doc.get("peers").unwrap().as_arr().unwrap();
+        assert_eq!(peers.len(), 2);
+        assert_eq!(peers[0].get("peer").unwrap().as_str(), Some("0000000000000003"));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut r = Registry::new();
+        r.inc("c", 1);
+        r.charge_out(1, MsgClass::Lookup, 10);
+        r.clear();
+        assert_eq!(r.counter("c"), 0);
+        assert!(r.peer_flows(1).is_none());
+    }
+}

@@ -1,0 +1,254 @@
+//! Structured event tracing: `emit(kind, peer, fields…)` with a bounded
+//! ring buffer and a pluggable sink.
+//!
+//! Sinks: [`Sink::Null`] (drop — the default; emitting costs a ring
+//! push and nothing else), [`Sink::Stderr`] (JSONL on stderr, keeping
+//! stdout machine-parsable), [`Sink::File`] (JSONL appended to a path),
+//! and [`Sink::Memory`] (tests assert on captured lines).
+//!
+//! Two instantiation styles:
+//!
+//! * **Owned tracer** — `D1htSim` carries a [`Tracer`] field. The sim
+//!   is single-threaded and deterministic; an owned tracer keeps trace
+//!   emission out of any lock and lets tests swap sinks per-instance.
+//!   Tracing is observation-only: it never touches the RNG or the
+//!   event queue, so a run with `Sink::Stderr` is event-for-event
+//!   identical to one with `Sink::Null` (asserted in `cli.rs` tests).
+//! * **Process-global tracer** — the threaded UDP runtime and test
+//!   diagnostics go through [`trace_event`]/[`diag`], guarded by a
+//!   mutex. Default sink is `Null`; `d1ht serve --trace stderr` (or any
+//!   caller of [`set_global_sink`]) turns it on.
+//!
+//! Event schema (one JSON object per line): `{"t": <seconds>, "kind":
+//! <str>, "peer": <16-hex-digit id>, ...fields}`. `t` is virtual time
+//! in the sim and process uptime in the runtime. See
+//! `docs/OBSERVABILITY.md` for the kind catalog.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json::Json;
+
+/// Where emitted events go. The ring buffer retains recent events
+/// regardless of sink, so a crash handler (or test) can inspect them.
+#[derive(Debug)]
+pub enum Sink {
+    /// Drop everything (ring retention only). The default.
+    Null,
+    /// One JSON object per line on stderr.
+    Stderr,
+    /// One JSON object per line appended to a file.
+    File(std::fs::File),
+    /// Capture rendered lines in memory (tests).
+    Memory(Vec<String>),
+}
+
+/// One structured event.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Seconds: virtual time (sim) or process uptime (runtime).
+    pub t: f64,
+    pub kind: &'static str,
+    pub peer: u64,
+    pub fields: Vec<(&'static str, Json)>,
+}
+
+impl TraceEvent {
+    /// Render as one JSONL line (no trailing newline).
+    pub fn jsonl(&self) -> String {
+        let mut members = vec![
+            ("t".to_string(), Json::f(self.t)),
+            ("kind".to_string(), Json::s(self.kind)),
+            ("peer".to_string(), Json::Str(format!("{:016x}", self.peer))),
+        ];
+        members.extend(self.fields.iter().map(|(k, v)| (k.to_string(), v.clone())));
+        Json::Obj(members).render()
+    }
+}
+
+/// Default ring retention.
+pub const DEFAULT_RING: usize = 1024;
+
+#[derive(Debug)]
+pub struct Tracer {
+    sink: Sink,
+    ring: VecDeque<TraceEvent>,
+    cap: usize,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(Sink::Null)
+    }
+}
+
+impl Tracer {
+    pub fn new(sink: Sink) -> Self {
+        Tracer { sink, ring: VecDeque::new(), cap: DEFAULT_RING }
+    }
+
+    pub fn stderr() -> Self {
+        Tracer::new(Sink::Stderr)
+    }
+
+    pub fn memory() -> Self {
+        Tracer::new(Sink::Memory(Vec::new()))
+    }
+
+    pub fn file(path: &std::path::Path) -> std::io::Result<Self> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Tracer::new(Sink::File(f)))
+    }
+
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.cap = cap.max(1);
+        self
+    }
+
+    /// True when the sink drops output — producers use this to skip
+    /// building field vectors on the hot path.
+    pub fn is_null(&self) -> bool {
+        matches!(self.sink, Sink::Null)
+    }
+
+    pub fn set_sink(&mut self, sink: Sink) {
+        self.sink = sink;
+    }
+
+    /// Emit one event: retain in the ring, then write to the sink.
+    pub fn emit(&mut self, t: f64, kind: &'static str, peer: u64, fields: Vec<(&'static str, Json)>) {
+        let ev = TraceEvent { t, kind, peer, fields };
+        if self.ring.len() >= self.cap {
+            self.ring.pop_front();
+        }
+        match &mut self.sink {
+            Sink::Null => {
+                self.ring.push_back(ev);
+            }
+            Sink::Stderr => {
+                eprintln!("{}", ev.jsonl());
+                self.ring.push_back(ev);
+            }
+            Sink::File(f) => {
+                let _ = writeln!(f, "{}", ev.jsonl());
+                self.ring.push_back(ev);
+            }
+            Sink::Memory(lines) => {
+                lines.push(ev.jsonl());
+                self.ring.push_back(ev);
+            }
+        }
+    }
+
+    /// Recent events, oldest first (bounded by the ring capacity).
+    pub fn recent(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.ring.iter()
+    }
+
+    /// Lines captured by a `Memory` sink (empty for other sinks).
+    pub fn memory_lines(&self) -> &[String] {
+        match &self.sink {
+            Sink::Memory(lines) => lines,
+            _ => &[],
+        }
+    }
+}
+
+// ---- process-global tracer (threaded runtime + test diagnostics) ----
+
+fn global() -> &'static Mutex<Tracer> {
+    static G: OnceLock<Mutex<Tracer>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(Tracer::default()))
+}
+
+fn uptime() -> f64 {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    T0.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Swap the process-global sink (e.g. `d1ht serve --trace stderr`).
+pub fn set_global_sink(sink: Sink) {
+    if let Ok(mut t) = global().lock() {
+        t.set_sink(sink);
+    }
+}
+
+/// Emit through the process-global tracer. `t` is process uptime.
+pub fn trace_event(kind: &'static str, peer: u64, fields: &[(&'static str, Json)]) {
+    let now = uptime();
+    if let Ok(mut t) = global().lock() {
+        if t.is_null() {
+            return; // keep the disabled path lock-cheap and alloc-free
+        }
+        t.emit(now, kind, peer, fields.to_vec());
+    }
+}
+
+/// Always-on stderr diagnostic (JSONL), bypassing the global sink
+/// setting — replaces ad-hoc `eprintln!` notices (e.g. test SKIPs) so
+/// stdout stays machine-parsable and stderr stays structured.
+pub fn diag(kind: &'static str, fields: &[(&'static str, &str)]) {
+    let ev = TraceEvent {
+        t: uptime(),
+        kind,
+        peer: 0,
+        fields: fields.iter().map(|(k, v)| (*k, Json::s(*v))).collect(),
+    };
+    eprintln!("{}", ev.jsonl());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_sink_captures_jsonl() {
+        let mut tr = Tracer::memory();
+        tr.emit(1.5, "lookup", 0xabc, vec![("rtt_ns", Json::u(42)), ("one_hop", Json::Bool(true))]);
+        let lines = tr.memory_lines();
+        assert_eq!(lines.len(), 1);
+        let doc = Json::parse(&lines[0]).unwrap();
+        assert_eq!(doc.get("kind").unwrap().as_str(), Some("lookup"));
+        assert_eq!(doc.get("peer").unwrap().as_str(), Some("0000000000000abc"));
+        assert_eq!(doc.get("rtt_ns").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("t").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let mut tr = Tracer::new(Sink::Null).with_capacity(4);
+        for i in 0..10 {
+            tr.emit(i as f64, "tick", i, vec![]);
+        }
+        let kept: Vec<u64> = tr.recent().map(|e| e.peer).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn null_sink_still_retains() {
+        let mut tr = Tracer::default();
+        assert!(tr.is_null());
+        tr.emit(0.0, "x", 1, vec![]);
+        assert_eq!(tr.recent().count(), 1);
+        assert!(tr.memory_lines().is_empty());
+    }
+
+    #[test]
+    fn file_sink_appends() {
+        let path = std::env::temp_dir()
+            .join(format!("d1ht-trace-test-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut tr = Tracer::file(&path).unwrap();
+            tr.emit(0.5, "a", 1, vec![]);
+            tr.emit(0.6, "b", 2, vec![]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(Json::parse(lines[0]).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -61,7 +61,10 @@ mod tests {
     #[test]
     fn artifact_matches_native_models() {
         if !crate::runtime::artifacts_available() {
-            eprintln!("SKIP: run `make artifacts` first");
+            crate::obs::trace::diag(
+                "test_skip",
+                &[("test", "artifact_matches_native_models"), ("hint", "run `make artifacts` first")],
+            );
             return;
         }
         let grid = AnalyticsGrid::load().expect("load analytics artifact");
@@ -94,7 +97,10 @@ mod tests {
     #[test]
     fn oversized_grid_rejected() {
         if !crate::runtime::artifacts_available() {
-            eprintln!("SKIP: run `make artifacts` first");
+            crate::obs::trace::diag(
+                "test_skip",
+                &[("test", "oversized_grid_rejected"), ("hint", "run `make artifacts` first")],
+            );
             return;
         }
         let grid = AnalyticsGrid::load().expect("load");

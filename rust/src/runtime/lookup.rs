@@ -151,7 +151,10 @@ mod tests {
     #[test]
     fn xla_artifact_matches_native() {
         if !crate::runtime::artifacts_available() {
-            eprintln!("SKIP: run `make artifacts` first");
+            crate::obs::trace::diag(
+                "test_skip",
+                &[("test", "xla_artifact_matches_native"), ("hint", "run `make artifacts` first")],
+            );
             return;
         }
         let exe = BatchLookup::load().expect("load artifact");
@@ -169,7 +172,10 @@ mod tests {
     #[test]
     fn xla_partial_batch() {
         if !crate::runtime::artifacts_available() {
-            eprintln!("SKIP: run `make artifacts` first");
+            crate::obs::trace::diag(
+                "test_skip",
+                &[("test", "xla_partial_batch"), ("hint", "run `make artifacts` first")],
+            );
             return;
         }
         let exe = BatchLookup::load().expect("load");

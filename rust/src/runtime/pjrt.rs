@@ -43,7 +43,13 @@ mod tests {
     #[test]
     fn loads_and_runs_ring_lookup_artifact() {
         if !artifacts_available() {
-            eprintln!("SKIP: run `make artifacts` first");
+            crate::obs::trace::diag(
+                "test_skip",
+                &[
+                    ("test", "loads_and_runs_ring_lookup_artifact"),
+                    ("hint", "run `make artifacts` first"),
+                ],
+            );
             return;
         }
         let c = Compiled::load(&artifacts_dir().join("ring_lookup.hlo.txt")).expect("load");

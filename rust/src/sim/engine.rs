@@ -104,6 +104,28 @@ pub fn run_until<W: World>(world: &mut W, q: &mut Queue<W::Ev>, until: f64) {
     q.now = until.max(q.now);
 }
 
+/// Drive `world` to `until` in chunks of `every` virtual seconds,
+/// calling `observe(world, chunk_end)` after each chunk — the periodic
+/// snapshot hook behind `d1ht report`. The observer runs *between*
+/// chunks, never mid-event, so observing cannot perturb event ordering;
+/// a run observed every `every` seconds is event-for-event identical to
+/// one plain [`run_until`] call.
+pub fn run_until_observed<W: World>(
+    world: &mut W,
+    q: &mut Queue<W::Ev>,
+    until: f64,
+    every: f64,
+    mut observe: impl FnMut(&mut W, f64),
+) {
+    let every = if every > 0.0 { every } else { until - q.now() };
+    let mut t = q.now();
+    while t < until {
+        t = (t + every).min(until);
+        run_until(world, q, t);
+        observe(world, t);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +178,33 @@ mod tests {
         assert_eq!(q.len(), 1, "the t=4 event remains queued");
         run_until(&mut w, &mut q, 4.0);
         assert_eq!(w.seen.len(), 2);
+    }
+
+    #[test]
+    fn observed_run_matches_plain_run() {
+        let drive = |observed: bool| {
+            let mut w = Recorder { seen: vec![] };
+            let mut q = Queue::new();
+            for i in 0..20u32 {
+                q.at(i as f64 * 0.7, i % 3); // ev==1 spawns follow-ups
+            }
+            let mut snaps = Vec::new();
+            if observed {
+                run_until_observed(&mut w, &mut q, 15.0, 2.5, |w, t| {
+                    snaps.push((t, w.seen.len()));
+                });
+            } else {
+                run_until(&mut w, &mut q, 15.0);
+            }
+            (w.seen, snaps, q.now())
+        };
+        let (plain, _, now_p) = drive(false);
+        let (observed, snaps, now_o) = drive(true);
+        assert_eq!(plain, observed, "observer never perturbs event order");
+        assert_eq!(now_p, now_o);
+        assert_eq!(snaps.len(), 6, "ceil(15/2.5) chunks");
+        assert_eq!(snaps.last().unwrap().0, 15.0);
+        assert!(snaps.windows(2).all(|w| w[0].1 <= w[1].1), "monotone progress");
     }
 
     #[test]

@@ -2,6 +2,12 @@
 //! sizes, lookup outcome tallies (the ≥99% one-hop target), lookup
 //! latency histograms, routing-table staleness samples, and the store
 //! layer's durability/availability counters.
+//!
+//! These structs are the *aggregate* views the experiment drivers
+//! report on; the per-peer, per-message-class source data lives in the
+//! [`crate::obs`] registry, which the sim dual-writes alongside these
+//! counters (reconciliation is asserted in `dht::d1ht` tests). See
+//! `docs/OBSERVABILITY.md` for the full catalog.
 
 use crate::util::stats::{LatencyHist, Running, Traffic};
 

@@ -22,6 +22,7 @@
 //! bandwidth are directly comparable to the maintenance figures.
 
 use crate::id::{space, Id};
+use crate::obs::{names, MsgClass, Registry};
 use crate::proto::messages::{Message, MessageBody};
 use crate::proto::sizes;
 use crate::routing::Table;
@@ -89,6 +90,13 @@ pub struct StoreLayer {
     zipf: Zipf,
     pub rng: Rng,
     pub counters: StoreCounters,
+    /// Per-peer traffic attribution: every charge below is also booked
+    /// against the peer that sends/receives it (owner, replica, or
+    /// handoff destination), so a Zipf-skewed workload shows up as
+    /// owner hot-spotting in `d1ht report`. `counters` keeps the
+    /// legacy *system-wide* aggregates (each wire message charged to
+    /// both endpoints); the registry keys the same messages by peer.
+    pub obs: Registry,
 }
 
 /// Wire cost of a store message body (identities do not affect size).
@@ -118,7 +126,14 @@ impl StoreLayer {
             })
             .collect();
         let zipf = Zipf::new(cfg.keys, cfg.zipf_exponent);
-        StoreLayer { cfg, records, zipf, rng, counters: StoreCounters::default() }
+        StoreLayer {
+            cfg,
+            records,
+            zipf,
+            rng,
+            counters: StoreCounters::default(),
+            obs: Registry::new(),
+        }
     }
 
     pub fn keys(&self) -> usize {
@@ -138,6 +153,7 @@ impl StoreLayer {
     /// Zero the counters at the top of the measurement window.
     pub fn reset_counters(&mut self) {
         self.counters = StoreCounters::default();
+        self.obs.clear();
     }
 
     /// One workload operation (put with probability `put_fraction`,
@@ -169,20 +185,30 @@ impl StoreLayer {
         rec.version += 1;
         rec.lost = false;
         rec.deleted = false;
+        let owner = desired[0];
         // client -> owner, plus the durability ack (each wire message is
         // charged to both its sender and its receiver, like the d1ht sim)
-        charge(&mut self.counters.traffic, bits(MessageBody::Put { key: rec.id, value_bits: vb }));
+        let put_bits = bits(MessageBody::Put { key: rec.id, value_bits: vb });
+        charge(&mut self.counters.traffic, put_bits);
         charge(&mut self.counters.traffic, sizes::V_A);
+        // per-peer attribution: the owner absorbs the write and acks it
+        // (the client is outside the overlay and is not a peer)
+        self.obs.charge_in(owner.0, MsgClass::Store, put_bits);
+        self.obs.charge_out(owner.0, MsgClass::Store, sizes::V_A);
         // owner -> each replica (+ acks), charged as replication traffic
-        for _ in 1..desired.len() {
-            charge(
-                &mut self.counters.repair_traffic,
-                bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: vb }),
-            );
+        let repl_bits =
+            bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: vb });
+        for d in desired.iter().skip(1) {
+            charge(&mut self.counters.repair_traffic, repl_bits);
             charge(&mut self.counters.repair_traffic, sizes::V_A);
+            self.obs.charge_out(owner.0, MsgClass::Store, repl_bits);
+            self.obs.charge_in(d.0, MsgClass::Store, repl_bits);
+            self.obs.charge_out(d.0, MsgClass::Store, sizes::V_A);
+            self.obs.charge_in(owner.0, MsgClass::Store, sizes::V_A);
         }
         rec.holders = desired;
         self.counters.puts += 1;
+        self.obs.inc(names::STORE_PUTS, 1);
     }
 
     /// A delete: route a `Remove` to the owner, which tombstones the
@@ -196,17 +222,25 @@ impl StoreLayer {
         rec.version += 1;
         rec.deleted = true;
         rec.lost = false;
-        charge(&mut self.counters.traffic, bits(MessageBody::Remove { key: rec.id }));
+        let owner = desired[0];
+        let rm_bits = bits(MessageBody::Remove { key: rec.id });
+        charge(&mut self.counters.traffic, rm_bits);
         charge(&mut self.counters.traffic, sizes::V_A);
-        for _ in 1..desired.len() {
-            charge(
-                &mut self.counters.repair_traffic,
-                bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: 0 }),
-            );
+        self.obs.charge_in(owner.0, MsgClass::Store, rm_bits);
+        self.obs.charge_out(owner.0, MsgClass::Store, sizes::V_A);
+        let repl_bits =
+            bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: 0 });
+        for d in desired.iter().skip(1) {
+            charge(&mut self.counters.repair_traffic, repl_bits);
             charge(&mut self.counters.repair_traffic, sizes::V_A);
+            self.obs.charge_out(owner.0, MsgClass::Store, repl_bits);
+            self.obs.charge_in(d.0, MsgClass::Store, repl_bits);
+            self.obs.charge_out(d.0, MsgClass::Store, sizes::V_A);
+            self.obs.charge_in(owner.0, MsgClass::Store, sizes::V_A);
         }
         rec.holders = desired;
         self.counters.removes += 1;
+        self.obs.inc(names::STORE_REMOVES, 1);
     }
 
     /// A read: ask the key's owner; fall back to a surviving replica if
@@ -219,32 +253,30 @@ impl StoreLayer {
         let Some(owner) = truth.successor(rec.id) else {
             return;
         };
-        charge(&mut self.counters.traffic, bits(MessageBody::Get { key: rec.id }));
+        let get_bits = bits(MessageBody::Get { key: rec.id });
+        let hit_bits = bits(MessageBody::GetResp { key: rec.id, found: true, value_bits: vb });
+        let miss_bits = bits(MessageBody::GetResp { key: rec.id, found: false, value_bits: 0 });
+        charge(&mut self.counters.traffic, get_bits);
+        self.obs.charge_in(owner.0, MsgClass::Store, get_bits);
+        self.obs.inc(names::STORE_GETS, 1);
         let holds = |h: &Id| truth.contains(*h);
         if rec.holders.iter().any(|h| *h == owner) {
             self.counters.gets_one_hop += 1;
-            charge(
-                &mut self.counters.traffic,
-                bits(MessageBody::GetResp { key: rec.id, found: true, value_bits: vb }),
-            );
-        } else if rec.holders.iter().any(holds) {
+            charge(&mut self.counters.traffic, hit_bits);
+            self.obs.charge_out(owner.0, MsgClass::Store, hit_bits);
+        } else if let Some(replica) = rec.holders.iter().copied().find(|h| holds(h)) {
             // miss at the owner, one extra hop to a surviving replica
             self.counters.gets_degraded += 1;
-            charge(
-                &mut self.counters.traffic,
-                bits(MessageBody::GetResp { key: rec.id, found: false, value_bits: 0 }),
-            );
-            charge(&mut self.counters.traffic, bits(MessageBody::Get { key: rec.id }));
-            charge(
-                &mut self.counters.traffic,
-                bits(MessageBody::GetResp { key: rec.id, found: true, value_bits: vb }),
-            );
+            charge(&mut self.counters.traffic, miss_bits);
+            charge(&mut self.counters.traffic, get_bits);
+            charge(&mut self.counters.traffic, hit_bits);
+            self.obs.charge_out(owner.0, MsgClass::Store, miss_bits);
+            self.obs.charge_in(replica.0, MsgClass::Store, get_bits);
+            self.obs.charge_out(replica.0, MsgClass::Store, hit_bits);
         } else {
             self.counters.gets_failed += 1;
-            charge(
-                &mut self.counters.traffic,
-                bits(MessageBody::GetResp { key: rec.id, found: false, value_bits: 0 }),
-            );
+            charge(&mut self.counters.traffic, miss_bits);
+            self.obs.charge_out(owner.0, MsgClass::Store, miss_bits);
         }
     }
 
@@ -280,6 +312,8 @@ impl StoreLayer {
                 continue;
             }
             let desired = replica_set(truth, rec.id, r);
+            // the first surviving holder sources every copy for this key
+            let source = alive[0];
             for d in &desired {
                 if alive.contains(d) {
                     continue;
@@ -290,23 +324,34 @@ impl StoreLayer {
                     let batch = handoff_batches.entry(*d).or_insert((0, 0));
                     batch.0 += 1;
                     batch.1 += vb;
+                    // per-peer attribution charges the per-key marginal
+                    // cost here (the exact batched framing is charged
+                    // once per destination below, where the source is no
+                    // longer known) — aggregate `counters` stay exact
+                    let marginal = sizes::handoff_bits(1, vb);
+                    self.obs.charge_out(source.0, MsgClass::Bulk, marginal);
+                    self.obs.charge_in(d.0, MsgClass::Bulk, marginal);
                 } else {
                     self.counters.repair_transfers += 1;
-                    charge(
-                        &mut self.counters.repair_traffic,
-                        bits(MessageBody::Replicate {
-                            key: rec.id,
-                            version: rec.version,
-                            value_bits: vb,
-                        }),
-                    );
+                    let repl_bits = bits(MessageBody::Replicate {
+                        key: rec.id,
+                        version: rec.version,
+                        value_bits: vb,
+                    });
+                    charge(&mut self.counters.repair_traffic, repl_bits);
                     charge(&mut self.counters.repair_traffic, sizes::V_A);
+                    self.obs.charge_out(source.0, MsgClass::Store, repl_bits);
+                    self.obs.charge_in(d.0, MsgClass::Store, repl_bits);
+                    self.obs.charge_out(d.0, MsgClass::Store, sizes::V_A);
+                    self.obs.charge_in(source.0, MsgClass::Store, sizes::V_A);
+                    self.obs.inc(names::STORE_REPAIR_TRANSFERS, 1);
                 }
             }
             rec.holders = desired;
         }
         for (_, (keys, vb_total)) in handoff_batches {
             self.counters.bulk_handoffs += 1;
+            self.obs.inc(names::STORE_BULK_HANDOFFS, 1);
             charge(&mut self.counters.repair_traffic, sizes::handoff_bits(keys, vb_total));
         }
     }
@@ -429,6 +474,64 @@ mod tests {
         s.put(&t1, 0);
         let (_, alive) = s.retrievable(&t1);
         assert_eq!(alive, 1);
+    }
+
+    #[test]
+    fn per_peer_attribution_exposes_zipf_hotspot() {
+        // heavily skewed popularity: the hot keys' owners must absorb
+        // visibly more store traffic than the cold ones (ROADMAP's
+        // "per-peer store traffic attribution" follow-on)
+        let t = table(&[100, 200, 300, 400, 500, 600, 700, 800]);
+        let cfg = StoreCfg { keys: 64, replication: 2, zipf_exponent: 1.2, ..Default::default() };
+        let mut s = StoreLayer::new(cfg, Rng::new(11));
+        s.preload(&t);
+        for _ in 0..2000 {
+            s.workload_step(&t);
+        }
+        let mut in_bits: Vec<u64> =
+            s.obs.peers().map(|(_, f)| f.class(MsgClass::Store).bits_in).collect();
+        assert!(!in_bits.is_empty(), "owners were attributed");
+        in_bits.sort_unstable();
+        let (lo, hi) = (in_bits[0], *in_bits.last().unwrap());
+        assert!(hi > lo, "Zipf skew visible per peer: lo {lo} hi {hi}");
+        let ops = s.obs.counter(names::STORE_GETS)
+            + s.obs.counter(names::STORE_PUTS)
+            + s.obs.counter(names::STORE_REMOVES);
+        assert_eq!(ops, 2000, "every op mirrored into the registry");
+    }
+
+    #[test]
+    fn repair_attribution_balances_and_skips_departed() {
+        let t0 = table(&[100, 200, 300, 400, 500]);
+        let mut s = layer(40, 3);
+        s.preload(&t0);
+        let t1 = table(&[100, 200, 400, 500]);
+        s.repair(&t1);
+        // each replicate/ack pair books one out and one in of equal size
+        let out: u64 = s.obs.peers().map(|(_, f)| f.class(MsgClass::Store).bits_out).sum();
+        let inb: u64 = s.obs.peers().map(|(_, f)| f.class(MsgClass::Store).bits_in).sum();
+        assert_eq!(out, inb, "store-class flows balance across peers");
+        assert!(out > 0, "repair re-replication was attributed");
+        let bulk_out: u64 =
+            s.obs.peers().map(|(_, f)| f.class(MsgClass::Bulk).bits_out).sum();
+        let bulk_in: u64 = s.obs.peers().map(|(_, f)| f.class(MsgClass::Bulk).bits_in).sum();
+        assert_eq!(bulk_out, bulk_in, "bulk handoff flows balance too");
+        // the departed peer is never a repair source or destination
+        assert!(s.obs.peer_flows(300).is_none());
+    }
+
+    #[test]
+    fn reset_counters_clears_attribution() {
+        let t = table(&[100, 200, 300, 400]);
+        let mut s = layer(20, 3);
+        s.preload(&t);
+        for _ in 0..50 {
+            s.workload_step(&t);
+        }
+        assert!(s.obs.peers().next().is_some());
+        s.reset_counters();
+        assert!(s.obs.peers().next().is_none(), "window reset drops attribution");
+        assert_eq!(s.obs.counter(names::STORE_GETS), 0);
     }
 
     #[test]

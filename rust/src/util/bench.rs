@@ -1,11 +1,18 @@
 //! Minimal benchmark harness (criterion is unavailable offline; DESIGN.md §5).
 //!
-//! Provides warm-up + timed iterations with mean/σ/min reporting, and a
-//! `black_box` to defeat constant folding. Used by every `rust/benches/*`
-//! target (`harness = false`).
+//! Provides warm-up + timed iterations with mean/σ/min/p99 reporting, a
+//! `black_box` to defeat constant folding, and the machine-readable
+//! *bench trajectory*: [`run_trajectory`] appends one labeled run per
+//! topic to `BENCH_<topic>.json` (schema `d1ht.bench.v1`), so perf moves
+//! across commits are diffable instead of anecdotal. Used by every
+//! `rust/benches/*` target (`harness = false`) and by `d1ht bench`.
 
 use std::hint::black_box as std_black_box;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::anyhow::{bail, Context, Result};
+use crate::obs::Json;
 
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
@@ -18,14 +25,31 @@ pub struct BenchResult {
     pub mean: Duration,
     pub std_dev: Duration,
     pub min: Duration,
+    /// 99th-percentile sample (== max below 100 iterations).
+    pub p99: Duration,
 }
 
 impl BenchResult {
     pub fn report(&self) -> String {
         format!(
-            "{:<44} {:>12?} /iter (min {:>12?}, sd {:>10?}, n={})",
-            self.name, self.mean, self.min, self.std_dev, self.iters
+            "{:<44} {:>12?} /iter (min {:>12?}, p99 {:>12?}, sd {:>10?}, n={})",
+            self.name, self.mean, self.min, self.p99, self.std_dev, self.iters
         )
+    }
+
+    /// One entry of a trajectory run (`d1ht.bench.v1` result object).
+    pub fn to_json(&self) -> Json {
+        let mean_ns = self.mean.as_nanos() as u64;
+        let ops = if mean_ns == 0 { 0.0 } else { 1e9 / mean_ns as f64 };
+        Json::Obj(vec![
+            ("name".into(), Json::s(&self.name)),
+            ("iters".into(), Json::u(self.iters as u64)),
+            ("mean_ns".into(), Json::u(mean_ns)),
+            ("std_dev_ns".into(), Json::u(self.std_dev.as_nanos() as u64)),
+            ("min_ns".into(), Json::u(self.min.as_nanos() as u64)),
+            ("p99_ns".into(), Json::u(self.p99.as_nanos() as u64)),
+            ("ops_per_sec".into(), Json::f(ops)),
+        ])
     }
 }
 
@@ -65,12 +89,17 @@ fn summarize(name: &str, samples: &[Duration]) -> BenchResult {
         })
         .sum::<f64>()
         / n.max(1.0);
+    let mut sorted: Vec<Duration> = samples.to_vec();
+    sorted.sort_unstable();
+    // nearest-rank p99: ceil(0.99 n) (1-based), clamped into range
+    let rank = ((0.99 * n).ceil() as usize).clamp(1, sorted.len());
     BenchResult {
         name: name.to_string(),
         iters: samples.len() as u32,
         mean: Duration::from_nanos(mean_ns as u64),
         std_dev: Duration::from_nanos(var.sqrt() as u64),
-        min: *samples.iter().min().unwrap(),
+        min: sorted[0],
+        p99: sorted[rank - 1],
     }
 }
 
@@ -80,6 +109,226 @@ pub fn run_suite(suite: &str, benches: Vec<BenchResult>) {
     for b in &benches {
         println!("{}", b.report());
     }
+}
+
+// ---------------------------------------------------------------------
+// The bench trajectory: BENCH_<topic>.json (schema d1ht.bench.v1)
+// ---------------------------------------------------------------------
+
+pub const BENCH_SCHEMA: &str = "d1ht.bench.v1";
+
+/// The four tracked topics, one `BENCH_<topic>.json` file each.
+pub const TOPICS: [&str; 4] = ["lookup", "edra", "codec", "store"];
+
+/// Path of a topic's trajectory file under `dir`.
+pub fn trajectory_path(dir: &Path, topic: &str) -> PathBuf {
+    dir.join(format!("BENCH_{topic}.json"))
+}
+
+/// Append one labeled run to `BENCH_<topic>.json` in `dir`, creating the
+/// file (empty trajectory) when absent. The existing document is parsed
+/// and rewritten, so runs accumulate — the *trajectory* across commits.
+pub fn append_trajectory(
+    dir: &Path,
+    topic: &str,
+    label: &str,
+    results: &[BenchResult],
+) -> Result<PathBuf> {
+    let path = trajectory_path(dir, topic);
+    let mut doc = match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            // Json::parse errors are plain Strings (not std::error::Error),
+            // so lift them into the vendored anyhow by hand
+            let doc = Json::parse(&text)
+                .map_err(crate::anyhow::Error::msg)
+                .with_context(|| format!("{}: not valid JSON", path.display()))?;
+            if doc.get("schema").and_then(|s| s.as_str()) != Some(BENCH_SCHEMA) {
+                bail!("{}: not a {BENCH_SCHEMA} document", path.display());
+            }
+            doc
+        }
+        Err(_) => empty_trajectory(topic),
+    };
+    let run = Json::Obj(vec![
+        ("label".into(), Json::s(label)),
+        ("results".into(), Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+    ]);
+    match &mut doc {
+        Json::Obj(members) => {
+            let runs = members
+                .iter_mut()
+                .find(|(k, _)| k == "runs")
+                .map(|(_, v)| v)
+                .context("trajectory document has no 'runs'")?;
+            match runs {
+                Json::Arr(a) => a.push(run),
+                _ => bail!("'runs' is not an array"),
+            }
+        }
+        _ => bail!("trajectory document is not an object"),
+    }
+    std::fs::write(&path, doc.render() + "\n")
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// A fresh, run-less trajectory document for `topic`.
+pub fn empty_trajectory(topic: &str) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::s(BENCH_SCHEMA)),
+        ("topic".into(), Json::s(topic)),
+        ("runs".into(), Json::Arr(vec![])),
+    ])
+}
+
+/// Run every topic's suite and append one labeled run per file. `smoke`
+/// shrinks the per-bench time target ~100× so CI can assert the files
+/// are produced and schema-valid in seconds. Returns the written paths.
+pub fn run_trajectory(dir: &Path, smoke: bool, label: &str) -> Result<Vec<PathBuf>> {
+    let target =
+        if smoke { Duration::from_millis(2) } else { Duration::from_millis(200) };
+    let mut paths = Vec::new();
+    for topic in TOPICS {
+        let results = run_topic(topic, target);
+        paths.push(append_trajectory(dir, topic, label, &results)?);
+    }
+    Ok(paths)
+}
+
+/// The per-topic workloads: small, deterministic slices of the hot
+/// paths the paper's results rest on (routing-table lookups, EDRA
+/// interval closing, the Figure-2 codecs, store workload + repair).
+pub fn run_topic(topic: &str, target: Duration) -> Vec<BenchResult> {
+    use crate::id::Id;
+    use crate::routing::Table;
+    use crate::util::rng::Rng;
+
+    match topic {
+        "lookup" => {
+            let mut rng = Rng::new(0xBE11C);
+            let ids: Vec<Id> = (0..4000).map(|_| Id(rng.next_u64())).collect();
+            let table = Table::from_ids(ids);
+            let mut probe = 0u64;
+            vec![bench_auto("table.successor/4k", target, || {
+                probe = probe.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                black_box(table.successor(Id(probe)));
+            })]
+        }
+        "edra" => {
+            use crate::edra::Edra;
+            use crate::proto::messages::Event;
+            let mut rng = Rng::new(0xED7A);
+            let ids: Vec<Id> = (0..512).map(|_| Id(rng.next_u64())).collect();
+            let table = Table::from_ids(ids.clone());
+            let me = ids[0];
+            let mut now = 0.0f64;
+            vec![bench_auto("edra.ack8+close_interval/512", target, || {
+                let mut e = Edra::new(me, 0.01, now);
+                for k in 0..8usize {
+                    e.acknowledge(Event::join(ids[(k * 37 + 1) % ids.len()]), 3, now);
+                }
+                black_box(e.close_interval(&table, now).len());
+                now += 1.0;
+            })]
+        }
+        "codec" => {
+            use crate::net::wire;
+            use crate::proto::codec;
+            use crate::proto::messages::{Event, Message, MessageBody};
+            let events: Vec<Event> =
+                (0..50).map(|i| Event::join(Id(i as u64 * 0x9E37 + 1))).collect();
+            let msg = Message {
+                from: Id(1),
+                to: Id(2),
+                seqno: 7,
+                body: MessageBody::Maintenance { ttl: 3, events },
+            };
+            let addr: std::net::SocketAddrV4 = "127.0.0.1:4000".parse().unwrap();
+            let dgram = wire::NetMsg::Maintenance {
+                seq: 9,
+                ttl: 2,
+                joins: vec![addr; 25],
+                leaves: vec![addr; 25],
+            };
+            vec![
+                bench_auto("proto.codec.roundtrip/50ev", target, || {
+                    let buf = codec::encode(&msg);
+                    black_box(codec::decode(&buf).unwrap());
+                }),
+                bench_auto("net.wire.roundtrip/50addr", target, || {
+                    let buf = wire::encode(&dgram);
+                    black_box(wire::decode(&buf).unwrap());
+                }),
+            ]
+        }
+        "store" => {
+            use crate::store::{StoreCfg, StoreLayer};
+            let mut rng = Rng::new(0x5702E);
+            let ids: Vec<Id> = (0..256).map(|_| Id(rng.next_u64())).collect();
+            let truth = Table::from_ids(ids);
+            let cfg = StoreCfg {
+                keys: 512,
+                replication: 3,
+                repair_interval: 30.0,
+                ..Default::default()
+            };
+            let mut layer = StoreLayer::new(cfg, Rng::new(0xFEED));
+            layer.preload(&truth);
+            vec![
+                bench_auto("store.workload_step/512keys", target, || {
+                    layer.workload_step(&truth);
+                }),
+                bench_auto("store.repair/512keys", target, || {
+                    layer.repair(&truth);
+                }),
+            ]
+        }
+        other => panic!("unknown bench topic '{other}'"),
+    }
+}
+
+/// Schema-check every topic file in `dir`: present, parseable, schema
+/// and topic fields right, at least one run whose results carry the
+/// required numeric fields. CI runs this after the smoke pass.
+pub fn verify_trajectory(dir: &Path) -> Result<()> {
+    for topic in TOPICS {
+        let path = trajectory_path(dir, topic);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("missing {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(crate::anyhow::Error::msg)
+            .with_context(|| format!("{}: invalid JSON", path.display()))?;
+        if doc.get("schema").and_then(|s| s.as_str()) != Some(BENCH_SCHEMA) {
+            bail!("{}: schema != {BENCH_SCHEMA}", path.display());
+        }
+        if doc.get("topic").and_then(|s| s.as_str()) != Some(topic) {
+            bail!("{}: topic mismatch", path.display());
+        }
+        let runs = doc
+            .get("runs")
+            .and_then(|r| r.as_arr())
+            .with_context(|| format!("{}: no runs array", path.display()))?;
+        if runs.is_empty() {
+            bail!("{}: trajectory has no runs", path.display());
+        }
+        for run in runs {
+            let results = run
+                .get("results")
+                .and_then(|r| r.as_arr())
+                .with_context(|| format!("{}: run without results", path.display()))?;
+            for r in results {
+                for field in ["mean_ns", "min_ns", "p99_ns"] {
+                    if r.get(field).and_then(|v| v.as_i64()).is_none() {
+                        bail!("{}: result missing {field}", path.display());
+                    }
+                }
+                if r.get("name").and_then(|v| v.as_str()).is_none() {
+                    bail!("{}: result missing name", path.display());
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -97,6 +346,7 @@ mod tests {
         });
         assert_eq!(r.iters, 5);
         assert!(r.min <= r.mean);
+        assert!(r.p99 >= r.min);
     }
 
     #[test]
@@ -105,5 +355,45 @@ mod tests {
             black_box(1 + 1);
         });
         assert!(r.iters >= 3 && r.iters <= 1000);
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("d1ht-bench-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn trajectory_roundtrip_appends_and_verifies() {
+        let dir = temp_dir("traj");
+        let paths = run_trajectory(&dir, true, "first").unwrap();
+        assert_eq!(paths.len(), TOPICS.len());
+        verify_trajectory(&dir).unwrap();
+        // second run appends rather than overwriting
+        run_trajectory(&dir, true, "second").unwrap();
+        let doc =
+            Json::parse(&std::fs::read_to_string(trajectory_path(&dir, "lookup")).unwrap())
+                .unwrap();
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("label").unwrap().as_str(), Some("first"));
+        assert_eq!(runs[1].get("label").unwrap().as_str(), Some("second"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_rejects_missing_and_malformed() {
+        let dir = temp_dir("bad");
+        assert!(verify_trajectory(&dir).is_err(), "missing files rejected");
+        for topic in TOPICS {
+            std::fs::write(
+                trajectory_path(&dir, topic),
+                empty_trajectory(topic).render(),
+            )
+            .unwrap();
+        }
+        assert!(verify_trajectory(&dir).is_err(), "run-less trajectory rejected");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -8,7 +8,8 @@
 //! d1ht sim --peers <n> --savg-min <mins> [--secs <s>] [--quarantine-tq <s>]
 //! d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--secs <s>]
 //! d1ht report [--peers <n>] [--secs <s>] [--seed <s>] [--trace drop|stderr]
-//! d1ht bench [--smoke] [--dir <d>] [--label <l>] [--verify]
+//! d1ht bench [--smoke] [--dir <d>] [--label <l>] [--verify] [--min-runs <n>]
+//! d1ht conform --trace <file> [--record] [--seed <s>] [--peers <n>] [--keys <k>]
 //! ```
 
 use crate::anyhow::{bail, Context, Result};
@@ -84,6 +85,7 @@ pub fn run(argv: &[String], out: &mut dyn std::io::Write) -> Result<()> {
         Some("store") => cmd_store(&args, out),
         Some("report") => cmd_report(&args, out),
         Some("bench") => cmd_bench(&args, out),
+        Some("conform") => cmd_conform(&args, out),
         Some("help") | None => {
             writeln!(out, "{}", HELP)?;
             Ok(())
@@ -114,7 +116,16 @@ USAGE:
                                          class flows + latency histograms
   d1ht bench [--smoke] [--dir <d>] [--label <l>]
                                          append a run to BENCH_*.json
-  d1ht bench --verify [--dir <d>]        schema-check the BENCH files
+  d1ht bench --verify [--dir <d>] [--min-runs <n>]
+                                         schema-check the BENCH files
+  d1ht conform --trace <file> [--record] [--seed <s>] [--peers <n>]
+               [--keys <k>] [--value-len <b>]
+                                         replay one recorded workload
+                                         trace through the simulator AND
+                                         the socket runtime, then diff
+                                         the normalized reports; exits
+                                         non-zero on divergence
+                                         (docs/CONFORMANCE.md)
   d1ht help";
 
 fn fidelity(args: &Args) -> Fidelity {
@@ -357,7 +368,8 @@ fn cmd_bench(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
 
     let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("."));
     if args.has("verify") {
-        bench::verify_trajectory(&dir)?;
+        let min_runs = args.get_usize("min-runs", 1)?;
+        bench::verify_trajectory(&dir, min_runs)?;
         writeln!(out, "bench trajectory OK ({} topics)", bench::TOPICS.len())?;
         return Ok(());
     }
@@ -367,6 +379,49 @@ fn cmd_bench(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
         writeln!(out, "wrote {}", path.display())?;
     }
     Ok(())
+}
+
+/// Replay one recorded workload trace through the deterministic
+/// simulator AND the real socket runtime, then machine-check the diff
+/// of the two normalized reports (`crate::conformance`). With
+/// `--record`, generate the trace to the given path first.
+fn cmd_conform(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    use crate::conformance::{self, Trace};
+
+    let path = args.get("trace").context("--trace <file> is required")?.to_string();
+    let trace = if args.has("record") {
+        let seed = args.get_usize("seed", 7)? as u64;
+        let peers = args.get_usize("peers", 6)?;
+        let keys = args.get_usize("keys", 32)?;
+        let value_len = args.get_usize("value-len", 16)?;
+        let name = std::path::Path::new(&path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("trace");
+        let trace = Trace::generate(name, seed, peers, keys, value_len);
+        std::fs::write(&path, trace.render()).with_context(|| format!("writing {path}"))?;
+        writeln!(out, "recorded trace '{}' -> {path} ({} steps)", trace.name, trace.steps.len())?;
+        trace
+    } else {
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        Trace::parse(&text)?
+    };
+    // test-only: arm the net runtime's replication fault to demonstrate
+    // that the harness detects broken replication
+    let fault = args.has("fault-drop-replication");
+    let outcome = conformance::run_trace_with_fault(&trace, fault)?;
+    writeln!(out, "{}", outcome.sim.to_json().render())?;
+    writeln!(out, "{}", outcome.net.to_json().render())?;
+    match outcome.divergence {
+        None => {
+            writeln!(out, "conformance OK: sim and net agree on trace '{}'", trace.name)?;
+            Ok(())
+        }
+        Some(d) => {
+            writeln!(out, "{}", conformance::explain(&d, &outcome.sim, &outcome.net))?;
+            bail!("conformance failed for trace '{}'", trace.name)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -448,6 +503,34 @@ mod tests {
         }
         assert!(maint > 0, "maintenance bytes attributed");
         assert!(store > 0, "store bytes attributed");
+    }
+
+    /// Seed-sweep determinism: five seeds, two runs each, byte-identical
+    /// JSON per seed (and all five reports distinct from each other).
+    #[test]
+    fn report_seed_sweep_is_deterministic() {
+        let mut reports = Vec::new();
+        for seed in ["21", "22", "23", "24", "25"] {
+            let argv = ["report", "--peers", "32", "--secs", "30", "--seed", seed];
+            let a = run_to_string(&argv).unwrap();
+            let b = run_to_string(&argv).unwrap();
+            assert_eq!(a, b, "seed {seed}: byte-identical across runs");
+            reports.push(a);
+        }
+        for i in 0..reports.len() {
+            for j in i + 1..reports.len() {
+                assert_ne!(reports[i], reports[j], "seeds {i}/{j} produce distinct reports");
+            }
+        }
+    }
+
+    #[test]
+    fn conform_requires_trace_flag_and_readable_file() {
+        assert!(run_to_string(&["conform"]).is_err(), "--trace is required");
+        assert!(
+            run_to_string(&["conform", "--trace", "/nonexistent/trace.json"]).is_err(),
+            "missing file is an error"
+        );
     }
 
     #[test]

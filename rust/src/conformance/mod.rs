@@ -1,0 +1,67 @@
+//! Sim/net conformance harness: one recorded workload trace, two
+//! runtimes, a machine-checked diff.
+//!
+//! The crate maintains two implementations of the same protocol stack —
+//! the deterministic discrete-event simulator ([`crate::sim`] +
+//! [`crate::store::StoreLayer`]) and the real socket runtime
+//! ([`crate::net`]). Results derived from one are only trustworthy if
+//! the other agrees, so this module pins them against each other:
+//!
+//! 1. [`trace`] — the recorded workload format (`d1ht.trace.v1`): a
+//!    seeded sequence of `join`/`leave`/`fail`/`put`/`get`/`remove`
+//!    steps with logical timestamps, plus `settle` barriers after every
+//!    membership change. Golden traces live in `rust/tests/traces/`.
+//! 2. [`sim`] / [`net`] — one replay driver per runtime. Each replays
+//!    the identical step sequence and reduces the outcome to a
+//!    normalized [`ConformanceReport`] (`d1ht.conformance.v1`): every
+//!    get's hit/miss, the final retrievable-key vector and its digest,
+//!    durability/availability, and per-class traffic totals from the
+//!    observability registry.
+//! 3. [`diff`] — the differ: exact comparison where determinism is
+//!    promised (get outcomes, retrievability, digest), declared
+//!    tolerance bands where the runtimes legitimately differ (traffic).
+//!    First divergence wins and is pretty-printed with context.
+//!
+//! Surfaced as `d1ht conform --trace <file> [--record]`; gated in CI by
+//! `rust/tests/conformance.rs`. Schema and tolerance rationale:
+//! `docs/CONFORMANCE.md` (kept in sync by a test in [`diff`]).
+
+pub mod diff;
+pub mod net;
+pub mod report;
+pub mod sim;
+pub mod trace;
+
+pub use diff::{diff_reports, explain, Band, Divergence, BANDS};
+pub use report::{ConformanceReport, Expectation, REPORT_SCHEMA};
+pub use trace::{Trace, TraceOp, TraceStep, TRACE_SCHEMA};
+
+use crate::anyhow::Result;
+
+/// Both reports plus the verdict.
+pub struct Outcome {
+    pub sim: ConformanceReport,
+    pub net: ConformanceReport,
+    pub divergence: Option<Divergence>,
+}
+
+impl Outcome {
+    pub fn conforms(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+/// Replay `trace` through both runtimes and diff the reports.
+pub fn run_trace(trace: &Trace) -> Result<Outcome> {
+    run_trace_with_fault(trace, false)
+}
+
+/// Like [`run_trace`], but optionally arming the net runtime's
+/// test-only replication fault — used to prove the harness actually
+/// detects broken replication (it must report a divergence).
+pub fn run_trace_with_fault(trace: &Trace, fault_drop_replication: bool) -> Result<Outcome> {
+    let sim_rep = sim::replay_sim(trace)?;
+    let net_rep = net::replay_net(trace, fault_drop_replication)?;
+    let divergence = diff_reports(&sim_rep, &net_rep);
+    Ok(Outcome { sim: sim_rep, net: net_rep, divergence })
+}

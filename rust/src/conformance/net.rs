@@ -1,0 +1,265 @@
+//! Trace replay through the real socket runtime ([`crate::net`]).
+//!
+//! One OS thread and one UDP socket per peer, real bytes in each
+//! [`crate::store::KvStore`], wall-clock settle windows instead of
+//! virtual time. The driver's job is normalization: replay the same
+//! steps the sim driver replays, then reduce the cluster's state to the
+//! same [`ConformanceReport`] shape.
+//!
+//! Traffic attribution is the delicate part. Peer stats counters are
+//! cumulative since spawn, and peers can die mid-replay taking their
+//! counters with them — so the driver snapshots every peer's flows
+//! right after convergence (the *baseline*), harvests a departing
+//! peer's delta immediately before killing it, and harvests all
+//! survivors after the final settle. Peers that join mid-replay get a
+//! zero baseline: their join-time bulk transfer is charged to the
+//! replay window, exactly as the sim charges joins that happen while
+//! recording.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::anyhow::{bail, Context, Result};
+use crate::net::cluster::Cluster;
+use crate::net::peer::{NetPeerCfg, PeerHandle};
+use crate::obs::{ClassFlows, MsgClass};
+use crate::util::rng::Rng;
+
+use super::report::{ConformanceReport, Expectation};
+use super::sim::REPLICATION;
+use super::trace::{Trace, TraceOp};
+
+/// Wall-clock length of one `settle` step: several anti-entropy passes
+/// ([`REPAIR_EVERY`]) plus EDRA dissemination on loopback.
+const SETTLE: Duration = Duration::from_millis(2500);
+
+/// Anti-entropy period during replay — frequent, so [`SETTLE`] always
+/// includes repair (mirrors the sim's 30 s-in-120 s ratio).
+const REPAIR_EVERY: Duration = Duration::from_millis(300);
+
+/// Pacing between spawns during initial cluster growth.
+const SPACING: Duration = Duration::from_millis(100);
+
+/// Writes (puts/removes) retry up to this many times; reads never retry
+/// — a read's outcome is a measured quantity, not a delivery guarantee.
+const WRITE_ATTEMPTS: usize = 3;
+
+fn flow_arrays(f: &ClassFlows) -> ([u64; 4], [u64; 4]) {
+    let mut out = [0u64; 4];
+    let mut inp = [0u64; 4];
+    for (i, c) in MsgClass::ALL.iter().enumerate() {
+        let t = f.class(*c);
+        out[i] = t.bits_out;
+        inp[i] = t.bits_in;
+    }
+    (out, inp)
+}
+
+/// Per-class accumulator with per-peer baselines subtracted.
+struct FlowHarvest {
+    base: BTreeMap<u64, ([u64; 4], [u64; 4])>,
+    acc_out: [u64; 4],
+    acc_in: [u64; 4],
+}
+
+impl FlowHarvest {
+    fn new() -> FlowHarvest {
+        FlowHarvest { base: BTreeMap::new(), acc_out: [0; 4], acc_in: [0; 4] }
+    }
+
+    /// Record `peer`'s current counters as its pre-replay baseline.
+    fn baseline(&mut self, peer: &PeerHandle) -> Result<()> {
+        let s = peer.stats().context("baseline stats")?;
+        self.base.insert(s.id, flow_arrays(&s.flows));
+        Ok(())
+    }
+
+    /// Fold `peer`'s counters (minus its baseline) into the totals.
+    /// Call once per peer, right before it departs or after the final
+    /// settle. Peers without a baseline (joined mid-replay) contribute
+    /// their full counters.
+    fn harvest(&mut self, peer: &PeerHandle) {
+        let Ok(s) = peer.stats() else { return };
+        let (out, inp) = flow_arrays(&s.flows);
+        let (b_out, b_in) = self.base.get(&s.id).copied().unwrap_or(([0; 4], [0; 4]));
+        for i in 0..4 {
+            self.acc_out[i] += out[i].saturating_sub(b_out[i]);
+            self.acc_in[i] += inp[i].saturating_sub(b_in[i]);
+        }
+    }
+}
+
+/// Deterministic value bytes for `(key ring id, version)` — both so the
+/// replay is reproducible and so re-puts actually change the stored
+/// bytes (versions must win, not byte-compares).
+fn value_bytes(kid: u64, version: u64, len: usize) -> Vec<u8> {
+    (kid ^ version.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .to_be_bytes()
+        .iter()
+        .cycle()
+        .take(len)
+        .copied()
+        .collect()
+}
+
+/// Replay `trace` against a real loopback cluster. `fault` enables the
+/// test-only [`NetPeerCfg::fault_drop_replication`] hook on every peer,
+/// which a conforming run must detect as a divergence.
+pub fn replay_net(trace: &Trace, fault: bool) -> Result<ConformanceReport> {
+    trace.validate()?;
+    let cfg = NetPeerCfg {
+        replication: REPLICATION,
+        repair_every: REPAIR_EVERY,
+        fault_drop_replication: fault,
+        ..Default::default()
+    };
+    let mut cluster =
+        Cluster::start_with(trace.peers, cfg.clone(), SPACING).context("cluster start")?;
+    if !cluster.await_convergence(Duration::from_secs(20)) {
+        cluster.shutdown();
+        bail!("cluster of {} peers did not converge within 20s", trace.peers);
+    }
+
+    let mut flows = FlowHarvest::new();
+    for p in &cluster.peers {
+        flows.baseline(p)?;
+    }
+
+    let key_ids = trace.key_ids();
+    let mut versions = vec![0u64; trace.keys];
+    let mut rng = Rng::new(trace.seed ^ 0xC04F);
+    let mut exp = Expectation::new(trace.keys);
+    let mut gets = Vec::new();
+    let mut get_keys = Vec::new();
+
+    for step in &trace.steps {
+        match step.op {
+            TraceOp::Put { key } => {
+                versions[key] += 1;
+                let bytes = value_bytes(key_ids[key], versions[key], trace.value_len);
+                let origin = rng.below(cluster.len() as u64) as usize;
+                let mut done = false;
+                for attempt in 0..WRITE_ATTEMPTS {
+                    if cluster.peers[origin].put(key_ids[key], bytes.clone()).unwrap_or(false) {
+                        done = true;
+                        break;
+                    }
+                    if attempt + 1 < WRITE_ATTEMPTS {
+                        std::thread::sleep(Duration::from_millis(200));
+                    }
+                }
+                if !done {
+                    cluster.shutdown();
+                    bail!("put of key index {key} failed {WRITE_ATTEMPTS} times at t={}", step.t);
+                }
+            }
+            TraceOp::Remove { key } => {
+                let origin = rng.below(cluster.len() as u64) as usize;
+                let mut done = false;
+                for attempt in 0..WRITE_ATTEMPTS {
+                    if cluster.peers[origin].remove(key_ids[key]).unwrap_or(false) {
+                        done = true;
+                        break;
+                    }
+                    if attempt + 1 < WRITE_ATTEMPTS {
+                        std::thread::sleep(Duration::from_millis(200));
+                    }
+                }
+                if !done {
+                    cluster.shutdown();
+                    bail!(
+                        "remove of key index {key} failed {WRITE_ATTEMPTS} times at t={}",
+                        step.t
+                    );
+                }
+            }
+            TraceOp::Get { key } => {
+                let origin = rng.below(cluster.len() as u64) as usize;
+                let hit = cluster.peers[origin].get(key_ids[key]).ok().flatten().is_some();
+                gets.push(hit);
+                get_keys.push(key);
+            }
+            TraceOp::Join => {
+                // no baseline: the joiner's table transfer is charged to
+                // the replay window, like a sim join while recording
+                cluster.join_one(cfg.clone()).context("mid-replay join")?;
+            }
+            TraceOp::Leave { peer } | TraceOp::Fail { peer } => {
+                if peer >= cluster.len() {
+                    cluster.shutdown();
+                    bail!(
+                        "trace step at t={} departs peer index {peer} but only {} peers are live",
+                        step.t,
+                        cluster.len()
+                    );
+                }
+                let handle = cluster.peers.remove(peer);
+                flows.harvest(&handle);
+                if matches!(step.op, TraceOp::Leave { .. }) {
+                    handle.leave();
+                } else {
+                    handle.kill();
+                }
+            }
+            TraceOp::Settle => std::thread::sleep(SETTLE),
+        }
+        exp.apply(step.op);
+    }
+    // match the sim driver's unconditional final settle
+    std::thread::sleep(SETTLE);
+    for p in &cluster.peers {
+        flows.harvest(p);
+    }
+
+    // presence sweep AFTER the harvest: probes are observation, their
+    // traffic must not pollute the compared totals (the sim's probe is
+    // uncharged for the same reason)
+    let mut present = Vec::with_capacity(trace.keys);
+    for &kid in &key_ids {
+        present.push(cluster.peers[0].get(kid).ok().flatten().is_some());
+    }
+    let peers_final = cluster.len();
+    cluster.shutdown();
+
+    Ok(ConformanceReport::assemble(
+        "net",
+        trace,
+        gets,
+        get_keys,
+        present,
+        &exp,
+        flows.acc_out,
+        flows.acc_in,
+        peers_final,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_bytes_deterministic_and_version_sensitive() {
+        let a = value_bytes(42, 1, 16);
+        let b = value_bytes(42, 1, 16);
+        let c = value_bytes(42, 2, 16);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 16);
+    }
+
+    #[test]
+    fn flow_harvest_subtracts_baselines() {
+        let mut h = FlowHarvest::new();
+        h.base.insert(7, ([100, 0, 50, 0], [10, 0, 5, 0]));
+        // simulate a harvest by hand (no live peer needed)
+        let (out, inp) = ([300u64, 20, 70, 0], [30u64, 2, 9, 0]);
+        let (b_out, b_in) = h.base.get(&7).copied().unwrap();
+        for i in 0..4 {
+            h.acc_out[i] += out[i].saturating_sub(b_out[i]);
+            h.acc_in[i] += inp[i].saturating_sub(b_in[i]);
+        }
+        assert_eq!(h.acc_out, [200, 20, 20, 0]);
+        assert_eq!(h.acc_in, [20, 2, 4, 0]);
+    }
+}

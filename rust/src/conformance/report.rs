@@ -1,0 +1,236 @@
+//! The normalized per-runtime replay result (`d1ht.conformance.v1`).
+//!
+//! Each replay driver reduces its runtime-specific state to exactly the
+//! quantities the differ compares: the ordered `Hit`/`Miss` outcome of
+//! every replayed `get`, the final per-key retrievability vector (plus
+//! an FNV-1a digest of it), and the per-class traffic totals accumulated
+//! during the replay window. Peer identities never appear in the
+//! comparison surface — the two runtimes hash different things into
+//! their IDs — only class *totals* do.
+
+use crate::obs::{Json, MsgClass};
+
+use super::trace::{Trace, TraceOp};
+
+/// Schema tag of the report JSON.
+pub const REPORT_SCHEMA: &str = "d1ht.conformance.v1";
+
+/// FNV-1a 64 over a presence vector — the retrievable-key-set digest.
+pub fn presence_digest(present: &[bool]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &p in present {
+        h ^= if p { 1u64 } else { 0u64 };
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Trace-derived ground truth: which keys *should* be retrievable,
+/// step by step. Both drivers run one of these alongside the replay so
+/// availability/durability are computed against the same reference.
+#[derive(Debug, Clone)]
+pub struct Expectation {
+    written: Vec<bool>,
+    /// Per replayed `get`, in order: was the key expected present?
+    pub expected_hits: Vec<bool>,
+}
+
+impl Expectation {
+    pub fn new(keys: usize) -> Expectation {
+        Expectation { written: vec![false; keys], expected_hits: Vec::new() }
+    }
+
+    /// Record one trace step's effect on the expected key-set.
+    pub fn apply(&mut self, op: TraceOp) {
+        match op {
+            TraceOp::Put { key } => self.written[key] = true,
+            TraceOp::Remove { key } => self.written[key] = false,
+            TraceOp::Get { key } => self.expected_hits.push(self.written[key]),
+            _ => {}
+        }
+    }
+
+    /// Final expected presence vector.
+    pub fn expected_present(&self) -> Vec<bool> {
+        self.written.clone()
+    }
+}
+
+/// One runtime's normalized replay result.
+#[derive(Debug, Clone)]
+pub struct ConformanceReport {
+    /// `"sim"` or `"net"`.
+    pub runtime: &'static str,
+    pub trace_name: String,
+    pub seed: u64,
+    /// Live peers when the replay finished.
+    pub peers_final: usize,
+    pub keys: usize,
+    /// One entry per replayed `get`, trace order: `true` = Hit.
+    pub gets: Vec<bool>,
+    /// Key index of each replayed `get` (context for divergence output).
+    pub get_keys: Vec<usize>,
+    /// Final retrievability per key index (the uncharged probe sweep).
+    pub present: Vec<bool>,
+    /// [`presence_digest`] of `present`.
+    pub digest: u64,
+    /// Trace-derived expectation at the end of the replay.
+    pub expected_present: Vec<bool>,
+    /// Hits among gets whose key was expected present (1.0 when no get
+    /// had an expected-present key).
+    pub availability: f64,
+    /// Retrievable keys over expected-present keys (1.0 when nothing
+    /// was expected).
+    pub durability: f64,
+    /// Bits sent per [`MsgClass`] during the replay window,
+    /// `MsgClass::ALL` order.
+    pub class_bits_out: [u64; 4],
+    pub class_bits_in: [u64; 4],
+}
+
+impl ConformanceReport {
+    /// Assemble a report from driver-collected raw vectors, computing
+    /// the derived quantities one way for both runtimes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble(
+        runtime: &'static str,
+        trace: &Trace,
+        gets: Vec<bool>,
+        get_keys: Vec<usize>,
+        present: Vec<bool>,
+        exp: &Expectation,
+        class_bits_out: [u64; 4],
+        class_bits_in: [u64; 4],
+        peers_final: usize,
+    ) -> ConformanceReport {
+        assert_eq!(gets.len(), exp.expected_hits.len(), "one expectation per get");
+        assert_eq!(present.len(), trace.keys);
+        let expected_present = exp.expected_present();
+        let exp_gets = exp.expected_hits.iter().filter(|&&e| e).count();
+        let hit_gets = gets
+            .iter()
+            .zip(&exp.expected_hits)
+            .filter(|&(&g, &e)| e && g)
+            .count();
+        let availability = if exp_gets == 0 { 1.0 } else { hit_gets as f64 / exp_gets as f64 };
+        let exp_keys = expected_present.iter().filter(|&&e| e).count();
+        let live_keys = present
+            .iter()
+            .zip(&expected_present)
+            .filter(|&(&p, &e)| e && p)
+            .count();
+        let durability = if exp_keys == 0 { 1.0 } else { live_keys as f64 / exp_keys as f64 };
+        let digest = presence_digest(&present);
+        ConformanceReport {
+            runtime,
+            trace_name: trace.name.clone(),
+            seed: trace.seed,
+            peers_final,
+            keys: trace.keys,
+            gets,
+            get_keys,
+            present,
+            digest,
+            expected_present,
+            availability,
+            durability,
+            class_bits_out,
+            class_bits_in,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let classes = MsgClass::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                (
+                    c.name().to_string(),
+                    Json::Obj(vec![
+                        ("bits_out".into(), Json::u(self.class_bits_out[i])),
+                        ("bits_in".into(), Json::u(self.class_bits_in[i])),
+                    ]),
+                )
+            })
+            .collect();
+        let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
+        Json::Obj(vec![
+            ("schema".into(), Json::s(REPORT_SCHEMA)),
+            ("runtime".into(), Json::s(self.runtime)),
+            ("trace".into(), Json::s(&self.trace_name)),
+            ("seed".into(), Json::u(self.seed)),
+            ("peers_final".into(), Json::u(self.peers_final as u64)),
+            ("keys".into(), Json::u(self.keys as u64)),
+            ("availability".into(), Json::f(self.availability)),
+            ("durability".into(), Json::f(self.durability)),
+            ("digest".into(), Json::Str(format!("{:016x}", self.digest))),
+            ("gets".into(), bools(&self.gets)),
+            ("present".into(), bools(&self.present)),
+            ("expected_present".into(), bools(&self.expected_present)),
+            ("classes".into(), Json::Obj(classes)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Trace {
+        Trace::generate("tiny", 3, 4, 8, 8)
+    }
+
+    #[test]
+    fn digest_depends_on_every_position() {
+        let a = presence_digest(&[true, false, true]);
+        let b = presence_digest(&[true, false, false]);
+        let c = presence_digest(&[false, false, true]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+        assert_eq!(a, presence_digest(&[true, false, true]), "stable");
+    }
+
+    #[test]
+    fn expectation_tracks_writes_and_removes() {
+        let mut e = Expectation::new(4);
+        e.apply(TraceOp::Get { key: 0 }); // before any write
+        e.apply(TraceOp::Put { key: 0 });
+        e.apply(TraceOp::Get { key: 0 });
+        e.apply(TraceOp::Remove { key: 0 });
+        e.apply(TraceOp::Get { key: 0 });
+        assert_eq!(e.expected_hits, vec![false, true, false]);
+        assert_eq!(e.expected_present(), vec![false, false, false, false]);
+    }
+
+    #[test]
+    fn assemble_computes_availability_and_durability() {
+        let trace = tiny_trace();
+        let mut exp = Expectation::new(trace.keys);
+        exp.apply(TraceOp::Put { key: 0 });
+        exp.apply(TraceOp::Put { key: 1 });
+        exp.apply(TraceOp::Get { key: 0 });
+        exp.apply(TraceOp::Get { key: 1 });
+        exp.apply(TraceOp::Get { key: 2 }); // never written
+        let gets = vec![true, false, false]; // key 1 went missing
+        let mut present = vec![false; trace.keys];
+        present[0] = true;
+        let rep = ConformanceReport::assemble(
+            "sim",
+            &trace,
+            gets,
+            vec![0, 1, 2],
+            present,
+            &exp,
+            [0; 4],
+            [0; 4],
+            4,
+        );
+        assert!((rep.availability - 0.5).abs() < 1e-12, "1 of 2 expected hits");
+        assert!((rep.durability - 0.5).abs() < 1e-12, "1 of 2 expected keys");
+        let doc = Json::parse(&rep.to_json().render()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(REPORT_SCHEMA));
+        assert_eq!(doc.get("runtime").unwrap().as_str(), Some("sim"));
+        assert_eq!(doc.get("gets").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,392 @@
+//! The recorded-workload format (`d1ht.trace.v1`).
+//!
+//! A [`Trace`] is a seeded, validated sequence of membership and store
+//! operations with logical timestamps — the *one* workload description
+//! both replay drivers ([`super::sim`], [`super::net`]) execute. Keys
+//! are abstract indices `0..keys`; both runtimes map index `i` to the
+//! same ring ID via [`crate::id::space::key_id`] over the store layer's
+//! canonical `store-key-{i}` label, so placement (owner + replica set)
+//! agrees across runtimes by construction. `leave`/`fail` steps name a
+//! peer by *roster index* — position in the runtime's current member
+//! list (ring order for the sim, spawn order for the socket cluster) —
+//! never by identity: peer IDs are runtime-specific (label hash vs.
+//! address hash) and deliberately not compared.
+//!
+//! Validation enforces the quiescence discipline the differ's exactness
+//! guarantees rest on: every membership step (`join`/`leave`/`fail`) is
+//! immediately followed by a `settle`, roster index 0 (the founding /
+//! bootstrap peer) is never removable, and the live population never
+//! drops below 3 (the replication factor).
+
+use crate::anyhow::{bail, Result};
+use crate::id::space;
+use crate::obs::Json;
+use crate::util::rng::Rng;
+
+/// Schema tag written into every trace file.
+pub const TRACE_SCHEMA: &str = "d1ht.trace.v1";
+
+/// One replayable operation. `peer` is a roster index (see module docs);
+/// `key` is an index into the trace's key population.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// One new peer joins through the founding peer.
+    Join,
+    /// Roster index `peer` departs gracefully (flushes state out).
+    Leave { peer: usize },
+    /// Roster index `peer` fails abruptly (SIGKILL half of §VII-A).
+    Fail { peer: usize },
+    /// Write key `key` (value bytes are derived deterministically from
+    /// the key's ring ID and per-key version by each driver).
+    Put { key: usize },
+    /// Read key `key`; the Hit/Miss outcome is diffed exactly.
+    Get { key: usize },
+    /// Tombstone-delete key `key`.
+    Remove { key: usize },
+    /// Quiesce: virtual settle window in the sim, wall-clock sleep in
+    /// the socket runtime — long enough for dissemination + one full
+    /// anti-entropy pass in both.
+    Settle,
+}
+
+impl TraceOp {
+    fn name(&self) -> &'static str {
+        match self {
+            TraceOp::Join => "join",
+            TraceOp::Leave { .. } => "leave",
+            TraceOp::Fail { .. } => "fail",
+            TraceOp::Put { .. } => "put",
+            TraceOp::Get { .. } => "get",
+            TraceOp::Remove { .. } => "remove",
+            TraceOp::Settle => "settle",
+        }
+    }
+}
+
+/// One step: a logical timestamp (non-decreasing, informational) and an
+/// operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceStep {
+    pub t: u64,
+    pub op: TraceOp,
+}
+
+/// A full recorded workload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    pub name: String,
+    pub seed: u64,
+    /// Initial cluster size (before any `join`/`leave`/`fail`).
+    pub peers: usize,
+    /// Key population size; `put`/`get`/`remove` index into it.
+    pub keys: usize,
+    /// Value payload length in bytes (the sim charges `value_len * 8`
+    /// bits; the socket runtime stores that many real bytes).
+    pub value_len: usize,
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    /// Ring ID of key index `i` — identical in both runtimes because it
+    /// matches [`crate::store::StoreLayer`]'s canonical key labels.
+    pub fn key_id(&self, i: usize) -> u64 {
+        space::key_id(format!("store-key-{i}").as_bytes()).0
+    }
+
+    /// All key ring IDs, index order.
+    pub fn key_ids(&self) -> Vec<u64> {
+        (0..self.keys).map(|i| self.key_id(i)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| {
+                let mut m = vec![
+                    ("t".to_string(), Json::u(s.t)),
+                    ("op".to_string(), Json::s(s.op.name())),
+                ];
+                match s.op {
+                    TraceOp::Leave { peer } | TraceOp::Fail { peer } => {
+                        m.push(("peer".to_string(), Json::u(peer as u64)));
+                    }
+                    TraceOp::Put { key } | TraceOp::Get { key } | TraceOp::Remove { key } => {
+                        m.push(("key".to_string(), Json::u(key as u64)));
+                    }
+                    TraceOp::Join | TraceOp::Settle => {}
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::s(TRACE_SCHEMA)),
+            ("name".into(), Json::s(&self.name)),
+            ("seed".into(), Json::u(self.seed)),
+            ("peers".into(), Json::u(self.peers as u64)),
+            ("keys".into(), Json::u(self.keys as u64)),
+            ("value_len".into(), Json::u(self.value_len as u64)),
+            ("steps".into(), Json::Arr(steps)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Trace> {
+        let schema = doc.get("schema").and_then(|j| j.as_str()).unwrap_or("");
+        if schema != TRACE_SCHEMA {
+            bail!("trace schema '{schema}' (expected '{TRACE_SCHEMA}')");
+        }
+        let req_u = |name: &str| -> Result<u64> {
+            match doc.get(name).and_then(|j| j.as_i64()) {
+                Some(v) if v >= 0 => Ok(v as u64),
+                _ => bail!("trace field '{name}' missing or not a non-negative integer"),
+            }
+        };
+        let name = doc
+            .get("name")
+            .and_then(|j| j.as_str())
+            .unwrap_or("unnamed")
+            .to_string();
+        let seed = req_u("seed")?;
+        let peers = req_u("peers")? as usize;
+        let keys = req_u("keys")? as usize;
+        let value_len = req_u("value_len")? as usize;
+        let Some(raw_steps) = doc.get("steps").and_then(|j| j.as_arr()) else {
+            bail!("trace field 'steps' missing or not an array");
+        };
+        let mut steps = Vec::with_capacity(raw_steps.len());
+        for (i, s) in raw_steps.iter().enumerate() {
+            let t = match s.get("t").and_then(|j| j.as_i64()) {
+                Some(v) if v >= 0 => v as u64,
+                _ => bail!("step {i}: 't' missing or negative"),
+            };
+            let opname = s.get("op").and_then(|j| j.as_str()).unwrap_or("");
+            let field = |f: &str| -> Result<usize> {
+                match s.get(f).and_then(|j| j.as_i64()) {
+                    Some(v) if v >= 0 => Ok(v as usize),
+                    _ => bail!("step {i} ({opname}): '{f}' missing or negative"),
+                }
+            };
+            let op = match opname {
+                "join" => TraceOp::Join,
+                "settle" => TraceOp::Settle,
+                "leave" => TraceOp::Leave { peer: field("peer")? },
+                "fail" => TraceOp::Fail { peer: field("peer")? },
+                "put" => TraceOp::Put { key: field("key")? },
+                "get" => TraceOp::Get { key: field("key")? },
+                "remove" => TraceOp::Remove { key: field("key")? },
+                other => bail!("step {i}: unknown op '{other}'"),
+            };
+            steps.push(TraceStep { t, op });
+        }
+        Ok(Trace { name, seed, peers, keys, value_len, steps })
+    }
+
+    /// Parse and validate a rendered trace.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let doc = Json::parse(text).map_err(crate::anyhow::Error::msg)?;
+        let trace = Trace::from_json(&doc)?;
+        trace.validate()?;
+        Ok(trace)
+    }
+
+    /// Structural validation — see the module docs for the discipline
+    /// each rule protects.
+    pub fn validate(&self) -> Result<()> {
+        if self.peers < 3 {
+            bail!("trace needs >= 3 initial peers (replication factor), has {}", self.peers);
+        }
+        if self.keys == 0 {
+            bail!("trace needs a non-empty key population");
+        }
+        if self.value_len == 0 || self.value_len > 1 << 20 {
+            bail!("trace value_len {} out of (0, 1MiB]", self.value_len);
+        }
+        let mut live = self.peers;
+        let mut last_t = 0u64;
+        for (i, step) in self.steps.iter().enumerate() {
+            if step.t < last_t {
+                bail!("step {i}: timestamp {} decreases (prev {last_t})", step.t);
+            }
+            last_t = step.t;
+            let needs_settle = matches!(
+                step.op,
+                TraceOp::Join | TraceOp::Leave { .. } | TraceOp::Fail { .. }
+            );
+            if needs_settle {
+                let next = self.steps.get(i + 1).map(|s| s.op);
+                if next != Some(TraceOp::Settle) {
+                    bail!(
+                        "step {i} ({}): every membership step must be followed \
+                         immediately by a settle",
+                        step.op.name()
+                    );
+                }
+            }
+            match step.op {
+                TraceOp::Join => live += 1,
+                TraceOp::Leave { peer } | TraceOp::Fail { peer } => {
+                    if peer == 0 {
+                        bail!(
+                            "step {i}: roster index 0 is the founding/bootstrap \
+                             peer and cannot depart"
+                        );
+                    }
+                    if peer >= live {
+                        bail!("step {i}: roster index {peer} >= live population {live}");
+                    }
+                    if live - 1 < 3 {
+                        bail!("step {i}: departure would drop the population below 3");
+                    }
+                    live -= 1;
+                }
+                TraceOp::Put { key } | TraceOp::Get { key } | TraceOp::Remove { key } => {
+                    if key >= self.keys {
+                        bail!("step {i}: key index {key} >= population {}", self.keys);
+                    }
+                }
+                TraceOp::Settle => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministically generate a churn-and-skewed-reads workload —
+    /// the `d1ht conform --record` path and the shape of the golden
+    /// `churn_zipf` trace. Same arguments, same trace, always.
+    pub fn generate(name: &str, seed: u64, peers: usize, keys: usize, value_len: usize) -> Trace {
+        assert!(peers >= 4 && keys >= 8);
+        let mut rng = Rng::new(seed ^ 0x7ACE_0001);
+        // quadratic skew toward low indices: a cheap Zipf-flavored
+        // popularity curve that needs no table
+        let hot = |rng: &mut Rng| -> usize {
+            let u = rng.next_f64();
+            (((u * u) * keys as f64) as usize).min(keys - 1)
+        };
+        let mut live = peers;
+        let mut t = 0u64;
+        let mut steps = Vec::new();
+        let push = |steps: &mut Vec<TraceStep>, t: u64, op: TraceOp| {
+            steps.push(TraceStep { t, op });
+        };
+        // 1. write the whole population
+        for k in 0..keys {
+            push(&mut steps, t, TraceOp::Put { key: k });
+        }
+        t += 1;
+        push(&mut steps, t, TraceOp::Settle);
+        // 2. skewed read burst
+        for _ in 0..(2 * keys) {
+            push(&mut steps, t, TraceOp::Get { key: hot(&mut rng) });
+        }
+        // 3. one join
+        t += 1;
+        push(&mut steps, t, TraceOp::Join);
+        push(&mut steps, t, TraceOp::Settle);
+        live += 1;
+        // 4. mixed ops
+        for _ in 0..keys {
+            let k = hot(&mut rng);
+            if rng.chance(0.25) {
+                push(&mut steps, t, TraceOp::Put { key: k });
+            } else {
+                push(&mut steps, t, TraceOp::Get { key: k });
+            }
+        }
+        // 5. one abrupt failure
+        t += 1;
+        let victim = 1 + (rng.below((live - 1) as u64) as usize);
+        push(&mut steps, t, TraceOp::Fail { peer: victim });
+        push(&mut steps, t, TraceOp::Settle);
+        live -= 1;
+        // 6. full read sweep (durability check against the failure)
+        for k in 0..keys {
+            push(&mut steps, t, TraceOp::Get { key: k });
+        }
+        // 7. one graceful leave
+        t += 1;
+        let victim = 1 + (rng.below((live - 1) as u64) as usize);
+        push(&mut steps, t, TraceOp::Leave { peer: victim });
+        push(&mut steps, t, TraceOp::Settle);
+        // 8. a few deletes, then the final full sweep
+        t += 1;
+        for k in 0..(keys / 8).max(1) {
+            push(&mut steps, t, TraceOp::Remove { key: k });
+        }
+        for k in 0..keys {
+            push(&mut steps, t, TraceOp::Get { key: k });
+        }
+        push(&mut steps, t, TraceOp::Settle);
+        let trace = Trace {
+            name: name.to_string(),
+            seed,
+            peers,
+            keys,
+            value_len,
+            steps,
+        };
+        trace.validate().expect("generated trace must validate");
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_render_parse() {
+        let t = Trace::generate("rt", 7, 5, 16, 8);
+        let text = t.render();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(t, back, "render/parse is lossless");
+        assert_eq!(back.render(), text, "re-render is byte-stable");
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = Trace::generate("g", 42, 6, 32, 16);
+        let b = Trace::generate("g", 42, 6, 32, 16);
+        assert_eq!(a, b);
+        let c = Trace::generate("g", 43, 6, 32, 16);
+        assert_ne!(a.render(), c.render(), "seed changes the workload");
+    }
+
+    #[test]
+    fn key_ids_match_store_layer_labels() {
+        let t = Trace::generate("k", 1, 4, 8, 8);
+        // the store layer derives record IDs from the same labels
+        assert_eq!(t.key_id(3), space::key_id(b"store-key-3").0);
+        assert_eq!(t.key_ids().len(), 8);
+    }
+
+    #[test]
+    fn validation_rejects_broken_traces() {
+        let mut t = Trace::generate("v", 1, 5, 16, 8);
+        t.peers = 2;
+        assert!(t.validate().is_err(), "too few peers");
+        let mut t = Trace::generate("v", 1, 5, 16, 8);
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Fail { peer: 0 } });
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Settle });
+        assert!(t.validate().is_err(), "index 0 not removable");
+        let mut t = Trace::generate("v", 1, 5, 16, 8);
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Join });
+        assert!(t.validate().is_err(), "membership step without settle");
+        let mut t = Trace::generate("v", 1, 5, 16, 8);
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Get { key: 16 } });
+        assert!(t.validate().is_err(), "key index out of range");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::parse("not json").is_err());
+        assert!(Trace::parse("{\"schema\":\"wrong.v9\"}").is_err());
+        assert!(
+            Trace::parse("{\"schema\":\"d1ht.trace.v1\",\"seed\":1}").is_err(),
+            "missing fields rejected"
+        );
+    }
+}

@@ -222,6 +222,13 @@ impl D1htSim {
         &self.truth
     }
 
+    /// Current ground-truth membership, ascending by ring ID — the
+    /// stable roster the conformance replay indexes `leave`/`fail`
+    /// steps against.
+    pub fn live_ids(&self) -> Vec<Id> {
+        self.truth.ids().to_vec()
+    }
+
     /// Bootstrap `n` peers instantly with consistent tables (tests and
     /// latency experiments start from steady state, as after a long
     /// quiet period).
@@ -382,6 +389,24 @@ impl D1htSim {
         let repair = layer.cfg.repair_interval;
         self.store = Some(layer);
         q.after(0.0, Ev::StoreTick);
+        q.after(repair, Ev::StoreRepair);
+    }
+
+    /// Attach the storage layer for trace replay ([`crate::conformance`]):
+    /// no preload (keys begin unwritten, version 0, exactly like the
+    /// socket runtime's empty `KvStore`) and no autonomous workload tick
+    /// — only replayed operations mutate records. Anti-entropy still
+    /// runs so churned replicas are re-created, mirroring the socket
+    /// runtime's `repair_tick`.
+    pub fn enable_store_passive(&mut self, cfg: StoreCfg, q: &mut Queue<Ev>) {
+        assert!(
+            cfg.repair_interval < REJOIN_DELAY_SECS,
+            "repair interval must undercut the churn rejoin delay so holder \
+             liveness stays exact between anti-entropy passes"
+        );
+        let layer = StoreLayer::new(cfg, self.rng.fork(0x570E));
+        let repair = layer.cfg.repair_interval;
+        self.store = Some(layer);
         q.after(repair, Ev::StoreRepair);
     }
 
@@ -867,10 +892,23 @@ impl D1htSim {
     }
 
     fn session_end(&mut self, id: Id, q: &mut Queue<Ev>) {
+        if !self.peers.contains_key(&id) {
+            return;
+        }
+        let style = self.cfg.churn.sample_leave_style(&mut self.rng);
+        self.depart(id, style, q);
+    }
+
+    /// Remove `id` from the overlay with an explicit leave style — the
+    /// deterministic entry point trace replay uses ([`crate::conformance`]):
+    /// a recorded `leave`/`fail` step must not consume the churn RNG the
+    /// way [`Self::session_end`]'s style sampling does. Graceful leavers
+    /// flush buffered events to the successor; failures lose them
+    /// (§VII-A's two halves).
+    pub fn depart(&mut self, id: Id, style: LeaveStyle, q: &mut Queue<Ev>) {
         let now = q.now();
         let Some(mut peer) = self.peers.remove(&id) else { return };
         self.truth.remove(id);
-        let style = self.cfg.churn.sample_leave_style(&mut self.rng);
         let n = self.truth.len().max(2);
         let succ_id = peer.table.successor_excl(id).filter(|s| self.truth.contains(*s));
         match style {
@@ -1218,6 +1256,47 @@ mod tests {
         // bands, not exact values (seconds scale, not ns or hours)
         assert!(prop.p50() > 1e6, "p50 {} ns", prop.p50());
         assert!(prop.p999() < 3600.0 * 1e9, "p999 {} ns", prop.p999());
+    }
+
+    #[test]
+    fn explicit_depart_removes_peer_and_propagates() {
+        // the conformance replay path: depart with a declared style must
+        // not touch the churn RNG and must still propagate via EDRA
+        let (mut sim, mut q) = quiet_world(32);
+        run_until(&mut sim, &mut q, 10.0);
+        let failed = sim.live_ids()[5];
+        sim.depart(failed, LeaveStyle::Failure, &mut q);
+        let left = sim.live_ids()[11];
+        sim.depart(left, LeaveStyle::Graceful, &mut q);
+        assert_eq!(sim.size(), 30);
+        assert!(!sim.truth.contains(failed) && !sim.truth.contains(left));
+        run_until(&mut sim, &mut q, 900.0);
+        let stale = sim
+            .peers
+            .values()
+            .filter(|p| p.table.staleness_vs(&sim.truth) > 0.0)
+            .count();
+        assert_eq!(stale, 0, "both departures propagated to every table");
+    }
+
+    #[test]
+    fn passive_store_starts_empty_and_repairs() {
+        let (mut sim, mut q) = quiet_world(16);
+        sim.enable_store_passive(
+            StoreCfg { keys: 20, repair_interval: 30.0, ..Default::default() },
+            &mut q,
+        );
+        run_until(&mut sim, &mut q, 100.0);
+        let m = sim.metrics();
+        assert_eq!(m.store.puts + m.store.gets_total(), 0, "no autonomous workload");
+        let (total, _) = sim.store_retrievable();
+        assert_eq!(total, 0, "nothing written yet");
+        let truth = sim.truth.clone();
+        let store = sim.store_mut().unwrap();
+        store.op_put(&truth, 3);
+        assert!(store.probe(&truth, 3));
+        let (total, alive) = sim.store_retrievable();
+        assert_eq!((total, alive), (1, 1));
     }
 
     #[test]

@@ -90,11 +90,7 @@ mod tests {
 
     #[test]
     fn artifact_series_matches_native() {
-        if !crate::runtime::artifacts_available() {
-            crate::obs::trace::diag(
-                "test_skip",
-                &[("test", "artifact_series_matches_native"), ("hint", "run `make artifacts` first")],
-            );
+        if crate::runtime::skip_unless_artifacts("artifact_series_matches_native") {
             return;
         }
         let nat = run(174.0, false).unwrap();

@@ -25,6 +25,10 @@
 //!   attribution, structured tracing with pluggable sinks, and the
 //!   machine-readable bench trajectory (`BENCH_*.json`). Catalog and
 //!   paper-figure mapping in `docs/OBSERVABILITY.md`.
+//! * [`conformance`] — the sim/net conformance harness: one recorded
+//!   workload trace (`d1ht.trace.v1`) replayed through both runtimes,
+//!   with a machine-checked diff of retrievability, get outcomes, and
+//!   per-class traffic (`docs/CONFORMANCE.md`).
 //! * [`anyhow`] — vendored minimal `anyhow` stand-in (offline build).
 //!
 //! Layering: python (JAX + Pallas) runs only at build time (`make
@@ -78,6 +82,7 @@ pub mod analysis;
 pub mod anyhow;
 pub mod cli;
 pub mod config;
+pub mod conformance;
 pub mod coordinator;
 pub mod dht;
 pub mod edra;

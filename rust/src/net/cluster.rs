@@ -77,20 +77,35 @@ impl Cluster {
     }
 
     pub fn start_paced(n: usize, f: f64, spacing: Duration) -> Result<Cluster> {
+        let cfg = NetPeerCfg { f, ..Default::default() };
+        Self::start_with(n, cfg, spacing)
+    }
+
+    /// Like [`Cluster::start_paced`] but every peer is spawned from the
+    /// caller's `cfg` (replication factor, repair period, fault hooks…).
+    /// `cfg.bootstrap` is overwritten: `None` for the founding peer, the
+    /// founder's address for everyone else.
+    pub fn start_with(n: usize, cfg: NetPeerCfg, spacing: Duration) -> Result<Cluster> {
         assert!(n >= 1);
         let mut peers = Vec::with_capacity(n);
-        let boot = spawn(NetPeerCfg { f, ..Default::default() })?;
+        let boot = spawn(NetPeerCfg { bootstrap: None, ..cfg.clone() })?;
         let boot_addr = boot.addr;
         peers.push(boot);
         for _ in 1..n {
             std::thread::sleep(spacing);
-            peers.push(spawn(NetPeerCfg {
-                f,
-                bootstrap: Some(boot_addr),
-                ..Default::default()
-            })?);
+            peers.push(spawn(NetPeerCfg { bootstrap: Some(boot_addr), ..cfg.clone() })?);
         }
         Ok(Cluster { peers })
+    }
+
+    /// Add one peer joining through the founding peer (`peers[0]`),
+    /// spawned from `cfg` (bootstrap overwritten). The conformance
+    /// replay's `join` step.
+    pub fn join_one(&mut self, cfg: NetPeerCfg) -> Result<()> {
+        assert!(!self.peers.is_empty(), "cannot join an empty cluster");
+        let boot_addr = self.peers[0].addr;
+        self.peers.push(spawn(NetPeerCfg { bootstrap: Some(boot_addr), ..cfg })?);
+        Ok(())
     }
 
     pub fn len(&self) -> usize {

@@ -52,6 +52,14 @@ pub struct NetPeerCfg {
     /// disables the timer entirely; with the global sink at its `Null`
     /// default an enabled timer is still nearly free.
     pub snapshot_every: Option<Duration>,
+    /// **Test-only fault hook.** When set, this peer silently drops every
+    /// outbound `Replicate` push — both write replication and the
+    /// anti-entropy re-push — so a key it owns exists in exactly one
+    /// copy. Used by the conformance harness to prove the differ catches
+    /// real replication bugs (killing the owner then loses the key in the
+    /// net runtime while the sim still retrieves it). Never set this
+    /// outside tests.
+    pub fault_drop_replication: bool,
 }
 
 impl Default for NetPeerCfg {
@@ -65,6 +73,7 @@ impl Default for NetPeerCfg {
             transport: TransportTuning::default(),
             bulk: BulkTuning::default(),
             snapshot_every: None,
+            fault_drop_replication: false,
         }
     }
 }
@@ -248,6 +257,8 @@ struct PeerState {
     bulk_started: BTreeMap<u64, Instant>,
     bulk_send_ns: Hist,
     last_snapshot: Instant,
+    /// Mirrors [`NetPeerCfg::fault_drop_replication`] (test-only).
+    fault_drop_replication: bool,
 }
 
 /// How long an admitting successor keeps directly forwarding events to a
@@ -336,24 +347,26 @@ impl PeerState {
         bytes: &[u8],
     ) {
         let set = replica_set(&self.table, kid, self.replication);
-        for rid in &set {
-            if *rid == self.me {
-                continue;
-            }
-            if let Some(&a) = self.members.get(rid) {
-                let seq = tr.fresh_seq();
-                tr.send(
-                    a,
-                    &NetMsg::Replicate {
-                        seq,
-                        key: kid.0,
-                        version,
-                        tombstone,
-                        value: bytes.to_vec(),
-                    },
-                )
-                .ok();
-                self.store_repl_sent += 1;
+        if !self.fault_drop_replication {
+            for rid in &set {
+                if *rid == self.me {
+                    continue;
+                }
+                if let Some(&a) = self.members.get(rid) {
+                    let seq = tr.fresh_seq();
+                    tr.send(
+                        a,
+                        &NetMsg::Replicate {
+                            seq,
+                            key: kid.0,
+                            version,
+                            tombstone,
+                            value: bytes.to_vec(),
+                        },
+                    )
+                    .ok();
+                    self.store_repl_sent += 1;
+                }
             }
         }
         self.repair_sets.insert(kid, set);
@@ -398,24 +411,26 @@ impl PeerState {
                     let v = self.kv.get(kid).expect("key just listed");
                     (v.version, v.tombstone, v.bytes.clone())
                 };
-                for rid in &set {
-                    if *rid == self.me {
-                        continue;
-                    }
-                    if let Some(&a) = self.members.get(rid) {
-                        let seq = tr.fresh_seq();
-                        tr.send(
-                            a,
-                            &NetMsg::Replicate {
-                                seq,
-                                key: kid.0,
-                                version,
-                                tombstone,
-                                value: bytes.clone(),
-                            },
-                        )
-                        .ok();
-                        self.store_repl_sent += 1;
+                if !self.fault_drop_replication {
+                    for rid in &set {
+                        if *rid == self.me {
+                            continue;
+                        }
+                        if let Some(&a) = self.members.get(rid) {
+                            let seq = tr.fresh_seq();
+                            tr.send(
+                                a,
+                                &NetMsg::Replicate {
+                                    seq,
+                                    key: kid.0,
+                                    version,
+                                    tombstone,
+                                    value: bytes.clone(),
+                                },
+                            )
+                            .ok();
+                            self.store_repl_sent += 1;
+                        }
                     }
                 }
                 self.repair_sets.insert(kid, set);
@@ -538,6 +553,7 @@ fn run_peer(
         bulk_started: BTreeMap::new(),
         bulk_send_ns: Hist::default(),
         last_snapshot: Instant::now(),
+        fault_drop_replication: cfg.fault_drop_replication,
     };
     let mut bulk = BulkEndpoint::new(cfg.bulk);
 

@@ -199,6 +199,37 @@ pub fn diag(kind: &'static str, fields: &[(&'static str, &str)]) {
     eprintln!("{}", ev.jsonl());
 }
 
+// ---- test-skip registry ----
+
+/// One recorded test skip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Skip {
+    pub test: &'static str,
+    pub hint: &'static str,
+}
+
+fn skip_registry() -> &'static Mutex<Vec<Skip>> {
+    static S: OnceLock<Mutex<Vec<Skip>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Record a test skip: emit the `test_skip` diag line AND remember it,
+/// so [`recorded_skips`] can audit that no skip fired while its
+/// precondition actually held. Skips must go through a guard that
+/// checks the precondition itself (e.g.
+/// `crate::runtime::skip_unless_artifacts`), never be recorded ad hoc.
+pub fn record_skip(test: &'static str, hint: &'static str) {
+    diag("test_skip", &[("test", test), ("hint", hint)]);
+    if let Ok(mut s) = skip_registry().lock() {
+        s.push(Skip { test, hint });
+    }
+}
+
+/// Every skip recorded in this process, in order.
+pub fn recorded_skips() -> Vec<Skip> {
+    skip_registry().lock().map(|s| s.clone()).unwrap_or_default()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -60,11 +60,7 @@ mod tests {
 
     #[test]
     fn artifact_matches_native_models() {
-        if !crate::runtime::artifacts_available() {
-            crate::obs::trace::diag(
-                "test_skip",
-                &[("test", "artifact_matches_native_models"), ("hint", "run `make artifacts` first")],
-            );
+        if crate::runtime::skip_unless_artifacts("artifact_matches_native_models") {
             return;
         }
         let grid = AnalyticsGrid::load().expect("load analytics artifact");
@@ -96,11 +92,7 @@ mod tests {
 
     #[test]
     fn oversized_grid_rejected() {
-        if !crate::runtime::artifacts_available() {
-            crate::obs::trace::diag(
-                "test_skip",
-                &[("test", "oversized_grid_rejected"), ("hint", "run `make artifacts` first")],
-            );
+        if crate::runtime::skip_unless_artifacts("oversized_grid_rejected") {
             return;
         }
         let grid = AnalyticsGrid::load().expect("load");

@@ -150,11 +150,7 @@ mod tests {
 
     #[test]
     fn xla_artifact_matches_native() {
-        if !crate::runtime::artifacts_available() {
-            crate::obs::trace::diag(
-                "test_skip",
-                &[("test", "xla_artifact_matches_native"), ("hint", "run `make artifacts` first")],
-            );
+        if crate::runtime::skip_unless_artifacts("xla_artifact_matches_native") {
             return;
         }
         let exe = BatchLookup::load().expect("load artifact");
@@ -171,11 +167,7 @@ mod tests {
 
     #[test]
     fn xla_partial_batch() {
-        if !crate::runtime::artifacts_available() {
-            crate::obs::trace::diag(
-                "test_skip",
-                &[("test", "xla_partial_batch"), ("hint", "run `make artifacts` first")],
-            );
+        if crate::runtime::skip_unless_artifacts("xla_partial_batch") {
             return;
         }
         let exe = BatchLookup::load().expect("load");

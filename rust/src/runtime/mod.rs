@@ -36,3 +36,45 @@ pub fn artifacts_available() -> bool {
         && artifacts_dir().join("ring_lookup.hlo.txt").exists()
         && artifacts_dir().join("analytics.hlo.txt").exists()
 }
+
+/// Test guard fusing the precondition check with the skip record: a
+/// test that needs the AOT artifacts opens with
+/// `if skip_unless_artifacts("name") { return; }`. Because the check
+/// and the skip are one call, a skip structurally cannot fire while the
+/// artifacts are available — and every skip lands in the
+/// [`crate::obs::trace::recorded_skips`] registry, which the audit test
+/// below holds against the precondition.
+pub fn skip_unless_artifacts(test: &'static str) -> bool {
+    if artifacts_available() {
+        return false;
+    }
+    crate::obs::trace::record_skip(test, "run `make artifacts` first");
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The skip-audit gate: counts recorded skips and fails if one
+    /// fired while its precondition held. With artifacts present the
+    /// registry must stay empty (every guarded test actually ran);
+    /// without them the probe skip must be on record.
+    #[test]
+    fn skips_never_fire_with_artifacts_available() {
+        let skipped = skip_unless_artifacts("skip_registry_probe");
+        assert_eq!(skipped, !artifacts_available(), "guard mirrors the precondition");
+        let skips = crate::obs::trace::recorded_skips();
+        if artifacts_available() {
+            assert!(
+                skips.is_empty(),
+                "tests skipped while artifacts are available: {skips:?}"
+            );
+        } else {
+            assert!(
+                skips.iter().any(|s| s.test == "skip_registry_probe"),
+                "probe skip was not recorded"
+            );
+        }
+    }
+}

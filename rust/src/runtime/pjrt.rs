@@ -38,18 +38,11 @@ impl Compiled {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{artifacts_available, artifacts_dir};
+    use crate::runtime::artifacts_dir;
 
     #[test]
     fn loads_and_runs_ring_lookup_artifact() {
-        if !artifacts_available() {
-            crate::obs::trace::diag(
-                "test_skip",
-                &[
-                    ("test", "loads_and_runs_ring_lookup_artifact"),
-                    ("hint", "run `make artifacts` first"),
-                ],
-            );
+        if crate::runtime::skip_unless_artifacts("loads_and_runs_ring_lookup_artifact") {
             return;
         }
         let c = Compiled::load(&artifacts_dir().join("ring_lookup.hlo.txt")).expect("load");

@@ -83,6 +83,19 @@ struct KeyRecord {
     deleted: bool,
 }
 
+/// Normalized result of a single read, as the conformance harness
+/// compares it across runtimes: `Hit` means the value (or, for the
+/// replay drivers, *a* retrievable copy) was served; `Miss` means the
+/// key is absent — never written, tombstoned, or lost. The degraded
+/// one-extra-hop read folds into `Hit`: the harness compares *what* was
+/// retrievable, not how many hops it cost (hop counts live in the
+/// traffic flows, which are band-compared).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GetOutcome {
+    Hit,
+    Miss,
+}
+
 #[derive(Debug, Clone)]
 pub struct StoreLayer {
     pub cfg: StoreCfg,
@@ -173,6 +186,32 @@ impl StoreLayer {
         }
     }
 
+    /// Replay a write against key index `idx` (conformance driver entry
+    /// point; same charging as a workload put).
+    pub fn op_put(&mut self, truth: &Table, idx: usize) {
+        self.put(truth, idx);
+    }
+
+    /// Replay a delete against key index `idx`.
+    pub fn op_remove(&mut self, truth: &Table, idx: usize) {
+        self.remove(truth, idx);
+    }
+
+    /// Replay a read against key index `idx`, returning the normalized
+    /// outcome the conformance differ compares exactly across runtimes.
+    pub fn op_get(&mut self, truth: &Table, idx: usize) -> GetOutcome {
+        self.get(truth, idx)
+    }
+
+    /// Uncharged presence probe for the final conformance sweep: is key
+    /// `idx` currently retrievable (written, not tombstoned, and held by
+    /// at least one live peer)? Runs after the traffic window closes, so
+    /// it must not perturb counters or flows.
+    pub fn probe(&self, truth: &Table, idx: usize) -> bool {
+        let rec = &self.records[idx];
+        rec.version > 0 && !rec.deleted && rec.holders.iter().any(|h| truth.contains(*h))
+    }
+
     /// A rewrite: the client sends the value to the key's owner, which
     /// pushes copies to the other R−1 replicas.
     fn put(&mut self, truth: &Table, idx: usize) {
@@ -247,11 +286,14 @@ impl StoreLayer {
     /// the owner does not hold the value (fresh owner after churn).
     /// Reads of a deleted key are answered by the tombstone (carrying no
     /// value payload).
-    fn get(&mut self, truth: &Table, idx: usize) {
+    fn get(&mut self, truth: &Table, idx: usize) -> GetOutcome {
         let rec = &self.records[idx];
-        let vb = if rec.deleted { 0 } else { self.cfg.value_bits };
+        // a tombstone answers authoritatively, but what it serves is
+        // absence; a never-written key (version 0) can only miss
+        let absent = rec.deleted || rec.version == 0;
+        let vb = if absent { 0 } else { self.cfg.value_bits };
         let Some(owner) = truth.successor(rec.id) else {
-            return;
+            return GetOutcome::Miss;
         };
         let get_bits = bits(MessageBody::Get { key: rec.id });
         let hit_bits = bits(MessageBody::GetResp { key: rec.id, found: true, value_bits: vb });
@@ -264,6 +306,7 @@ impl StoreLayer {
             self.counters.gets_one_hop += 1;
             charge(&mut self.counters.traffic, hit_bits);
             self.obs.charge_out(owner.0, MsgClass::Store, hit_bits);
+            if absent { GetOutcome::Miss } else { GetOutcome::Hit }
         } else if let Some(replica) = rec.holders.iter().copied().find(|h| holds(h)) {
             // miss at the owner, one extra hop to a surviving replica
             self.counters.gets_degraded += 1;
@@ -273,10 +316,12 @@ impl StoreLayer {
             self.obs.charge_out(owner.0, MsgClass::Store, miss_bits);
             self.obs.charge_in(replica.0, MsgClass::Store, get_bits);
             self.obs.charge_out(replica.0, MsgClass::Store, hit_bits);
+            if absent { GetOutcome::Miss } else { GetOutcome::Hit }
         } else {
             self.counters.gets_failed += 1;
             charge(&mut self.counters.traffic, miss_bits);
             self.obs.charge_out(owner.0, MsgClass::Store, miss_bits);
+            GetOutcome::Miss
         }
     }
 
@@ -296,6 +341,11 @@ impl StoreLayer {
         let mut handoff_batches: std::collections::BTreeMap<Id, (usize, u64)> =
             std::collections::BTreeMap::new();
         for rec in &mut self.records {
+            // never-written keys (conformance replays start from an
+            // empty store) have no replicas to repair
+            if rec.version == 0 {
+                continue;
+            }
             let vb = if rec.deleted { 0 } else { value_bits };
             let old_primary = rec.holders.first().copied();
             let alive: Vec<Id> =
@@ -360,7 +410,8 @@ impl StoreLayer {
     /// surviving replica)` against the current membership. Deleted keys
     /// are excluded — absence of a tombstoned key is correct, not loss.
     pub fn retrievable(&self, truth: &Table) -> (usize, usize) {
-        let live: Vec<&KeyRecord> = self.records.iter().filter(|r| !r.deleted).collect();
+        let live: Vec<&KeyRecord> =
+            self.records.iter().filter(|r| !r.deleted && r.version > 0).collect();
         let alive = live
             .iter()
             .filter(|r| r.holders.iter().any(|h| truth.contains(*h)))
@@ -532,6 +583,27 @@ mod tests {
         s.reset_counters();
         assert!(s.obs.peers().next().is_none(), "window reset drops attribution");
         assert_eq!(s.obs.counter(names::STORE_GETS), 0);
+    }
+
+    #[test]
+    fn replay_api_from_empty_store() {
+        // the conformance drivers skip preload: keys exist only once a
+        // trace step writes them, and repair/probe must tolerate that
+        let t = table(&[100, 200, 300, 400]);
+        let mut s = layer(10, 3);
+        assert_eq!(s.op_get(&t, 0), GetOutcome::Miss, "unwritten key misses");
+        assert!(!s.probe(&t, 0));
+        s.repair(&t);
+        assert_eq!(s.counters.keys_lost, 0, "unwritten keys are not 'lost'");
+        assert_eq!(s.counters.repair_transfers + s.counters.handoff_transfers, 0);
+        s.op_put(&t, 0);
+        assert_eq!(s.op_get(&t, 0), GetOutcome::Hit);
+        assert!(s.probe(&t, 0));
+        let (total, alive) = s.retrievable(&t);
+        assert_eq!((total, alive), (1, 1), "only the written key is live");
+        s.op_remove(&t, 0);
+        assert_eq!(s.op_get(&t, 0), GetOutcome::Miss, "tombstone reads as absent");
+        assert!(!s.probe(&t, 0));
     }
 
     #[test]

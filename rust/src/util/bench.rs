@@ -288,9 +288,12 @@ pub fn run_topic(topic: &str, target: Duration) -> Vec<BenchResult> {
 }
 
 /// Schema-check every topic file in `dir`: present, parseable, schema
-/// and topic fields right, at least one run whose results carry the
-/// required numeric fields. CI runs this after the smoke pass.
-pub fn verify_trajectory(dir: &Path) -> Result<()> {
+/// and topic fields right, at least `min_runs` runs (each labeled) whose
+/// results carry the required numeric fields. CI verifies the checked-in
+/// trajectory with `--min-runs 1`, runs the smoke pass, then re-verifies
+/// with `--min-runs 2` — asserting the trajectory length is monotone
+/// (appended to, never truncated or overwritten).
+pub fn verify_trajectory(dir: &Path, min_runs: usize) -> Result<()> {
     for topic in TOPICS {
         let path = trajectory_path(dir, topic);
         let text = std::fs::read_to_string(&path)
@@ -311,7 +314,17 @@ pub fn verify_trajectory(dir: &Path) -> Result<()> {
         if runs.is_empty() {
             bail!("{}: trajectory has no runs", path.display());
         }
+        if runs.len() < min_runs {
+            bail!(
+                "{}: trajectory has {} runs, expected at least {min_runs}",
+                path.display(),
+                runs.len()
+            );
+        }
         for run in runs {
+            if run.get("label").and_then(|v| v.as_str()).is_none() {
+                bail!("{}: run without label", path.display());
+            }
             let results = run
                 .get("results")
                 .and_then(|r| r.as_arr())
@@ -369,9 +382,11 @@ mod tests {
         let dir = temp_dir("traj");
         let paths = run_trajectory(&dir, true, "first").unwrap();
         assert_eq!(paths.len(), TOPICS.len());
-        verify_trajectory(&dir).unwrap();
+        verify_trajectory(&dir, 1).unwrap();
+        assert!(verify_trajectory(&dir, 2).is_err(), "min-runs floor enforced");
         // second run appends rather than overwriting
         run_trajectory(&dir, true, "second").unwrap();
+        verify_trajectory(&dir, 2).unwrap();
         let doc =
             Json::parse(&std::fs::read_to_string(trajectory_path(&dir, "lookup")).unwrap())
                 .unwrap();
@@ -385,7 +400,7 @@ mod tests {
     #[test]
     fn verify_rejects_missing_and_malformed() {
         let dir = temp_dir("bad");
-        assert!(verify_trajectory(&dir).is_err(), "missing files rejected");
+        assert!(verify_trajectory(&dir, 1).is_err(), "missing files rejected");
         for topic in TOPICS {
             std::fs::write(
                 trajectory_path(&dir, topic),
@@ -393,7 +408,7 @@ mod tests {
             )
             .unwrap();
         }
-        assert!(verify_trajectory(&dir).is_err(), "run-less trajectory rejected");
+        assert!(verify_trajectory(&dir, 1).is_err(), "run-less trajectory rejected");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,107 @@
+//! Tier-1 gate for the sim/net conformance harness: replay the golden
+//! traces through BOTH runtimes and machine-check the diff, then prove
+//! the harness has teeth by arming the net runtime's test-only
+//! replication fault and demanding a divergence.
+//!
+//! The socket side spins real UDP peers on loopback with wall-clock
+//! settle windows, so these tests are seconds-long by design — they are
+//! the cross-runtime ground truth everything else leans on.
+
+use d1ht::conformance::{
+    diff_reports, explain, run_trace, run_trace_with_fault, Divergence, Trace, TraceOp, TraceStep,
+};
+
+const CHURN_ZIPF: &str = include_str!("traces/churn_zipf.json");
+const STEADY_SMALL: &str = include_str!("traces/steady_small.json");
+
+#[test]
+fn golden_traces_parse_and_validate() {
+    let churn = Trace::parse(CHURN_ZIPF).expect("churn_zipf parses");
+    assert_eq!(churn.name, "churn_zipf");
+    assert_eq!(churn.peers, 6);
+    assert_eq!(churn.keys, 32);
+    assert!(churn.steps.len() > 100, "meaningful workload");
+    let steady = Trace::parse(STEADY_SMALL).expect("steady_small parses");
+    assert_eq!(steady.name, "steady_small");
+    assert_eq!(steady.peers, 4);
+}
+
+#[test]
+fn steady_small_conforms() {
+    let trace = Trace::parse(STEADY_SMALL).unwrap();
+    let outcome = run_trace(&trace).expect("both replays complete");
+    if let Some(d) = &outcome.divergence {
+        panic!("{}", explain(d, &outcome.sim, &outcome.net));
+    }
+    // no churn, so everything written (minus the removes) survives
+    assert!((outcome.sim.durability - 1.0).abs() < 1e-12);
+    assert!((outcome.net.durability - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn churn_zipf_conforms() {
+    let trace = Trace::parse(CHURN_ZIPF).unwrap();
+    let outcome = run_trace(&trace).expect("both replays complete");
+    if let Some(d) = &outcome.divergence {
+        panic!("{}", explain(d, &outcome.sim, &outcome.net));
+    }
+    assert_eq!(outcome.sim.digest, outcome.net.digest, "retrievable-key digests agree");
+    assert!((outcome.sim.availability - 1.0).abs() < 1e-12, "R=3 + settles: nothing lost");
+    assert!(outcome.sim.class_bits_out[0] > 0, "sim recorded maintenance traffic");
+    assert!(outcome.net.class_bits_out[2] > 0, "net recorded store traffic");
+}
+
+/// A workload built to make broken replication impossible to hide: with
+/// the fault armed every key lives only on its owner, and failing four
+/// of eight peers in sequence loses (in expectation) roughly half the
+/// key space. The healthy simulator keeps everything, so the differ
+/// must flag it. (One failure would flake: a single peer can own zero
+/// of the 32 keys with non-trivial probability — net peer IDs hash from
+/// OS-assigned ports.)
+fn fault_trace() -> Trace {
+    let mut steps = Vec::new();
+    for k in 0..32 {
+        steps.push(TraceStep { t: 0, op: TraceOp::Put { key: k } });
+    }
+    steps.push(TraceStep { t: 1, op: TraceOp::Settle });
+    for i in 0..4u64 {
+        // roster index 1 each time: the roster shifts, so four distinct
+        // peers die (live 8 -> 4, never below replication)
+        steps.push(TraceStep { t: 2 + i, op: TraceOp::Fail { peer: 1 } });
+        steps.push(TraceStep { t: 2 + i, op: TraceOp::Settle });
+    }
+    for k in 0..32 {
+        steps.push(TraceStep { t: 6, op: TraceOp::Get { key: k } });
+    }
+    steps.push(TraceStep { t: 6, op: TraceOp::Settle });
+    let trace = Trace {
+        name: "fault_probe".to_string(),
+        seed: 13,
+        peers: 8,
+        keys: 32,
+        value_len: 16,
+        steps,
+    };
+    trace.validate().expect("fault trace validates");
+    trace
+}
+
+#[test]
+fn broken_replication_is_detected() {
+    let trace = fault_trace();
+    let broken = run_trace_with_fault(&trace, true).expect("replays still complete");
+    let d = broken.divergence.expect("broken replication must diverge");
+    let text = explain(&d, &broken.sim, &broken.net);
+    assert!(
+        matches!(
+            d,
+            Divergence::GetMismatch { .. }
+                | Divergence::PresentMismatch { .. }
+                | Divergence::TrafficBand { .. }
+        ),
+        "divergence names the broken surface: {text}"
+    );
+    assert!(text.contains("conformance FAILED"), "{text}");
+    // the reports still diff deterministically on re-compare
+    assert_eq!(diff_reports(&broken.sim, &broken.net).as_ref(), Some(&d));
+}

@@ -10,6 +10,8 @@
 //! d1ht report [--peers <n>] [--secs <s>] [--seed <s>] [--trace drop|stderr]
 //! d1ht bench [--smoke] [--dir <d>] [--label <l>] [--verify] [--min-runs <n>]
 //! d1ht conform --trace <file> [--record] [--seed <s>] [--peers <n>] [--keys <k>]
+//!              [--faults <plan.json>]
+//! d1ht chaos [--smoke] [--seed <s>] [--peers <n>] [--keys <k>] [--faults <plan.json>]
 //! ```
 
 use crate::anyhow::{bail, Context, Result};
@@ -86,6 +88,7 @@ pub fn run(argv: &[String], out: &mut dyn std::io::Write) -> Result<()> {
         Some("report") => cmd_report(&args, out),
         Some("bench") => cmd_bench(&args, out),
         Some("conform") => cmd_conform(&args, out),
+        Some("chaos") => cmd_chaos(&args, out),
         Some("help") | None => {
             writeln!(out, "{}", HELP)?;
             Ok(())
@@ -119,13 +122,22 @@ USAGE:
   d1ht bench --verify [--dir <d>] [--min-runs <n>]
                                          schema-check the BENCH files
   d1ht conform --trace <file> [--record] [--seed <s>] [--peers <n>]
-               [--keys <k>] [--value-len <b>]
+               [--keys <k>] [--value-len <b>] [--faults <plan.json>]
                                          replay one recorded workload
                                          trace through the simulator AND
                                          the socket runtime, then diff
                                          the normalized reports; exits
-                                         non-zero on divergence
+                                         non-zero on divergence; with
+                                         --faults, arm a d1ht.faults.v1
+                                         plan on the net side only
                                          (docs/CONFORMANCE.md)
+  d1ht chaos [--smoke] [--seed <s>] [--peers <n>] [--keys <k>]
+             [--faults <plan.json>]
+                                         seeded fault-injection soak on a
+                                         real loopback cluster; exits
+                                         non-zero unless the cluster
+                                         converges after heal
+                                         (docs/FAULTS.md)
   d1ht help";
 
 fn fidelity(args: &Args) -> Fidelity {
@@ -406,10 +418,17 @@ fn cmd_conform(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
         Trace::parse(&text)?
     };
-    // test-only: arm the net runtime's replication fault to demonstrate
-    // that the harness detects broken replication
-    let fault = args.has("fault-drop-replication");
-    let outcome = conformance::run_trace_with_fault(&trace, fault)?;
+    // optionally arm a fault plan on the net side only: the sim stays
+    // the healthy reference the injured cluster is judged against
+    let plan = match args.get("faults") {
+        Some(p) => {
+            let text =
+                std::fs::read_to_string(p).with_context(|| format!("reading fault plan {p}"))?;
+            Some(crate::fault::FaultPlan::parse(&text)?)
+        }
+        None => None,
+    };
+    let outcome = conformance::run_trace_with_faults(&trace, plan.as_ref())?;
     writeln!(out, "{}", outcome.sim.to_json().render())?;
     writeln!(out, "{}", outcome.net.to_json().render())?;
     match outcome.divergence {
@@ -422,6 +441,39 @@ fn cmd_conform(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
             bail!("conformance failed for trace '{}'", trace.name)
         }
     }
+}
+
+/// Seeded fault-injection soak (`crate::fault::chaos`): boot a real
+/// loopback cluster, arm a deterministic fault plan, and gate on the
+/// documented convergence thresholds (docs/FAULTS.md). `--smoke` is the
+/// CI shape; without it the full soak shape runs.
+fn cmd_chaos(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
+    use crate::fault::{run_chaos, ChaosCfg, FaultPlan, CHAOS_SMOKE_SEED};
+
+    let seed = args.get_usize("seed", CHAOS_SMOKE_SEED as usize)? as u64;
+    let mut cfg = if args.has("smoke") { ChaosCfg::smoke(seed) } else { ChaosCfg::full(seed) };
+    cfg.peers = args.get_usize("peers", cfg.peers)?;
+    cfg.keys = args.get_usize("keys", cfg.keys)?;
+    if let Some(p) = args.get("faults") {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading fault plan {p}"))?;
+        cfg.plan = Some(FaultPlan::parse(&text)?);
+    }
+    let report = run_chaos(&cfg)?;
+    writeln!(out, "{}", report.render())?;
+    if !report.passes() {
+        bail!(
+            "chaos seed {} failed thresholds: retrievability {:.4} (min {}), \
+             retry amplification {:.2} (max {}), peer panics {}",
+            cfg.seed,
+            report.retrievability,
+            crate::fault::CHAOS_RETRIEVABILITY_MIN,
+            report.retry_amplification,
+            crate::fault::CHAOS_RETRY_AMPLIFICATION_MAX,
+            report.peer_panics
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]

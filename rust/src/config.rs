@@ -5,7 +5,8 @@
 //!
 //! Also home of [`TransportTuning`], the reliable-UDP knobs
 //! (`net/transport.rs`) tests and deployments tune via config keys
-//! `rto-ms`, `max-retries`, `seen-cap`, `seen-expiry-secs` (env:
+//! `rto-ms`, `rto-max-ms`, `backoff-factor`, `max-retries`, `seen-cap`,
+//! `seen-expiry-secs` (env:
 //! `D1HT_RTO_MS`, ...), and of [`BulkTuning`], the bulk-transfer
 //! channel knobs (`net/bulk.rs`) behind `bulk-frame-bytes`,
 //! `bulk-window-frames`, `bulk-resume-retries`, `bulk-stall-ms`,
@@ -83,12 +84,26 @@ impl Config {
 }
 
 /// Reliable-UDP transport knobs (previously hard-coded in
-/// `net/transport.rs`): retransmission timeout, retry budget, and the
+/// `net/transport.rs`): retransmission timing, retry budget, and the
 /// bounds of the duplicate-suppression (`seen`) map.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// Retransmission uses **exponential backoff with decorrelated jitter**
+/// instead of a fixed RTO: attempt `k` waits a uniform draw from
+/// `[hi(k)/2, hi(k)]` where `hi(k) = min(rto_max, rto · backoff^k)`.
+/// The jitter is one uniform `u` per tracked message (hashed from the
+/// message's seq), so the delay sequence of a single message is
+/// **monotone non-decreasing** in `k` while different messages
+/// decorrelate — retransmission bursts from correlated loss spread out
+/// instead of re-colliding every RTO.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TransportTuning {
-    /// Retransmission timeout for unacked reliable messages.
+    /// Base retransmission timeout (`hi(0)`) for unacked reliable
+    /// messages.
     pub rto: Duration,
+    /// Upper bound on any single backoff interval.
+    pub rto_max: Duration,
+    /// Exponential growth factor between attempts (≥ 1).
+    pub backoff: f64,
     /// Retries before a destination is presumed dead.
     pub max_retries: u32,
     /// Hard size bound on the duplicate-suppression map; when exceeded,
@@ -103,6 +118,8 @@ impl Default for TransportTuning {
     fn default() -> Self {
         TransportTuning {
             rto: Duration::from_millis(250),
+            rto_max: Duration::from_millis(1000),
+            backoff: 2.0,
             max_retries: 4,
             seen_cap: 4096,
             seen_expiry: Duration::from_secs(30),
@@ -117,12 +134,48 @@ impl TransportTuning {
         let d = Self::default();
         Ok(TransportTuning {
             rto: Duration::from_millis(cfg.get_usize("rto-ms", d.rto.as_millis() as usize)? as u64),
+            rto_max: Duration::from_millis(
+                cfg.get_usize("rto-max-ms", d.rto_max.as_millis() as usize)? as u64,
+            ),
+            backoff: cfg.get_f64("backoff-factor", d.backoff)?.max(1.0),
             max_retries: cfg.get_usize("max-retries", d.max_retries as usize)? as u32,
             seen_cap: cfg.get_usize("seen-cap", d.seen_cap)?,
             seen_expiry: Duration::from_secs(
                 cfg.get_usize("seen-expiry-secs", d.seen_expiry.as_secs() as usize)? as u64,
             ),
         })
+    }
+
+    /// Upper bound of the backoff interval before retry `attempt`
+    /// (attempt 0 = the wait after the initial send):
+    /// `min(rto_max, rto · backoff^attempt)`.
+    pub fn backoff_hi(&self, attempt: u32) -> Duration {
+        let mut hi = self.rto;
+        for _ in 0..attempt {
+            if hi >= self.rto_max {
+                return self.rto_max;
+            }
+            hi = hi.mul_f64(self.backoff.max(1.0));
+        }
+        hi.min(self.rto_max)
+    }
+
+    /// The jittered wait before retry `attempt` of the message salted by
+    /// `salt`: uniform in `[hi/2, hi]`, with **one** uniform draw per
+    /// message (pure hash of `salt`), so a given message's delays grow
+    /// monotonically with `attempt` while different messages decorrelate.
+    pub fn backoff_delay(&self, attempt: u32, salt: u64) -> Duration {
+        let u = (crate::util::rng::mix64(salt ^ 0x0B0F_F5E7) >> 11) as f64
+            * (1.0 / (1u64 << 53) as f64);
+        self.backoff_hi(attempt).mul_f64((1.0 + u) / 2.0)
+    }
+
+    /// Worst-case time from first send to giving a destination up:
+    /// `Σ hi(k)` for `k = 0 ..= max_retries` — the failure-detection
+    /// latency other timeouts (bulk stall, conformance settle windows)
+    /// must cover.
+    pub fn total_retry_budget(&self) -> Duration {
+        (0..=self.max_retries).map(|k| self.backoff_hi(k)).sum()
     }
 }
 
@@ -165,16 +218,18 @@ impl Default for BulkTuning {
 
 impl BulkTuning {
     /// Derive the bulk knobs from the datagram transport's: the stall
-    /// timeout covers a full datagram retry cycle (`rto × (retries + 1)`)
-    /// so the bulk layer never declares a stall while the control plane
-    /// may still legitimately be retransmitting, and the resume budget
-    /// equals `max_retries` (the ISSUE-2 bounded-handoff-retry fix).
+    /// timeout covers a full datagram retry cycle
+    /// ([`TransportTuning::total_retry_budget`], the summed backoff
+    /// schedule) so the bulk layer never declares a stall while the
+    /// control plane may still legitimately be retransmitting, and the
+    /// resume budget equals `max_retries` (the ISSUE-2
+    /// bounded-handoff-retry fix).
     pub fn for_transport(t: &TransportTuning) -> Self {
         BulkTuning {
             frame_bytes: 1200,
             window_frames: 32,
             resume_retries: t.max_retries,
-            stall: t.rto.saturating_mul(t.max_retries + 1),
+            stall: t.total_retry_budget(),
             ack_every: 8,
             use_tcp: true,
         }
@@ -228,13 +283,78 @@ mod tests {
     fn transport_tuning_from_config() {
         let t = TransportTuning::from_config(&Config::new()).unwrap();
         assert_eq!(t, TransportTuning::default());
-        let c = Config::parse("rto-ms = 50\nmax-retries = 2\nseen-cap = 128\n").unwrap();
+        let c = Config::parse(
+            "rto-ms = 50\nrto-max-ms = 200\nbackoff-factor = 3\nmax-retries = 2\nseen-cap = 128\n",
+        )
+        .unwrap();
         let t = TransportTuning::from_config(&c).unwrap();
         assert_eq!(t.rto, Duration::from_millis(50));
+        assert_eq!(t.rto_max, Duration::from_millis(200));
+        assert_eq!(t.backoff, 3.0);
         assert_eq!(t.max_retries, 2);
         assert_eq!(t.seen_cap, 128);
         assert_eq!(t.seen_expiry, TransportTuning::default().seen_expiry);
         assert!(TransportTuning::from_config(&Config::parse("rto-ms = x\n").unwrap()).is_err());
+        // a sub-1 backoff factor would shrink the schedule; clamped up
+        let c = Config::parse("backoff-factor = 0.5\n").unwrap();
+        assert_eq!(TransportTuning::from_config(&c).unwrap().backoff, 1.0);
+    }
+
+    #[test]
+    fn backoff_hi_monotone_and_capped() {
+        let t = TransportTuning::default();
+        // default schedule: 250, 500, 1000, 1000, 1000 ms
+        assert_eq!(t.backoff_hi(0), Duration::from_millis(250));
+        assert_eq!(t.backoff_hi(1), Duration::from_millis(500));
+        assert_eq!(t.backoff_hi(2), Duration::from_millis(1000));
+        for k in 0..20 {
+            assert!(t.backoff_hi(k + 1) >= t.backoff_hi(k), "monotone at {k}");
+            assert!(t.backoff_hi(k) <= t.rto_max, "capped at {k}");
+        }
+        assert_eq!(t.backoff_hi(19), t.rto_max, "large attempts saturate");
+    }
+
+    #[test]
+    fn backoff_delay_jittered_within_bounds() {
+        let t = TransportTuning::default();
+        for salt in 0..200u64 {
+            for k in 0..6 {
+                let hi = t.backoff_hi(k);
+                let d = t.backoff_delay(k, salt);
+                assert!(d >= hi.mul_f64(0.5) && d <= hi, "attempt {k} salt {salt}: {d:?}");
+            }
+        }
+        // jitter decorrelates across messages: not every salt lands on
+        // the same delay
+        let delays: Vec<Duration> = (0..50).map(|s| t.backoff_delay(0, s)).collect();
+        assert!(delays.iter().any(|d| *d != delays[0]));
+    }
+
+    #[test]
+    fn backoff_delays_monotone_per_message() {
+        // one uniform draw per message means the per-message delay
+        // sequence never shrinks between attempts — even at the cap
+        let t = TransportTuning::default();
+        for salt in 0..200u64 {
+            for k in 0..10 {
+                assert!(
+                    t.backoff_delay(k + 1, salt) >= t.backoff_delay(k, salt),
+                    "salt {salt} attempt {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn retry_budget_is_summed_schedule() {
+        let t = TransportTuning::default();
+        let sum: Duration = (0..=t.max_retries).map(|k| t.backoff_hi(k)).sum();
+        assert_eq!(t.total_retry_budget(), sum);
+        // default: 250 + 500 + 1000 + 1000 + 1000 = 3750 ms
+        assert_eq!(t.total_retry_budget(), Duration::from_millis(3750));
+        // capped by max_retries: shrinking the budget shrinks the sum
+        let short = TransportTuning { max_retries: 1, ..t };
+        assert_eq!(short.total_retry_budget(), Duration::from_millis(750));
     }
 
     #[test]
@@ -243,7 +363,7 @@ mod tests {
         let d = BulkTuning::from_config(&Config::new(), &tr).unwrap();
         assert_eq!(d, BulkTuning::default());
         assert_eq!(d.resume_retries, tr.max_retries, "retry budgets tied together");
-        assert_eq!(d.stall, tr.rto * (tr.max_retries + 1));
+        assert_eq!(d.stall, tr.total_retry_budget());
         let c = Config::parse(
             "bulk-frame-bytes = 4096\nbulk-window-frames = 4\nbulk-tcp = false\nbulk-stall-ms = 50\n",
         )

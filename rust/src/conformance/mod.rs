@@ -37,6 +37,7 @@ pub use report::{ConformanceReport, Expectation, REPORT_SCHEMA};
 pub use trace::{Trace, TraceOp, TraceStep, TRACE_SCHEMA};
 
 use crate::anyhow::Result;
+use crate::fault::FaultPlan;
 
 /// Both reports plus the verdict.
 pub struct Outcome {
@@ -53,15 +54,18 @@ impl Outcome {
 
 /// Replay `trace` through both runtimes and diff the reports.
 pub fn run_trace(trace: &Trace) -> Result<Outcome> {
-    run_trace_with_fault(trace, false)
+    run_trace_with_faults(trace, None)
 }
 
-/// Like [`run_trace`], but optionally arming the net runtime's
-/// test-only replication fault — used to prove the harness actually
-/// detects broken replication (it must report a divergence).
-pub fn run_trace_with_fault(trace: &Trace, fault_drop_replication: bool) -> Result<Outcome> {
+/// Like [`run_trace`], but arming a [`FaultPlan`] on the net runtime
+/// while the sim replays the same trace over a healthy network — the
+/// sim stays the reference the injured cluster is judged against. Used
+/// both to prove the harness detects broken replication (a
+/// replicate-dropping plan must diverge) and, via `d1ht conform
+/// --faults`, to check that a surviving cluster still conforms.
+pub fn run_trace_with_faults(trace: &Trace, net_faults: Option<&FaultPlan>) -> Result<Outcome> {
     let sim_rep = sim::replay_sim(trace)?;
-    let net_rep = net::replay_net(trace, fault_drop_replication)?;
+    let net_rep = net::replay_net(trace, net_faults)?;
     let divergence = diff_reports(&sim_rep, &net_rep);
     Ok(Outcome { sim: sim_rep, net: net_rep, divergence })
 }

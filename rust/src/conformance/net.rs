@@ -20,6 +20,8 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::anyhow::{bail, Context, Result};
+use crate::config::TransportTuning;
+use crate::fault::{FaultInjector, FaultPlan};
 use crate::net::cluster::Cluster;
 use crate::net::peer::{NetPeerCfg, PeerHandle};
 use crate::obs::{ClassFlows, MsgClass};
@@ -102,22 +104,55 @@ fn value_bytes(kid: u64, version: u64, len: usize) -> Vec<u8> {
         .collect()
 }
 
-/// Replay `trace` against a real loopback cluster. `fault` enables the
-/// test-only [`NetPeerCfg::fault_drop_replication`] hook on every peer,
-/// which a conforming run must detect as a divergence.
-pub fn replay_net(trace: &Trace, fault: bool) -> Result<ConformanceReport> {
+/// Replay `trace` against a real loopback cluster, optionally under an
+/// armed [`FaultPlan`]. The plan is wired into every peer's transport
+/// through one shared [`FaultInjector`] and armed only *after* the
+/// cluster converges, so boot-time joins are never injured; roster
+/// indices follow spawn order, with mid-replay joiners appended. The
+/// sim replay stays fault-free — a plan that actually breaks the
+/// cluster (e.g. dropping every `replicate`) must therefore surface as
+/// a divergence.
+pub fn replay_net(trace: &Trace, faults: Option<&FaultPlan>) -> Result<ConformanceReport> {
     trace.validate()?;
+    let inj = match faults {
+        Some(plan) => {
+            plan.validate()?;
+            Some(FaultInjector::new(plan.clone()))
+        }
+        None => None,
+    };
     let cfg = NetPeerCfg {
         replication: REPLICATION,
         repair_every: REPAIR_EVERY,
-        fault_drop_replication: fault,
+        // under faults, tighten the retransmit clock so loss is detected
+        // and repaired well inside one SETTLE window
+        transport: if inj.is_some() {
+            TransportTuning {
+                rto: Duration::from_millis(100),
+                rto_max: Duration::from_millis(400),
+                ..TransportTuning::default()
+            }
+        } else {
+            TransportTuning::default()
+        },
+        faults: inj.clone(),
         ..Default::default()
     };
     let mut cluster =
         Cluster::start_with(trace.peers, cfg.clone(), SPACING).context("cluster start")?;
+    let mut roster_next = 0usize;
+    if let Some(inj) = &inj {
+        for p in &cluster.peers {
+            inj.register(p.addr.port(), roster_next);
+            roster_next += 1;
+        }
+    }
     if !cluster.await_convergence(Duration::from_secs(20)) {
         cluster.shutdown();
         bail!("cluster of {} peers did not converge within 20s", trace.peers);
+    }
+    if let Some(inj) = &inj {
+        inj.arm();
     }
 
     let mut flows = FlowHarvest::new();
@@ -183,6 +218,11 @@ pub fn replay_net(trace: &Trace, fault: bool) -> Result<ConformanceReport> {
                 // no baseline: the joiner's table transfer is charged to
                 // the replay window, like a sim join while recording
                 cluster.join_one(cfg.clone()).context("mid-replay join")?;
+                if let Some(inj) = &inj {
+                    let np = cluster.peers.last().expect("just joined");
+                    inj.register(np.addr.port(), roster_next);
+                    roster_next += 1;
+                }
             }
             TraceOp::Leave { peer } | TraceOp::Fail { peer } => {
                 if peer >= cluster.len() {

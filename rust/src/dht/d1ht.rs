@@ -18,6 +18,7 @@
 use std::collections::BTreeMap;
 
 use crate::edra::Edra;
+use crate::fault::plan::{FaultPlan, Verdict};
 use crate::id::{space, Id};
 use crate::obs::{self, Json, MsgClass, Registry, Tracer};
 use crate::proto::messages::{Event, Message, MessageBody};
@@ -83,6 +84,10 @@ pub enum Ev {
     StoreTick,
     /// Store-layer anti-entropy pass.
     StoreRepair,
+    /// Fault-plan crash: SIGKILL `peer` now; when `restart_after_ms > 0`
+    /// the same label rejoins after that delay, re-entering through the
+    /// Quarantine gate when one is configured (§V).
+    FaultCrash { peer: Id, restart_after_ms: u64 },
 }
 
 struct Peer {
@@ -187,6 +192,22 @@ pub struct D1htSim {
     /// Birth time (first local detection) of each membership event —
     /// the reference point for the Fig. 6 propagation-delay histogram.
     event_born: std::collections::HashMap<Event, f64>,
+    /// Armed fault plan, if any ([`D1htSim::arm_faults`]). The sim twin
+    /// of the socket runtime's [`crate::fault::FaultInjector`].
+    faults: Option<SimFaultState>,
+}
+
+/// Sim-side runtime state around an armed [`FaultPlan`]: the arming
+/// instant (plans are phrased in ms-since-armed), the roster snapshot
+/// that gives plan indices meaning, and the packet counter feeding the
+/// pure-hash verdicts. The sim is single-threaded, so one global
+/// counter is deterministic (the socket runtime needs per-pair
+/// counters only because peer threads race).
+struct SimFaultState {
+    plan: FaultPlan,
+    t0: f64,
+    roster: Vec<Id>,
+    counter: u64,
 }
 
 impl D1htSim {
@@ -212,7 +233,54 @@ impl D1htSim {
             obs: Registry::new(),
             tracer: Tracer::default(),
             event_born: Default::default(),
+            faults: None,
         }
+    }
+
+    /// Arm a fault plan at the current virtual time: `t = 0 ms` is now,
+    /// plan peer indices are positions in the current [`Self::live_ids`]
+    /// roster, and every crash in the plan is scheduled onto the event
+    /// queue. Packet rules take effect on the next maintenance send.
+    pub fn arm_faults(&mut self, plan: FaultPlan, q: &mut Queue<Ev>) {
+        let t0 = q.now();
+        let roster = self.live_ids();
+        let timeline: Vec<(f64, Ev)> = plan
+            .crashes
+            .iter()
+            .filter_map(|c| {
+                roster.get(c.peer).map(|&id| {
+                    (
+                        t0 + c.at_ms as f64 / 1000.0,
+                        Ev::FaultCrash { peer: id, restart_after_ms: c.restart_after_ms },
+                    )
+                })
+            })
+            .collect();
+        q.schedule_all(timeline);
+        self.faults = Some(SimFaultState { plan, t0, roster, counter: 0 });
+    }
+
+    /// Consult the armed plan (if any) for one outgoing packet,
+    /// advancing the packet counter and tallying the `fault.*` obs
+    /// counters.
+    fn fault_verdict(&mut self, from: Id, to: Id, class: MsgClass, kind: &str, now: f64) -> Verdict {
+        let Some(fs) = self.faults.as_mut() else { return Verdict::CLEAN };
+        let now_ms = ((now - fs.t0).max(0.0) * 1000.0) as u64;
+        let src = fs.roster.iter().position(|&i| i == from);
+        let dst = fs.roster.iter().position(|&i| i == to);
+        let counter = fs.counter;
+        fs.counter += 1;
+        let v = fs.plan.verdict(src, dst, class, kind, now_ms, counter);
+        if v.drop {
+            self.obs.inc(obs::names::FAULT_PACKETS_DROPPED, 1);
+        }
+        if v.duplicate {
+            self.obs.inc(obs::names::FAULT_PACKETS_DUPLICATED, 1);
+        }
+        if v.delay_ms > 0 {
+            self.obs.inc(obs::names::FAULT_PACKETS_DELAYED, 1);
+        }
+        v
     }
 
     pub fn size(&self) -> usize {
@@ -560,15 +628,36 @@ impl D1htSim {
 
     /// Transmit a maintenance message with loss + ack + retransmit
     /// semantics (acks are charged inline; losses recharge after RTO).
+    ///
+    /// This is the simulator's fault choke point (the twin of
+    /// `net/transport.rs::emit`): an armed [`FaultPlan`] is consulted
+    /// for every send — injected drops reuse the model's RTO/retry
+    /// path, injected delays stretch the delivery latency, and
+    /// duplicates schedule a second delivery (which the receiver's
+    /// event dedup then absorbs, exactly like the socket runtime's
+    /// `seen` map).
     fn send_maintenance(&mut self, msg: Message, q: &mut Queue<Ev>, attempt: u8) {
         let bits = msg.wire_bits();
         self.charge_send(msg.from, bits, MsgClass::Maintenance);
+        let v = self.fault_verdict(msg.from, msg.to, MsgClass::Maintenance, "maintenance", q.now());
+        if v.drop {
+            if attempt < 3 {
+                let to = msg.to;
+                q.after(RTO_SECS, Ev::Redeliver { to, msg, attempt: attempt + 1 });
+            }
+            return;
+        }
         if self.rng.chance(self.cfg.net.loss()) && attempt < 3 {
             let to = msg.to;
             q.after(RTO_SECS, Ev::Redeliver { to, msg, attempt: attempt + 1 });
             return;
         }
-        let delay = self.cfg.net.delay(&mut self.rng) + self.cfg.cpu.proc_delay();
+        let delay = self.cfg.net.delay(&mut self.rng)
+            + self.cfg.cpu.proc_delay()
+            + v.delay_ms as f64 / 1000.0;
+        if v.duplicate {
+            q.after(delay, Ev::Deliver { to: msg.to, msg: msg.clone() });
+        }
         q.after(delay, Ev::Deliver { to: msg.to, msg });
     }
 
@@ -1049,6 +1138,18 @@ impl World for D1htSim {
             Ev::LookupTick => self.lookup_tick(q),
             Ev::StoreTick => self.store_tick(q),
             Ev::StoreRepair => self.store_repair(q),
+            Ev::FaultCrash { peer, restart_after_ms } => {
+                if let Some(p) = self.peers.get(&peer) {
+                    let label = p.label;
+                    self.depart(peer, LeaveStyle::Failure, q);
+                    // with churn enabled, `depart` already scheduled the
+                    // churn model's own rejoin; otherwise the plan's
+                    // restart delay drives it (0 = stay down)
+                    if restart_after_ms > 0 && !self.cfg.churn.enabled() {
+                        q.after(restart_after_ms as f64 / 1000.0, Ev::Rejoin { label });
+                    }
+                }
+            }
         }
     }
 }
@@ -1100,6 +1201,49 @@ mod tests {
         for p in sim.peers.values() {
             assert_eq!(p.table.staleness_vs(&sim.truth), 0.0);
         }
+    }
+
+    #[test]
+    fn armed_fault_plan_is_deterministic_and_crash_rejoins() {
+        use crate::fault::plan::{CrashSpec, FaultAction, FaultRule, Selector};
+        let drive = || {
+            let cfg = D1htCfg { lookup_rate: 0.0, seed: 3, ..Default::default() };
+            let mut sim = D1htSim::new(cfg);
+            let mut q = Queue::new();
+            sim.bootstrap(16, &mut q);
+            let mut plan = FaultPlan::named("sim-chaos", 77);
+            plan.rules.push(FaultRule {
+                action: FaultAction::Loss,
+                prob: 0.3,
+                src: Selector::Any,
+                dst: Selector::Any,
+                class: None,
+                kind: None,
+                from_ms: 0,
+                until_ms: 5000,
+            });
+            plan.crashes.push(CrashSpec { peer: 5, at_ms: 1000, restart_after_ms: 2000 });
+            sim.arm_faults(plan, &mut q);
+            run_until(&mut sim, &mut q, 120.0);
+            (sim.live_ids(), q.processed(), sim.events_lost_to_failures)
+        };
+        let (ids_a, n_a, lost_a) = drive();
+        let (ids_b, n_b, lost_b) = drive();
+        assert_eq!(ids_a, ids_b, "same seed + plan, same world");
+        assert_eq!(n_a, n_b, "event-for-event identical runs");
+        assert_eq!(lost_a, lost_b);
+        assert_eq!(ids_a.len(), 16, "crashed peer rejoined after its restart delay");
+    }
+
+    #[test]
+    fn fault_crash_without_restart_stays_down() {
+        use crate::fault::plan::CrashSpec;
+        let (mut sim, mut q) = quiet_world(16);
+        let mut plan = FaultPlan::named("perma-crash", 7);
+        plan.crashes.push(CrashSpec { peer: 5, at_ms: 500, restart_after_ms: 0 });
+        sim.arm_faults(plan, &mut q);
+        run_until(&mut sim, &mut q, 60.0);
+        assert_eq!(sim.size(), 15, "no rejoin scheduled for restart_after_ms = 0");
     }
 
     #[test]

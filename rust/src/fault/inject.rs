@@ -1,0 +1,173 @@
+//! Runtime state around a [`FaultPlan`] for the socket runtime.
+//!
+//! One [`FaultInjector`] is shared (via `Arc`) by every peer thread of a
+//! cluster; each peer's [`crate::net::transport::Transport`] consults it
+//! at the single send-side choke point (`Transport::emit`). The injector
+//! owns the three things a pure plan cannot: the **arming instant**
+//! (plans are phrased in ms-since-armed so setup traffic is never
+//! faulted), the **port → roster-index directory** (plans name peers by
+//! roster index; packets carry ports), and the **per-`(src, dst)` packet
+//! counters** that feed [`FaultPlan::verdict`]. Counters are per
+//! directed pair, not global: each peer thread sends to a given
+//! destination in program order, so pair-local ordinals are
+//! deterministic where a global counter would race across threads.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::MsgClass;
+
+use super::plan::{FaultPlan, Verdict};
+
+/// Shared fault state for one cluster run. Unarmed injectors return
+/// [`Verdict::CLEAN`] for everything, so wiring one in before the
+/// cluster converges costs nothing.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    armed_at: Mutex<Option<Instant>>,
+    directory: Mutex<HashMap<u16, usize>>,
+    pair_counters: Mutex<HashMap<(u16, u16), u64>>,
+    /// Packets vanished by a Loss rule or a live partition.
+    pub dropped: AtomicU64,
+    /// Extra copies emitted by a Duplicate rule.
+    pub duplicated: AtomicU64,
+    /// Packets postponed by a Delay/Reorder rule.
+    pub delayed: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            plan,
+            armed_at: Mutex::new(None),
+            directory: Mutex::new(HashMap::new()),
+            pair_counters: Mutex::new(HashMap::new()),
+            dropped: AtomicU64::new(0),
+            duplicated: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Bind UDP `port` to roster index `idx` — selectors and partition
+    /// groups resolve through this directory. A restarted peer registers
+    /// its new port under its old index.
+    pub fn register(&self, port: u16, idx: usize) {
+        self.directory.lock().unwrap().insert(port, idx);
+    }
+
+    /// Start the plan clock. Packets sent before arming are never
+    /// faulted; `t = 0 ms` is this instant.
+    pub fn arm(&self) {
+        *self.armed_at.lock().unwrap() = Some(Instant::now());
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed_at.lock().unwrap().is_some()
+    }
+
+    /// Decide the fate of one outgoing packet, advancing the
+    /// `(src, dst)` pair counter. Drop/duplicate/delay tallies are
+    /// updated here so every transport shares one set of totals.
+    pub fn verdict(&self, src_port: u16, dst_port: u16, class: MsgClass, kind: &str) -> Verdict {
+        let now_ms = {
+            let armed = self.armed_at.lock().unwrap();
+            match *armed {
+                Some(t0) => t0.elapsed().as_millis() as u64,
+                None => return Verdict::CLEAN,
+            }
+        };
+        let counter = {
+            let mut counters = self.pair_counters.lock().unwrap();
+            let c = counters.entry((src_port, dst_port)).or_insert(0);
+            let v = *c;
+            *c += 1;
+            v
+        };
+        let (src, dst) = {
+            let dir = self.directory.lock().unwrap();
+            (dir.get(&src_port).copied(), dir.get(&dst_port).copied())
+        };
+        let v = self.plan.verdict(src, dst, class, kind, now_ms, counter);
+        if v.drop {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        if v.duplicate {
+            self.duplicated.fetch_add(1, Ordering::Relaxed);
+        }
+        if v.delay_ms > 0 {
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+        }
+        v
+    }
+
+    pub fn drops(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn duplicates(&self) -> u64 {
+        self.duplicated.load(Ordering::Relaxed)
+    }
+
+    pub fn delays(&self) -> u64 {
+        self.delayed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_injector_is_transparent() {
+        let inj = FaultInjector::new(FaultPlan::drop_kind("replicate"));
+        inj.register(1000, 0);
+        inj.register(1001, 1);
+        for _ in 0..50 {
+            assert!(inj.verdict(1000, 1001, MsgClass::Store, "replicate").is_clean());
+        }
+        assert_eq!(inj.drops(), 0);
+    }
+
+    #[test]
+    fn armed_injector_applies_plan_and_counts() {
+        let inj = FaultInjector::new(FaultPlan::drop_kind("replicate"));
+        inj.arm();
+        for _ in 0..10 {
+            assert!(inj.verdict(1000, 1001, MsgClass::Store, "replicate").drop);
+            assert!(!inj.verdict(1000, 1001, MsgClass::Store, "put").drop);
+        }
+        assert_eq!(inj.drops(), 10);
+        assert_eq!(inj.duplicates(), 0);
+    }
+
+    #[test]
+    fn unregistered_ports_match_only_any() {
+        use super::super::plan::{FaultAction, FaultRule, Selector};
+        let mut plan = FaultPlan::named("peer-scoped", 3);
+        plan.rules.push(FaultRule {
+            action: FaultAction::Loss,
+            prob: 1.0,
+            src: Selector::Peer(1),
+            dst: Selector::Any,
+            class: None,
+            kind: None,
+            from_ms: 0,
+            until_ms: 0,
+        });
+        let inj = FaultInjector::new(plan);
+        inj.register(2001, 1);
+        inj.arm();
+        assert!(inj.verdict(2001, 9999, MsgClass::Lookup, "lookup").drop, "registered src");
+        assert!(
+            !inj.verdict(3000, 9999, MsgClass::Lookup, "lookup").drop,
+            "unknown src never matches Peer(1)"
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Deterministic fault injection — failure as a first-class, seeded,
+//! reproducible input to both runtimes.
+//!
+//! * [`plan`] — the `d1ht.faults.v1` schedule: packet loss / duplication
+//!   / delay / reordering rules per `(src, dst, class, kind)`, timed
+//!   bidirectional partitions, and peer crash + restart. Every
+//!   per-packet decision is a pure hash of `(seed, rule, counter)`, so
+//!   one seed is one schedule, byte for byte.
+//! * [`inject`] — the socket runtime's shared injector: arming clock,
+//!   port→roster directory, per-pair packet counters. Consulted at the
+//!   single choke point `net/transport.rs::emit`; the simulator twin
+//!   consults the plan directly at its own choke point
+//!   (`dht/d1ht.rs::send_maintenance` plus crash events on the event
+//!   queue).
+//! * [`chaos`] — the `d1ht chaos` soak harness: run a seeded plan
+//!   against a real local cluster and assert convergence after heal
+//!   (retrievability, zero panics, bounded retry amplification).
+//!
+//! Schema, choke-point semantics, and acceptance thresholds are
+//! documented in `docs/FAULTS.md` (quoted threshold lines kept in sync
+//! with [`chaos`] constants by an `include_str!` test).
+
+pub mod chaos;
+pub mod inject;
+pub mod plan;
+
+pub use chaos::{
+    default_plan, run_chaos, ChaosCfg, ChaosReport, CHAOS_RETRIEVABILITY_MIN,
+    CHAOS_RETRY_AMPLIFICATION_MAX, CHAOS_SMOKE_SEED,
+};
+pub use inject::FaultInjector;
+pub use plan::{
+    CrashSpec, FaultAction, FaultPlan, FaultRule, PartitionSpec, Selector, Verdict, FAULT_SCHEMA,
+};

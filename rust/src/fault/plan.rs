@@ -1,0 +1,689 @@
+//! The seeded fault schedule (`d1ht.faults.v1`).
+//!
+//! A [`FaultPlan`] is the *one* description of adversarial network
+//! conditions both runtimes consume: per-`(src, dst, class, kind)`
+//! packet rules (loss / duplication / delay / reordering), bidirectional
+//! partitions with a timed heal, and peer crashes with optional restart.
+//! Peers are named by **roster index** — position in the member list at
+//! the moment the plan is armed — exactly like `leave`/`fail` steps in a
+//! conformance trace ([`crate::conformance::Trace`]), so one plan file
+//! drives the simulator and the socket cluster alike.
+//!
+//! Determinism is load-bearing: every per-packet decision is a **pure
+//! hash** of `(plan seed, rule index, packet counter)` via
+//! [`crate::util::rng::mix64`] — no stateful RNG anywhere — so the same
+//! seed yields the byte-identical fault schedule regardless of thread
+//! interleaving or wall-clock jitter. [`FaultPlan::schedule_digest`]
+//! folds a synthetic packet population through [`FaultPlan::verdict`]
+//! and is asserted equal across runs in tests.
+
+use crate::anyhow::{bail, Result};
+use crate::obs::{Json, MsgClass};
+use crate::util::rng::mix64;
+
+/// Schema tag written into every fault-plan file.
+pub const FAULT_SCHEMA: &str = "d1ht.faults.v1";
+
+/// Which peers a rule's endpoint matches. `Peer` is a roster index;
+/// packets whose endpoint is not in the roster (e.g. an ephemeral
+/// client socket) only match `Any`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selector {
+    Any,
+    Peer(usize),
+}
+
+impl Selector {
+    fn matches(self, idx: Option<usize>) -> bool {
+        match self {
+            Selector::Any => true,
+            Selector::Peer(p) => idx == Some(p),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            Selector::Any => Json::s("any"),
+            Selector::Peer(p) => Json::u(p as u64),
+        }
+    }
+
+    fn from_json(j: Option<&Json>) -> Result<Selector> {
+        match j {
+            None => Ok(Selector::Any),
+            Some(v) => {
+                if v.as_str() == Some("any") {
+                    Ok(Selector::Any)
+                } else if let Some(i) = v.as_i64() {
+                    if i < 0 {
+                        bail!("selector index {i} negative");
+                    }
+                    Ok(Selector::Peer(i as usize))
+                } else {
+                    bail!("selector must be \"any\" or a roster index");
+                }
+            }
+        }
+    }
+}
+
+/// What happens to a matched packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The packet vanishes (the sender still charges and tracks it, so
+    /// backoff + retransmission are exercised).
+    Loss,
+    /// The packet is delivered twice (exercises the receiver's dedup
+    /// `seen` map; the duplicate is not re-charged by the sender).
+    Duplicate,
+    /// Delivery is postponed by a fixed `ms`.
+    Delay { ms: u64 },
+    /// Delivery is postponed by a hash-drawn 1..=25 ms — enough to slip
+    /// behind later sends on loopback, i.e. reordering.
+    Reorder,
+}
+
+impl FaultAction {
+    fn name(self) -> &'static str {
+        match self {
+            FaultAction::Loss => "loss",
+            FaultAction::Duplicate => "duplicate",
+            FaultAction::Delay { .. } => "delay",
+            FaultAction::Reorder => "reorder",
+        }
+    }
+}
+
+/// One packet rule: `action` with probability `prob` on packets matching
+/// the `(src, dst, class, kind)` filters inside `[from_ms, until_ms)`
+/// (`until_ms == 0` = open-ended) since the plan was armed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub action: FaultAction,
+    pub prob: f64,
+    pub src: Selector,
+    pub dst: Selector,
+    /// Restrict to one traffic class (`None` = all).
+    pub class: Option<MsgClass>,
+    /// Restrict to one wire-message kind as named by
+    /// [`crate::net::wire::NetMsg::kind`] (`None` = all kinds).
+    pub kind: Option<String>,
+    pub from_ms: u64,
+    pub until_ms: u64,
+}
+
+impl FaultRule {
+    fn window_active(&self, now_ms: u64) -> bool {
+        now_ms >= self.from_ms && (self.until_ms == 0 || now_ms < self.until_ms)
+    }
+}
+
+/// A bidirectional partition: packets between group `a` and group `b`
+/// are dropped inside `[from_ms, until_ms)`; at `until_ms` the partition
+/// heals. Group members are roster indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionSpec {
+    pub a: Vec<usize>,
+    pub b: Vec<usize>,
+    pub from_ms: u64,
+    pub until_ms: u64,
+}
+
+/// A peer crash at `at_ms` (SIGKILL semantics: buffered state dies),
+/// optionally followed by a restart `restart_after_ms` later
+/// (`0` = no restart). The restarted peer re-enters as a fresh joiner —
+/// through Quarantine in the sim, through the join/bulk-catchup path in
+/// the socket runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashSpec {
+    pub peer: usize,
+    pub at_ms: u64,
+    pub restart_after_ms: u64,
+}
+
+/// The full seeded fault schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub name: String,
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+    pub partitions: Vec<PartitionSpec>,
+    pub crashes: Vec<CrashSpec>,
+}
+
+/// The per-packet decision both runtimes apply at their choke point.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Verdict {
+    pub drop: bool,
+    pub duplicate: bool,
+    pub delay_ms: u64,
+}
+
+impl Verdict {
+    pub const CLEAN: Verdict = Verdict { drop: false, duplicate: false, delay_ms: 0 };
+
+    pub fn is_clean(&self) -> bool {
+        *self == Verdict::CLEAN
+    }
+}
+
+/// Pure per-packet uniform draw in `[0, 1)`: a hash of
+/// `(seed, rule index, packet counter)` — never a stateful RNG, so the
+/// schedule is independent of evaluation order.
+fn unit(seed: u64, rule_idx: u64, counter: u64) -> f64 {
+    let h = mix64(
+        seed ^ mix64(rule_idx.wrapping_add(0x9E37_79B9)) ^ mix64(counter ^ 0xD1B7_2014),
+    );
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl FaultPlan {
+    /// An empty (all-clean) plan.
+    pub fn named(name: &str, seed: u64) -> FaultPlan {
+        FaultPlan {
+            name: name.to_string(),
+            seed,
+            rules: Vec::new(),
+            partitions: Vec::new(),
+            crashes: Vec::new(),
+        }
+    }
+
+    /// Convenience: a plan that deterministically drops *every* packet of
+    /// one wire kind — the conformance fault proof's broken-replication
+    /// plan (`drop_kind("replicate")` replaced the PR-7
+    /// `fault_drop_replication` flag).
+    pub fn drop_kind(kind: &str) -> FaultPlan {
+        let mut plan = FaultPlan::named(&format!("drop-{kind}"), 0);
+        plan.rules.push(FaultRule {
+            action: FaultAction::Loss,
+            prob: 1.0,
+            src: Selector::Any,
+            dst: Selector::Any,
+            class: None,
+            kind: Some(kind.to_string()),
+            from_ms: 0,
+            until_ms: 0,
+        });
+        plan
+    }
+
+    /// Decide the fate of one packet. `src`/`dst` are roster indices
+    /// (None = endpoint not in the roster), `kind` is
+    /// [`crate::net::wire::NetMsg::kind`] (the sim passes
+    /// `"maintenance"`), `now_ms` is milliseconds since the plan was
+    /// armed, and `counter` is a per-`(src, dst)` packet ordinal — the
+    /// determinism anchor.
+    pub fn verdict(
+        &self,
+        src: Option<usize>,
+        dst: Option<usize>,
+        class: MsgClass,
+        kind: &str,
+        now_ms: u64,
+        counter: u64,
+    ) -> Verdict {
+        let mut v = Verdict::CLEAN;
+        // partitions first: a live partition drops the packet outright
+        for p in &self.partitions {
+            if now_ms < p.from_ms || now_ms >= p.until_ms {
+                continue;
+            }
+            let (Some(s), Some(d)) = (src, dst) else { continue };
+            let cut = (p.a.contains(&s) && p.b.contains(&d))
+                || (p.b.contains(&s) && p.a.contains(&d));
+            if cut {
+                v.drop = true;
+                return v;
+            }
+        }
+        for (i, r) in self.rules.iter().enumerate() {
+            if !r.window_active(now_ms)
+                || !r.src.matches(src)
+                || !r.dst.matches(dst)
+                || r.class.map(|c| c != class).unwrap_or(false)
+                || r.kind.as_ref().map(|k| k != kind).unwrap_or(false)
+            {
+                continue;
+            }
+            if unit(self.seed, i as u64, counter) >= r.prob {
+                continue;
+            }
+            match r.action {
+                FaultAction::Loss => {
+                    v.drop = true;
+                    return v;
+                }
+                FaultAction::Duplicate => v.duplicate = true,
+                FaultAction::Delay { ms } => v.delay_ms += ms,
+                FaultAction::Reorder => {
+                    // hash-drawn 1..=25 ms, same pure-function discipline
+                    let h = mix64(self.seed ^ mix64(i as u64 ^ 0x5EED) ^ mix64(counter));
+                    v.delay_ms += 1 + h % 25;
+                }
+            }
+        }
+        v
+    }
+
+    /// When the last scheduled disturbance ends, in ms since arming —
+    /// `None` if any rule is open-ended (`until_ms == 0`). The chaos
+    /// harness waits this long before judging convergence.
+    pub fn horizon_ms(&self) -> Option<u64> {
+        let mut h = 0u64;
+        for r in &self.rules {
+            if r.until_ms == 0 {
+                return None;
+            }
+            h = h.max(r.until_ms);
+        }
+        for p in &self.partitions {
+            h = h.max(p.until_ms);
+        }
+        for c in &self.crashes {
+            h = h.max(c.at_ms + c.restart_after_ms);
+        }
+        Some(h)
+    }
+
+    /// Fold the verdicts for a synthetic packet population into one
+    /// FNV-1a digest: the "same seed ⇒ byte-identical fault schedule"
+    /// assertion reduces to digest equality.
+    pub fn schedule_digest(&self, packets: u64) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for c in 0..packets {
+            let src = (c % 7) as usize;
+            let dst = ((c / 7) % 7) as usize;
+            let class = MsgClass::ALL[(c % 4) as usize];
+            let now_ms = (c * 37) % 5000;
+            let v = self.verdict(Some(src), Some(dst), class, "maintenance", now_ms, c);
+            let word = ((v.drop as u64) << 1) | (v.duplicate as u64) | (v.delay_ms << 8);
+            h ^= word.wrapping_add(c);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rules = self
+            .rules
+            .iter()
+            .map(|r| {
+                let mut m = vec![
+                    ("action".to_string(), Json::s(r.action.name())),
+                    ("prob".to_string(), Json::f(r.prob)),
+                    ("src".to_string(), r.src.to_json()),
+                    ("dst".to_string(), r.dst.to_json()),
+                ];
+                if let FaultAction::Delay { ms } = r.action {
+                    m.push(("delay_ms".to_string(), Json::u(ms)));
+                }
+                if let Some(c) = r.class {
+                    m.push(("class".to_string(), Json::s(c.name())));
+                }
+                if let Some(k) = &r.kind {
+                    m.push(("kind".to_string(), Json::s(k.clone())));
+                }
+                m.push(("from_ms".to_string(), Json::u(r.from_ms)));
+                m.push(("until_ms".to_string(), Json::u(r.until_ms)));
+                Json::Obj(m)
+            })
+            .collect();
+        let partitions = self
+            .partitions
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    (
+                        "a".to_string(),
+                        Json::Arr(p.a.iter().map(|&i| Json::u(i as u64)).collect()),
+                    ),
+                    (
+                        "b".to_string(),
+                        Json::Arr(p.b.iter().map(|&i| Json::u(i as u64)).collect()),
+                    ),
+                    ("from_ms".to_string(), Json::u(p.from_ms)),
+                    ("until_ms".to_string(), Json::u(p.until_ms)),
+                ])
+            })
+            .collect();
+        let crashes = self
+            .crashes
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("peer".to_string(), Json::u(c.peer as u64)),
+                    ("at_ms".to_string(), Json::u(c.at_ms)),
+                    ("restart_after_ms".to_string(), Json::u(c.restart_after_ms)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::s(FAULT_SCHEMA)),
+            ("name".into(), Json::s(&self.name)),
+            ("seed".into(), Json::u(self.seed)),
+            ("rules".into(), Json::Arr(rules)),
+            ("partitions".into(), Json::Arr(partitions)),
+            ("crashes".into(), Json::Arr(crashes)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    pub fn from_json(doc: &Json) -> Result<FaultPlan> {
+        let schema = doc.get("schema").and_then(|j| j.as_str()).unwrap_or("");
+        if schema != FAULT_SCHEMA {
+            bail!("fault plan schema '{schema}' (expected '{FAULT_SCHEMA}')");
+        }
+        let name = doc.get("name").and_then(|j| j.as_str()).unwrap_or("unnamed").to_string();
+        let seed = match doc.get("seed").and_then(|j| j.as_i64()) {
+            Some(v) if v >= 0 => v as u64,
+            _ => bail!("fault plan field 'seed' missing or negative"),
+        };
+        let u_field = |obj: &Json, f: &str, default: Option<u64>| -> Result<u64> {
+            match obj.get(f).and_then(|j| j.as_i64()) {
+                Some(v) if v >= 0 => Ok(v as u64),
+                None if default.is_some() => Ok(default.unwrap()),
+                _ => bail!("fault plan field '{f}' missing or negative"),
+            }
+        };
+        let idx_list = |obj: &Json, f: &str| -> Result<Vec<usize>> {
+            let Some(arr) = obj.get(f).and_then(|j| j.as_arr()) else {
+                bail!("partition group '{f}' missing or not an array");
+            };
+            arr.iter()
+                .map(|j| match j.as_i64() {
+                    Some(v) if v >= 0 => Ok(v as usize),
+                    _ => bail!("partition group '{f}' holds a non-index"),
+                })
+                .collect()
+        };
+        let mut rules = Vec::new();
+        if let Some(raw) = doc.get("rules").and_then(|j| j.as_arr()) {
+            for (i, r) in raw.iter().enumerate() {
+                let action = match r.get("action").and_then(|j| j.as_str()) {
+                    Some("loss") => FaultAction::Loss,
+                    Some("duplicate") => FaultAction::Duplicate,
+                    Some("delay") => FaultAction::Delay { ms: u_field(r, "delay_ms", None)? },
+                    Some("reorder") => FaultAction::Reorder,
+                    other => bail!("rule {i}: unknown action {other:?}"),
+                };
+                let prob = match r.get("prob").and_then(|j| j.as_f64()) {
+                    Some(p) => p,
+                    None => bail!("rule {i}: 'prob' missing"),
+                };
+                let class = match r.get("class").and_then(|j| j.as_str()) {
+                    None => None,
+                    Some(name) => match MsgClass::from_name(name) {
+                        Some(c) => Some(c),
+                        None => bail!("rule {i}: unknown class '{name}'"),
+                    },
+                };
+                rules.push(FaultRule {
+                    action,
+                    prob,
+                    src: Selector::from_json(r.get("src"))?,
+                    dst: Selector::from_json(r.get("dst"))?,
+                    class,
+                    kind: r.get("kind").and_then(|j| j.as_str()).map(str::to_string),
+                    from_ms: u_field(r, "from_ms", Some(0))?,
+                    until_ms: u_field(r, "until_ms", Some(0))?,
+                });
+            }
+        }
+        let mut partitions = Vec::new();
+        if let Some(raw) = doc.get("partitions").and_then(|j| j.as_arr()) {
+            for p in raw {
+                partitions.push(PartitionSpec {
+                    a: idx_list(p, "a")?,
+                    b: idx_list(p, "b")?,
+                    from_ms: u_field(p, "from_ms", Some(0))?,
+                    until_ms: u_field(p, "until_ms", None)?,
+                });
+            }
+        }
+        let mut crashes = Vec::new();
+        if let Some(raw) = doc.get("crashes").and_then(|j| j.as_arr()) {
+            for c in raw {
+                crashes.push(CrashSpec {
+                    peer: u_field(c, "peer", None)? as usize,
+                    at_ms: u_field(c, "at_ms", None)?,
+                    restart_after_ms: u_field(c, "restart_after_ms", Some(0))?,
+                });
+            }
+        }
+        Ok(FaultPlan { name, seed, rules, partitions, crashes })
+    }
+
+    /// Parse and validate a rendered plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let doc = Json::parse(text).map_err(crate::anyhow::Error::msg)?;
+        let plan = FaultPlan::from_json(&doc)?;
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (i, r) in self.rules.iter().enumerate() {
+            if !(0.0..=1.0).contains(&r.prob) {
+                bail!("rule {i}: prob {} outside [0, 1]", r.prob);
+            }
+            if r.until_ms != 0 && r.until_ms <= r.from_ms {
+                bail!("rule {i}: window [{}, {}) is empty", r.from_ms, r.until_ms);
+            }
+        }
+        for (i, p) in self.partitions.iter().enumerate() {
+            if p.a.is_empty() || p.b.is_empty() {
+                bail!("partition {i}: both groups must be non-empty");
+            }
+            if p.a.iter().any(|x| p.b.contains(x)) {
+                bail!("partition {i}: groups overlap");
+            }
+            if p.until_ms <= p.from_ms {
+                bail!("partition {i}: must heal after it starts (until_ms > from_ms)");
+            }
+        }
+        for (i, c) in self.crashes.iter().enumerate() {
+            if c.peer == 0 {
+                bail!("crash {i}: roster index 0 is the bootstrap peer and cannot crash");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_plan(seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::named("busy", seed);
+        plan.rules.push(FaultRule {
+            action: FaultAction::Loss,
+            prob: 0.3,
+            src: Selector::Any,
+            dst: Selector::Any,
+            class: None,
+            kind: None,
+            from_ms: 0,
+            until_ms: 4000,
+        });
+        plan.rules.push(FaultRule {
+            action: FaultAction::Duplicate,
+            prob: 0.2,
+            src: Selector::Peer(1),
+            dst: Selector::Any,
+            class: Some(MsgClass::Store),
+            kind: None,
+            from_ms: 100,
+            until_ms: 3000,
+        });
+        plan.rules.push(FaultRule {
+            action: FaultAction::Delay { ms: 15 },
+            prob: 0.5,
+            src: Selector::Any,
+            dst: Selector::Peer(2),
+            class: None,
+            kind: Some("replicate".into()),
+            from_ms: 0,
+            until_ms: 2000,
+        });
+        plan.rules.push(FaultRule {
+            action: FaultAction::Reorder,
+            prob: 0.4,
+            src: Selector::Any,
+            dst: Selector::Any,
+            class: Some(MsgClass::Lookup),
+            kind: None,
+            from_ms: 0,
+            until_ms: 4000,
+        });
+        plan.partitions.push(PartitionSpec {
+            a: vec![1, 2],
+            b: vec![0, 3, 4],
+            from_ms: 500,
+            until_ms: 2500,
+        });
+        plan.crashes.push(CrashSpec { peer: 3, at_ms: 1000, restart_after_ms: 1500 });
+        plan
+    }
+
+    #[test]
+    fn roundtrip_render_parse() {
+        let p = busy_plan(7);
+        let text = p.render();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(p, back, "render/parse is lossless");
+        assert_eq!(back.render(), text, "re-render is byte-stable");
+    }
+
+    #[test]
+    fn same_seed_byte_identical_schedule() {
+        // the ISSUE acceptance assertion: the schedule is a pure function
+        // of the seed — equal digests, equal renders
+        let a = busy_plan(42);
+        let b = busy_plan(42);
+        assert_eq!(a.schedule_digest(10_000), b.schedule_digest(10_000));
+        assert_eq!(a.render(), b.render());
+        let c = busy_plan(43);
+        assert_ne!(a.schedule_digest(10_000), c.schedule_digest(10_000), "seed moves the schedule");
+    }
+
+    #[test]
+    fn verdict_is_order_independent() {
+        // evaluating packet #500 first or last changes nothing: no
+        // hidden state
+        let p = busy_plan(9);
+        let probe = |c: u64| p.verdict(Some(1), Some(2), MsgClass::Store, "replicate", 700, c);
+        let forward: Vec<Verdict> = (0..100).map(probe).collect();
+        let backward: Vec<Verdict> = (0..100).rev().map(probe).collect();
+        let mut rev = backward.clone();
+        rev.reverse();
+        assert_eq!(forward, rev);
+    }
+
+    #[test]
+    fn loss_rate_close_to_prob() {
+        let mut p = FaultPlan::named("loss", 5);
+        p.rules.push(FaultRule {
+            action: FaultAction::Loss,
+            prob: 0.3,
+            src: Selector::Any,
+            dst: Selector::Any,
+            class: None,
+            kind: None,
+            from_ms: 0,
+            until_ms: 0,
+        });
+        let n = 20_000;
+        let dropped = (0..n)
+            .filter(|&c| p.verdict(None, None, MsgClass::Maintenance, "x", 0, c).drop)
+            .count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "empirical loss {rate}");
+    }
+
+    #[test]
+    fn partition_is_bidirectional_and_heals() {
+        // partition-only plan: no probabilistic rules muddying the
+        // deterministic assertions
+        let mut p = FaultPlan::named("split", 1);
+        p.partitions.push(PartitionSpec {
+            a: vec![1, 2],
+            b: vec![0, 3, 4],
+            from_ms: 500,
+            until_ms: 2500,
+        });
+        let v = |s, d, t| p.verdict(Some(s), Some(d), MsgClass::Maintenance, "m", t, 0);
+        assert!(v(1, 0, 1000).drop, "a -> b cut");
+        assert!(v(0, 1, 1000).drop, "b -> a cut");
+        assert!(!v(1, 2, 1000).drop, "same side unaffected");
+        assert!(!v(0, 3, 1000).drop, "same side unaffected");
+        assert!(!v(1, 0, 400).drop, "before the window");
+        assert!(!v(1, 0, 2500).drop, "healed at until_ms");
+        // unknown endpoints never match a partition
+        assert!(!p.verdict(None, Some(0), MsgClass::Maintenance, "m", 1000, 0).drop);
+    }
+
+    #[test]
+    fn filters_respected() {
+        let p = busy_plan(3);
+        // rule 2 (delay 15ms) only matches kind "replicate" toward peer 2
+        let hit = (0..500)
+            .map(|c| p.verdict(Some(0), Some(2), MsgClass::Store, "replicate", 100, c))
+            .filter(|v| v.delay_ms >= 15)
+            .count();
+        assert!(hit > 100, "delay rule fires on matching packets ({hit})");
+        let miss = (0..500)
+            .map(|c| p.verdict(Some(0), Some(2), MsgClass::Store, "put", 100, c))
+            .filter(|v| v.delay_ms >= 15)
+            .count();
+        assert_eq!(miss, 0, "wrong kind never delayed");
+        let wrong_dst = (0..500)
+            .map(|c| p.verdict(Some(0), Some(3), MsgClass::Store, "replicate", 100, c))
+            .filter(|v| v.delay_ms >= 15)
+            .count();
+        assert_eq!(wrong_dst, 0, "wrong dst never delayed");
+    }
+
+    #[test]
+    fn drop_kind_is_total_for_that_kind_only() {
+        let p = FaultPlan::drop_kind("replicate");
+        for c in 0..200 {
+            assert!(p.verdict(Some(0), Some(1), MsgClass::Store, "replicate", 0, c).drop);
+            assert!(!p.verdict(Some(0), Some(1), MsgClass::Store, "put", 0, c).drop);
+            assert!(!p.verdict(None, None, MsgClass::Maintenance, "maintenance", 0, c).drop);
+        }
+    }
+
+    #[test]
+    fn horizon_covers_every_window() {
+        let p = busy_plan(1);
+        assert_eq!(p.horizon_ms(), Some(4000));
+        assert_eq!(FaultPlan::drop_kind("x").horizon_ms(), None, "open-ended rule");
+        assert_eq!(FaultPlan::named("empty", 0).horizon_ms(), Some(0));
+    }
+
+    #[test]
+    fn validation_rejects_broken_plans() {
+        let mut p = busy_plan(1);
+        p.rules[0].prob = 1.5;
+        assert!(p.validate().is_err(), "prob out of range");
+        let mut p = busy_plan(1);
+        p.partitions[0].b.clear();
+        assert!(p.validate().is_err(), "empty partition group");
+        let mut p = busy_plan(1);
+        p.partitions[0].until_ms = p.partitions[0].from_ms;
+        assert!(p.validate().is_err(), "partition never heals");
+        let mut p = busy_plan(1);
+        p.partitions[0].b.push(1);
+        assert!(p.validate().is_err(), "overlapping groups");
+        let mut p = busy_plan(1);
+        p.crashes[0].peer = 0;
+        assert!(p.validate().is_err(), "bootstrap peer cannot crash");
+        assert!(FaultPlan::parse("not json").is_err());
+        assert!(FaultPlan::parse("{\"schema\":\"wrong.v9\"}").is_err());
+    }
+}

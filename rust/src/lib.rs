@@ -29,6 +29,11 @@
 //!   workload trace (`d1ht.trace.v1`) replayed through both runtimes,
 //!   with a machine-checked diff of retrievability, get outcomes, and
 //!   per-class traffic (`docs/CONFORMANCE.md`).
+//! * [`fault`] — the deterministic fault-injection plane: seeded
+//!   `d1ht.faults.v1` plans (packet loss/duplication/delay/reorder,
+//!   timed partitions, crash + restart) applied at one choke point per
+//!   runtime, plus the `d1ht chaos` convergence soak
+//!   (`docs/FAULTS.md`).
 //! * [`anyhow`] — vendored minimal `anyhow` stand-in (offline build).
 //!
 //! Layering: python (JAX + Pallas) runs only at build time (`make
@@ -87,6 +92,7 @@ pub mod coordinator;
 pub mod dht;
 pub mod edra;
 pub mod experiments;
+pub mod fault;
 pub mod id;
 pub mod net;
 pub mod obs;

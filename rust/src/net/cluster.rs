@@ -269,7 +269,9 @@ mod tests {
         // anti-entropy re-creates the lost copies
         let pairs = rep.pairs.clone();
         cluster.peers.remove(2).kill();
-        std::thread::sleep(Duration::from_millis(3000));
+        // full backoff schedule before death is declared is ~3.75 s;
+        // leave headroom for detection plus one anti-entropy pass
+        std::thread::sleep(Duration::from_millis(5000));
         let (ok, missing, bad) = cluster.get_pairs(&pairs, 99);
         assert_eq!(bad, 0, "no corrupted values");
         assert!(ok >= 39, "{ok}/40 retrievable after failure (missing {missing})");

@@ -8,6 +8,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::net::SocketAddrV4;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -15,6 +16,7 @@ use crate::anyhow::Result;
 
 use crate::config::{BulkTuning, TransportTuning};
 use crate::edra::Edra;
+use crate::fault::FaultInjector;
 use crate::id::{space, Id};
 use crate::net::bulk::{BulkEndpoint, BulkPayload};
 use crate::net::transport::Transport;
@@ -52,14 +54,15 @@ pub struct NetPeerCfg {
     /// disables the timer entirely; with the global sink at its `Null`
     /// default an enabled timer is still nearly free.
     pub snapshot_every: Option<Duration>,
-    /// **Test-only fault hook.** When set, this peer silently drops every
-    /// outbound `Replicate` push — both write replication and the
-    /// anti-entropy re-push — so a key it owns exists in exactly one
-    /// copy. Used by the conformance harness to prove the differ catches
-    /// real replication bugs (killing the owner then loses the key in the
-    /// net runtime while the sim still retrieves it). Never set this
-    /// outside tests.
-    pub fault_drop_replication: bool,
+    /// Deterministic fault injection. When set, every datagram this peer
+    /// emits is filtered through the shared [`FaultInjector`] at the
+    /// `net/transport.rs` choke point (loss, duplication, delay,
+    /// partition verdicts per the seeded `d1ht.faults.v1` plan). `None`
+    /// (the default) is a clean network. This generalizes the old
+    /// one-off `fault_drop_replication` test flag: a kind-scoped
+    /// [`crate::fault::FaultPlan::drop_kind`]`("replicate")` plan
+    /// expresses the same fault.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for NetPeerCfg {
@@ -73,7 +76,7 @@ impl Default for NetPeerCfg {
             transport: TransportTuning::default(),
             bulk: BulkTuning::default(),
             snapshot_every: None,
-            fault_drop_replication: false,
+            faults: None,
         }
     }
 }
@@ -95,6 +98,18 @@ pub struct PeerStats {
     /// Replicate messages + bulk handoff transfers sent by write
     /// replication and repair.
     pub store_repl_sent: u64,
+    /// Degraded reads this peer repaired inline by pushing the value
+    /// back to the fresh owner (read repair).
+    pub read_repairs: u64,
+    /// Gets answered by a successor-walk candidate *beyond* the R-entry
+    /// replica set (the bounded fallback budget) — §IV graceful
+    /// degradation in action.
+    pub gets_fallback: u64,
+    /// Reliable (seq-carrying) datagrams this peer originated, and how
+    /// many retransmissions the backoff schedule added on top — their
+    /// ratio is the retry amplification the chaos harness bounds.
+    pub reliable_sent: u64,
+    pub retransmits: u64,
     /// Bulk-channel transfer progress (table transfers + key handoffs).
     pub bulk_sends_ok: u64,
     pub bulk_sends_gave_up: u64,
@@ -199,7 +214,10 @@ impl Drop for PeerHandle {
 
 /// Spawn a peer thread; blocks until it has joined (received its table).
 pub fn spawn(cfg: NetPeerCfg) -> Result<PeerHandle> {
-    let transport = Transport::bind_local_with(cfg.transport)?;
+    let mut transport = Transport::bind_local_with(cfg.transport)?;
+    if let Some(f) = &cfg.faults {
+        transport.set_faults(f.clone());
+    }
     let addr = transport.addr();
     let id = space::peer_id(&std::net::SocketAddr::V4(addr));
     let (cmd_tx, cmd_rx) = mpsc::channel();
@@ -257,8 +275,8 @@ struct PeerState {
     bulk_started: BTreeMap<u64, Instant>,
     bulk_send_ns: Hist,
     last_snapshot: Instant,
-    /// Mirrors [`NetPeerCfg::fault_drop_replication`] (test-only).
-    fault_drop_replication: bool,
+    read_repairs: u64,
+    gets_fallback: u64,
 }
 
 /// How long an admitting successor keeps directly forwarding events to a
@@ -268,6 +286,14 @@ const JOIN_GRACE: Duration = Duration::from_secs(5);
 /// Application lookup timeout before the target is presumed departed
 /// (the §IV-C "learn from routing failures" trigger).
 const LOOKUP_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Bounded successor-walk budget for degraded `Get`s: after the R-entry
+/// replica set is exhausted (dead or stale routing entries), the asker
+/// walks up to this many *further* ring successors before reporting a
+/// miss. Keeps §IV failure correction graceful — a stale table degrades
+/// a read to extra hops instead of an error — while the bound keeps a
+/// truly lost key from turning into a ring scan.
+const GET_FALLBACK_HOPS: usize = 2;
 
 impl PeerState {
     fn insert(&mut self, addr: SocketAddrV4) -> bool {
@@ -347,26 +373,24 @@ impl PeerState {
         bytes: &[u8],
     ) {
         let set = replica_set(&self.table, kid, self.replication);
-        if !self.fault_drop_replication {
-            for rid in &set {
-                if *rid == self.me {
-                    continue;
-                }
-                if let Some(&a) = self.members.get(rid) {
-                    let seq = tr.fresh_seq();
-                    tr.send(
-                        a,
-                        &NetMsg::Replicate {
-                            seq,
-                            key: kid.0,
-                            version,
-                            tombstone,
-                            value: bytes.to_vec(),
-                        },
-                    )
-                    .ok();
-                    self.store_repl_sent += 1;
-                }
+        for rid in &set {
+            if *rid == self.me {
+                continue;
+            }
+            if let Some(&a) = self.members.get(rid) {
+                let seq = tr.fresh_seq();
+                tr.send(
+                    a,
+                    &NetMsg::Replicate {
+                        seq,
+                        key: kid.0,
+                        version,
+                        tombstone,
+                        value: bytes.to_vec(),
+                    },
+                )
+                .ok();
+                self.store_repl_sent += 1;
             }
         }
         self.repair_sets.insert(kid, set);
@@ -411,26 +435,24 @@ impl PeerState {
                     let v = self.kv.get(kid).expect("key just listed");
                     (v.version, v.tombstone, v.bytes.clone())
                 };
-                if !self.fault_drop_replication {
-                    for rid in &set {
-                        if *rid == self.me {
-                            continue;
-                        }
-                        if let Some(&a) = self.members.get(rid) {
-                            let seq = tr.fresh_seq();
-                            tr.send(
-                                a,
-                                &NetMsg::Replicate {
-                                    seq,
-                                    key: kid.0,
-                                    version,
-                                    tombstone,
-                                    value: bytes.clone(),
-                                },
-                            )
-                            .ok();
-                            self.store_repl_sent += 1;
-                        }
+                for rid in &set {
+                    if *rid == self.me {
+                        continue;
+                    }
+                    if let Some(&a) = self.members.get(rid) {
+                        let seq = tr.fresh_seq();
+                        tr.send(
+                            a,
+                            &NetMsg::Replicate {
+                                seq,
+                                key: kid.0,
+                                version,
+                                tombstone,
+                                value: bytes.clone(),
+                            },
+                        )
+                        .ok();
+                        self.store_repl_sent += 1;
                     }
                 }
                 self.repair_sets.insert(kid, set);
@@ -553,7 +575,8 @@ fn run_peer(
         bulk_started: BTreeMap::new(),
         bulk_send_ns: Hist::default(),
         last_snapshot: Instant::now(),
-        fault_drop_replication: cfg.fault_drop_replication,
+        read_repairs: 0,
+        gets_fallback: 0,
     };
     let mut bulk = BulkEndpoint::new(cfg.bulk);
 
@@ -563,8 +586,18 @@ fn run_peer(
     if let Some(boot) = cfg.bootstrap {
         tr.send(boot, &NetMsg::JoinReq { joiner: addr }).ok();
         let deadline = Instant::now() + Duration::from_secs(10);
+        let mut last_req = Instant::now();
         let mut joined = false;
         while Instant::now() < deadline && !joined {
+            // JoinReq rides an unreliable datagram; under injected loss
+            // (or a real lossy path) the single shot can vanish, so
+            // re-ask periodically. A duplicate admit is harmless: the
+            // successor's second table stream is idempotent and the
+            // repeated join event is deduplicated by `Table::insert`.
+            if last_req.elapsed() > Duration::from_millis(1000) {
+                tr.send(boot, &NetMsg::JoinReq { joiner: addr }).ok();
+                last_req = Instant::now();
+            }
             let msgs = tr.poll();
             for (from, msg) in msgs {
                 if bulk.handle(&mut tr, from, &msg) {
@@ -675,6 +708,10 @@ fn run_peer(
                     lookups_retried: st.lookups_retried,
                     keys_stored: st.kv.live_len(),
                     store_repl_sent: st.store_repl_sent,
+                    read_repairs: st.read_repairs,
+                    gets_fallback: st.gets_fallback,
+                    reliable_sent: tr.reliable_sent,
+                    retransmits: tr.retransmits,
                     bulk_sends_ok: bulk.counters.sends_completed,
                     bulk_sends_gave_up: bulk.counters.sends_gave_up,
                     bulk_recvs_ok: bulk.counters.recvs_completed,
@@ -955,8 +992,13 @@ fn run_peer(
 /// locally where we are that candidate. `asked` tracks replica IDs by
 /// identity, not position — the candidate list is recomputed per
 /// attempt and may shift under churn, so a positional cursor could
-/// skip the only live holder. Reports a miss when the recomputed set
-/// holds no unasked candidate; each attempt gets its own deadline.
+/// skip the only live holder. Beyond the R-entry replica set the walk
+/// continues for [`GET_FALLBACK_HOPS`] further ring successors (counted
+/// in `gets_fallback`): after churn a stale table's "replica set" can
+/// miss every live holder by an off-by-few, and the bounded extension
+/// is what downgrades that from a miss to a degraded read. Reports a
+/// miss when the budget holds no unasked candidate; each attempt gets
+/// its own deadline.
 fn start_get(
     st: &mut PeerState,
     tr: &mut Transport,
@@ -967,13 +1009,16 @@ fn start_get(
     reply: Sender<Option<Vec<u8>>>,
 ) {
     let kid = Id(key);
-    let cands = replica_set(&st.table, kid, st.replication);
-    for target in cands {
+    let cands = replica_set(&st.table, kid, st.replication + GET_FALLBACK_HOPS);
+    for (i, target) in cands.into_iter().enumerate() {
         if asked.contains(&target) {
             continue;
         }
         if target == st.me {
             if let Some(v) = st.kv.get(kid) {
+                if i >= st.replication {
+                    st.gets_fallback += 1;
+                }
                 // a local tombstone is an authoritative delete: report
                 // absent without consulting (possibly stale) replicas
                 let _ = reply.send(if v.is_live() { Some(v.bytes.clone()) } else { None });
@@ -983,6 +1028,9 @@ fn start_get(
             continue;
         }
         if let Some(&a) = st.members.get(&target) {
+            if i >= st.replication {
+                st.gets_fallback += 1;
+            }
             *nonce = nonce.wrapping_add(1).max(1);
             tr.send(a, &NetMsg::Get { nonce: *nonce, key }).ok();
             asked.push(target);
@@ -1165,6 +1213,33 @@ fn handle_msg(
         NetMsg::GetResp { nonce: n, found, version, value } => {
             if let Some((_, reply, key, asked)) = pending_gets.remove(&n) {
                 if found {
+                    // Read repair: a degraded read answered by someone
+                    // other than the current owner pushes the value back
+                    // to that owner inline, so the *next* read is one-hop
+                    // again without waiting for the anti-entropy period.
+                    // Version-idempotent receivers make a racing repair
+                    // harmless.
+                    if let Some((oid, oaddr)) = st.owner_of(Id(key)) {
+                        if oaddr != from {
+                            if oid == st.me {
+                                st.kv.put(Id(key), version, value.clone());
+                            } else {
+                                let seq = tr.fresh_seq();
+                                tr.send(
+                                    oaddr,
+                                    &NetMsg::Replicate {
+                                        seq,
+                                        key,
+                                        version,
+                                        tombstone: false,
+                                        value: value.clone(),
+                                    },
+                                )
+                                .ok();
+                            }
+                            st.read_repairs += 1;
+                        }
+                    }
                     let _ = reply.send(Some(value));
                 } else if version > 0 {
                     // authoritative tombstone: the key was deleted
@@ -1251,6 +1326,130 @@ fn admit(st: &mut PeerState, tr: &mut Transport, bulk: &mut BulkEndpoint, joiner
 mod tests {
     use super::*;
 
+    /// Minimal single-member `PeerState` for driving `handle_msg` /
+    /// `start_get` directly, without a peer thread.
+    fn bare_state(me: Id, addr: SocketAddrV4) -> PeerState {
+        PeerState {
+            me,
+            addr,
+            members: BTreeMap::from([(me, addr)]),
+            table: Table::from_ids(vec![me]),
+            edra: Edra::new(me, crate::DEFAULT_F, 0.0),
+            predecessor: me,
+            last_pred_seen: Instant::now(),
+            started: Instant::now(),
+            recent_joiners: Vec::new(),
+            departed: BTreeMap::new(),
+            lookups_sent: 0,
+            lookups_one_hop: 0,
+            lookups_retried: 0,
+            replication: 3,
+            kv: KvStore::new(),
+            repair_sets: BTreeMap::new(),
+            bulk_handoff_pending: BTreeMap::new(),
+            handoff_refs: BTreeMap::new(),
+            handoff_failed: BTreeSet::new(),
+            last_repair: Instant::now(),
+            store_repl_sent: 0,
+            bulk_started: BTreeMap::new(),
+            bulk_send_ns: Hist::default(),
+            last_snapshot: Instant::now(),
+            read_repairs: 0,
+            gets_fallback: 0,
+        }
+    }
+
+    #[test]
+    fn degraded_get_response_triggers_inline_read_repair() {
+        let mut asker_tr = Transport::bind_local_with(TransportTuning::default()).unwrap();
+        let mut owner_tr = Transport::bind_local_with(TransportTuning::default()).unwrap();
+        let replica_tr = Transport::bind_local_with(TransportTuning::default()).unwrap();
+        let me = id_of(asker_tr.addr());
+        let mut st = bare_state(me, asker_tr.addr());
+        st.insert(owner_tr.addr());
+        st.insert(replica_tr.addr());
+        let owner_addr = owner_tr.addr();
+        // a key the designated owner owns, answered by the *replica*
+        let key = (0u64..10_000)
+            .map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .find(|&k| st.owner_of(Id(k)).map(|(_, a)| a) == Some(owner_addr))
+            .expect("some key owned by the designated owner");
+        let cfg = NetPeerCfg::default();
+        let mut bulk = BulkEndpoint::new(BulkTuning::default());
+        let mut pending_lookups = BTreeMap::new();
+        let mut pending_writes = BTreeMap::new();
+        let mut pending_gets = BTreeMap::new();
+        let (tx, rx) = mpsc::channel();
+        pending_gets.insert(9, (Instant::now(), tx, key, Vec::new()));
+        let mut nonce = 9u32;
+        handle_msg(
+            &cfg,
+            &mut st,
+            &mut asker_tr,
+            &mut bulk,
+            &mut pending_lookups,
+            &mut pending_writes,
+            &mut pending_gets,
+            &mut nonce,
+            replica_tr.addr(),
+            NetMsg::GetResp { nonce: 9, found: true, version: 42, value: b"fresh".to_vec() },
+        );
+        let got = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.as_deref(), Some(b"fresh".as_slice()), "degraded read still answers");
+        assert_eq!(st.read_repairs, 1, "repair counted");
+        // the fresh owner receives the pushed-back copy
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut repaired = None;
+        while Instant::now() < deadline && repaired.is_none() {
+            for (_, m) in owner_tr.poll() {
+                if let NetMsg::Replicate { key: k, version, tombstone, value, .. } = m {
+                    repaired = Some((k, version, tombstone, value));
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (k, version, tombstone, value) = repaired.expect("owner received the repair push");
+        assert_eq!(k, key);
+        assert_eq!(version, 42);
+        assert!(!tombstone);
+        assert_eq!(value, b"fresh");
+    }
+
+    #[test]
+    fn get_walks_past_stale_entries_within_fallback_budget() {
+        let mut tr = Transport::bind_local_with(TransportTuning::default()).unwrap();
+        let target_tr = Transport::bind_local_with(TransportTuning::default()).unwrap();
+        let me = id_of(tr.addr());
+        let mut st = bare_state(me, tr.addr());
+        st.insert(target_tr.addr());
+        let tid = id_of(target_tr.addr());
+        // three stale routing entries (ids with no reachable address,
+        // like peers that died) wedged between the key and the one live
+        // holder — they exhaust the R=3 replica set, so only the
+        // fallback budget reaches the holder
+        for d in 1u64..=3 {
+            st.table.insert(Id(tid.0.wrapping_sub(d)));
+        }
+        let key = tid.0.wrapping_sub(10);
+        let mut pending_gets = BTreeMap::new();
+        let (tx, _rx) = mpsc::channel();
+        let mut nonce = 0u32;
+        start_get(&mut st, &mut tr, &mut pending_gets, &mut nonce, key, Vec::new(), tx);
+        assert_eq!(st.gets_fallback, 1, "holder reached past the replica set");
+        assert_eq!(pending_gets.len(), 1, "a Get is in flight");
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut asked = false;
+        while Instant::now() < deadline && !asked {
+            for (_, m) in target_tr.poll() {
+                if matches!(m, NetMsg::Get { key: k, .. } if k == key) {
+                    asked = true;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(asked, "the live holder was asked");
+    }
+
     #[test]
     fn single_peer_owns_everything() {
         let p = spawn(NetPeerCfg::default()).expect("spawn");
@@ -1301,7 +1500,9 @@ mod tests {
         // kill one non-boot peer abruptly (SIGKILL half of §VII-A churn)
         peers.remove(2).kill();
         // let retransmit-death detection + anti-entropy re-place copies
-        std::thread::sleep(Duration::from_millis(3000));
+        // (the full backoff schedule runs ~3.75 s before a peer is
+        // declared dead, so give detection + one repair pass headroom)
+        std::thread::sleep(Duration::from_millis(5000));
         let mut found = 0;
         for k in 0u64..20 {
             let origin = &peers[(k % 3) as usize];

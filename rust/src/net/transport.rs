@@ -2,23 +2,44 @@
 //! socket (§III: "any message should be acknowledged to allow for
 //! retransmissions ... implemented over an unreliable protocol like
 //! UDP").
+//!
+//! Retransmission backs off exponentially with decorrelated jitter
+//! ([`TransportTuning::backoff_delay`]): attempt `k` of a message waits
+//! uniform-in-`[hi(k)/2, hi(k)]`, `hi(k) = min(rto_max, rto·backoff^k)`,
+//! with one jitter draw per message so a single message's schedule is
+//! monotone while concurrent messages spread out.
+//!
+//! This is also the socket runtime's **fault choke point**: every
+//! outgoing datagram — first sends, retransmissions, and auto-acks —
+//! funnels through [`Transport::emit`], which consults the optional
+//! [`FaultInjector`] ([`crate::fault`]). Faults act on the *wire*, not
+//! the ledger: a dropped packet is still charged and still tracked for
+//! retransmission, exactly as if the network had eaten it.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, SocketAddrV4, UdpSocket};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::anyhow::{Context, Result};
 
 use crate::config::TransportTuning;
+use crate::fault::FaultInjector;
 use crate::net::wire::{decode, encode, NetMsg};
 use crate::obs::{ClassFlows, MsgClass};
+use crate::util::rng::mix64;
 use crate::util::stats::Traffic;
 
 struct Pending {
     to: SocketAddrV4,
     bytes: Vec<u8>,
-    sent_at: Instant,
+    /// When the next retransmission is due (backoff schedule).
+    next_at: Instant,
     retries: u32,
+    /// Per-message jitter anchor for [`TransportTuning::backoff_delay`].
+    salt: u64,
+    /// Wire kind, re-presented to the fault injector on retransmission.
+    kind: &'static str,
     /// Attribution class of the tracked message, so retransmissions and
     /// the eventual ack are charged to the same budget as the original.
     class: MsgClass,
@@ -40,11 +61,21 @@ pub struct Transport {
     /// age out (callers query within a couple of repair passes).
     gave_up: HashMap<u32, Instant>,
     tuning: TransportTuning,
+    /// Optional fault plane; consulted per outgoing packet in `emit`.
+    faults: Option<Arc<FaultInjector>>,
+    /// Packets a Delay/Reorder verdict postponed, flushed when due.
+    delayed: Vec<(Instant, SocketAddrV4, Vec<u8>)>,
     pub traffic: Traffic,
     /// Same bytes as `traffic`, broken down by [`MsgClass`] — the
     /// per-peer `(direction, msg_class)` attribution table of
     /// [`crate::obs`]. `traffic.bits_* == flows.total().bits_*` always.
     pub flows: ClassFlows,
+    /// Reliable messages first-sent (the retry-amplification
+    /// denominator).
+    pub reliable_sent: u64,
+    /// Retransmissions performed (the amplification numerator's extra
+    /// sends).
+    pub retransmits: u64,
     recv_buf: Vec<u8>,
 }
 
@@ -71,8 +102,12 @@ impl Transport {
             seen: HashMap::new(),
             gave_up: HashMap::new(),
             tuning,
+            faults: None,
+            delayed: Vec::new(),
             traffic: Traffic::default(),
             flows: ClassFlows::default(),
+            reliable_sent: 0,
+            retransmits: 0,
             recv_buf: vec![0u8; 65536],
         })
     }
@@ -85,6 +120,11 @@ impl Transport {
         self.tuning
     }
 
+    /// Route every outgoing packet of this endpoint through `faults`.
+    pub fn set_faults(&mut self, faults: Arc<FaultInjector>) {
+        self.faults = Some(faults);
+    }
+
     /// Diagnostics: current size of the duplicate-suppression map.
     pub fn seen_len(&self) -> usize {
         self.seen.len()
@@ -95,19 +135,70 @@ impl Transport {
         self.next_seq
     }
 
+    /// The one place bytes leave the socket — the fault choke point.
+    /// The verdict acts on the wire only: a dropped packet was already
+    /// charged by the caller and (if reliable) stays tracked for
+    /// retransmission; a duplicate's extra copy is not re-charged (the
+    /// *network* copied it, the peer paid once); a delayed packet is
+    /// staged and flushed by `poll`/`tick_retransmit` without
+    /// re-judging.
+    fn emit(&mut self, to: SocketAddrV4, bytes: &[u8], class: MsgClass, kind: &'static str) {
+        let verdict = match &self.faults {
+            Some(f) => f.verdict(self.addr.port(), to.port(), class, kind),
+            None => crate::fault::Verdict::CLEAN,
+        };
+        if verdict.drop {
+            return;
+        }
+        if verdict.delay_ms > 0 {
+            let due = Instant::now() + Duration::from_millis(verdict.delay_ms);
+            self.delayed.push((due, to, bytes.to_vec()));
+            if verdict.duplicate {
+                self.delayed.push((due, to, bytes.to_vec()));
+            }
+            return;
+        }
+        let _ = self.sock.send_to(bytes, to); // best-effort; RTO covers loss
+        if verdict.duplicate {
+            let _ = self.sock.send_to(bytes, to);
+        }
+    }
+
+    /// Release fault-delayed packets that are now due.
+    fn flush_delayed(&mut self) {
+        if self.delayed.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= now {
+                let (_, to, bytes) = self.delayed.swap_remove(i);
+                let _ = self.sock.send_to(&bytes, to);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// Send a message; reliable ones are tracked for retransmission.
     pub fn send(&mut self, to: SocketAddrV4, msg: &NetMsg) -> Result<()> {
         let bytes = encode(msg);
         let class = msg.class();
+        let kind = msg.kind();
         // charge the Figure-2 style wire size (payload + ipv4/udp headers)
         let bits = (bytes.len() as u64 + 28) * 8;
         self.traffic.send(bits);
         self.flows.out(class, bits);
-        let _ = self.sock.send_to(&bytes, to); // best-effort; RTO covers loss
+        self.emit(to, &bytes, class, kind);
         if let Some(seq) = msg.reliable_seq() {
+            self.reliable_sent += 1;
+            // decorrelate jitter across endpoints sharing seq numbers
+            let salt = mix64(seq as u64 ^ ((self.addr.port() as u64) << 32));
+            let next_at = Instant::now() + self.tuning.backoff_delay(0, salt);
             self.pending.insert(
                 seq,
-                Pending { to, bytes, sent_at: Instant::now(), retries: 0, class },
+                Pending { to, bytes, next_at, retries: 0, salt, kind, class },
             );
         }
         Ok(())
@@ -117,6 +208,7 @@ impl Transport {
     /// returned (with duplicates of reliable messages suppressed and
     /// auto-acked).
     pub fn poll(&mut self) -> Vec<(SocketAddrV4, NetMsg)> {
+        self.flush_delayed();
         let mut out = Vec::new();
         loop {
             match self.sock.recv_from(&mut self.recv_buf) {
@@ -141,12 +233,15 @@ impl Transport {
                         other => {
                             self.flows.inp(other.class(), bits_in);
                             if let Some(seq) = other.reliable_seq() {
-                                // ack immediately; drop duplicates
+                                // ack immediately; drop duplicates. The
+                                // ack is a packet too: it rides through
+                                // the fault choke point (a partition
+                                // must cut both directions).
                                 let ack = encode(&NetMsg::Ack { of_seq: seq });
                                 let ack_bits = (ack.len() as u64 + 28) * 8;
                                 self.traffic.send(ack_bits);
                                 self.flows.out(other.class(), ack_bits);
-                                let _ = self.sock.send_to(&ack, from);
+                                self.emit(from, &ack, other.class(), "ack");
                                 let key = (from, seq);
                                 let now = Instant::now();
                                 if self.seen.insert(key, now).is_some() {
@@ -183,26 +278,33 @@ impl Transport {
         }
     }
 
-    /// Retransmit overdue reliable messages; returns destinations that
-    /// exhausted their retries (presumed dead).
+    /// Retransmit overdue reliable messages on their backoff schedules;
+    /// returns destinations that exhausted their retries (presumed
+    /// dead).
     pub fn tick_retransmit(&mut self) -> Vec<SocketAddrV4> {
+        self.flush_delayed();
         let now = Instant::now();
         let mut dead = Vec::new();
         let mut drop_seqs = Vec::new();
+        let mut resend: Vec<(SocketAddrV4, Vec<u8>, MsgClass, &'static str)> = Vec::new();
         for (&seq, p) in self.pending.iter_mut() {
-            if now.duration_since(p.sent_at) >= self.tuning.rto {
+            if now >= p.next_at {
                 if p.retries >= self.tuning.max_retries {
                     dead.push(p.to);
                     drop_seqs.push(seq);
                 } else {
                     p.retries += 1;
-                    p.sent_at = now;
-                    let bits = (p.bytes.len() as u64 + 28) * 8;
-                    self.traffic.send(bits);
-                    self.flows.out(p.class, bits);
-                    let _ = self.sock.send_to(&p.bytes, p.to);
+                    p.next_at = now + self.tuning.backoff_delay(p.retries, p.salt);
+                    resend.push((p.to, p.bytes.clone(), p.class, p.kind));
                 }
             }
+        }
+        for (to, bytes, class, kind) in resend {
+            let bits = (bytes.len() as u64 + 28) * 8;
+            self.traffic.send(bits);
+            self.flows.out(class, bits);
+            self.retransmits += 1;
+            self.emit(to, &bytes, class, kind);
         }
         for s in drop_seqs {
             self.pending.remove(&s);
@@ -246,6 +348,7 @@ impl Transport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{FaultAction, FaultPlan, FaultRule, Selector};
 
     #[test]
     fn two_transports_exchange_and_ack() {
@@ -258,6 +361,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(a.pending_count(), 1);
+        assert_eq!(a.reliable_sent, 1);
         // b receives + auto-acks
         let mut got = Vec::new();
         for _ in 0..100 {
@@ -277,6 +381,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         assert_eq!(a.pending_count(), 0, "ack clears pending");
+        assert_eq!(a.retransmits, 0, "clean link needs no retransmissions");
     }
 
     #[test]
@@ -285,6 +390,7 @@ mod tests {
         let b = Transport::bind_local().unwrap();
         a.send(b.addr(), &NetMsg::Lookup { nonce: 1, target: 42 }).unwrap();
         assert_eq!(a.pending_count(), 0);
+        assert_eq!(a.reliable_sent, 0);
     }
 
     #[test]
@@ -297,9 +403,12 @@ mod tests {
         }; // socket dropped here
         let seq = a.fresh_seq();
         a.send(dead_dst, &NetMsg::LeaveNotice { seq, leaver: dead_dst }).unwrap();
+        // the backoff schedule stretches detection to at most
+        // total_retry_budget; poll on a wall deadline past it
+        let deadline = Instant::now() + a.tuning().total_retry_budget() + Duration::from_secs(1);
         let mut dead = Vec::new();
-        for _ in 0..(a.tuning().max_retries + 2) {
-            std::thread::sleep(a.tuning().rto);
+        while Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(25));
             dead = a.tick_retransmit();
             a.poll();
             if !dead.is_empty() {
@@ -308,6 +417,7 @@ mod tests {
         }
         assert_eq!(dead, vec![dead_dst]);
         assert_eq!(a.pending_count(), 0);
+        assert_eq!(a.retransmits as u32, a.tuning().max_retries, "full budget spent");
     }
 
     #[test]
@@ -324,7 +434,12 @@ mod tests {
 
     #[test]
     fn tuning_is_configurable() {
-        let t = TransportTuning { rto: Duration::from_millis(30), max_retries: 1, ..Default::default() };
+        let t = TransportTuning {
+            rto: Duration::from_millis(30),
+            rto_max: Duration::from_millis(60),
+            max_retries: 1,
+            ..Default::default()
+        };
         let mut a = Transport::bind_local_with(t).unwrap();
         assert_eq!(a.tuning().rto, Duration::from_millis(30));
         // a 1-retry transport gives up fast on a dead destination
@@ -332,8 +447,8 @@ mod tests {
         let seq = a.fresh_seq();
         a.send(dead_dst, &NetMsg::LeaveNotice { seq, leaver: dead_dst }).unwrap();
         let mut dead = Vec::new();
-        for _ in 0..10 {
-            std::thread::sleep(Duration::from_millis(35));
+        for _ in 0..20 {
+            std::thread::sleep(Duration::from_millis(25));
             dead = a.tick_retransmit();
             if !dead.is_empty() {
                 break;
@@ -400,5 +515,104 @@ mod tests {
         assert_eq!(a.flows.class(MsgClass::Bulk).bits_out, 100 * 8);
         assert_eq!(a.flows.class(MsgClass::Bulk).bits_in, 40 * 8);
         assert!(b.flows.class(MsgClass::Maintenance).bits_out > 0, "auto-ack charged");
+    }
+
+    /// Satellite proof: 30% injected loss + 25% duplication on the
+    /// sender, and the application above still sees every message exactly
+    /// once — backoff retransmission recovers the losses, the `seen` map
+    /// eats the duplicates.
+    #[test]
+    fn lossy_link_delivers_exactly_once() {
+        let any = |action, prob| FaultRule {
+            action,
+            prob,
+            src: Selector::Any,
+            dst: Selector::Any,
+            class: None,
+            kind: None,
+            from_ms: 0,
+            until_ms: 0,
+        };
+        let mut plan = FaultPlan::named("lossy", 90);
+        plan.rules.push(any(FaultAction::Loss, 0.3));
+        plan.rules.push(any(FaultAction::Duplicate, 0.25));
+        let inj = crate::fault::FaultInjector::new(plan);
+        inj.arm();
+
+        // generous retry budget so 0.3^(retries+1) give-up odds are nil
+        let tuning = TransportTuning {
+            rto: Duration::from_millis(20),
+            rto_max: Duration::from_millis(60),
+            max_retries: 10,
+            ..Default::default()
+        };
+        let mut a = Transport::bind_local_with(tuning).unwrap();
+        a.set_faults(inj.clone());
+        let mut b = Transport::bind_local().unwrap();
+
+        const N: u32 = 100;
+        for i in 0..N {
+            let seq = a.fresh_seq();
+            a.send(
+                b.addr(),
+                &NetMsg::Replicate {
+                    seq,
+                    key: i as u64,
+                    version: 1,
+                    tombstone: false,
+                    value: vec![i as u8; 8],
+                },
+            )
+            .unwrap();
+        }
+        let mut keys = std::collections::HashSet::new();
+        let deadline = Instant::now() + Duration::from_secs(8);
+        while Instant::now() < deadline && (keys.len() < N as usize || a.pending_count() > 0) {
+            a.tick_retransmit();
+            a.poll();
+            for (_, msg) in b.poll() {
+                if let NetMsg::Replicate { key, .. } = msg {
+                    assert!(keys.insert(key), "duplicate delivery of key {key}");
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(keys.len(), N as usize, "every message delivered");
+        assert_eq!(a.pending_count(), 0, "every message acked");
+        assert!(a.retransmits > 0, "loss actually forced retransmissions");
+        assert!(inj.drops() > 0, "plan injected losses");
+        assert!(inj.duplicates() > 0, "plan injected duplicates");
+    }
+
+    /// A delay rule postpones but never loses packets; flushes happen on
+    /// the sender's own poll/tick cadence.
+    #[test]
+    fn delayed_packets_flush_and_arrive() {
+        let mut plan = FaultPlan::named("slow", 4);
+        plan.rules.push(FaultRule {
+            action: FaultAction::Delay { ms: 30 },
+            prob: 1.0,
+            src: Selector::Any,
+            dst: Selector::Any,
+            class: None,
+            kind: None,
+            from_ms: 0,
+            until_ms: 0,
+        });
+        let inj = crate::fault::FaultInjector::new(plan);
+        inj.arm();
+        let mut a = Transport::bind_local().unwrap();
+        a.set_faults(inj.clone());
+        let mut b = Transport::bind_local().unwrap();
+        a.send(b.addr(), &NetMsg::Probe { nonce: 9 }).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        a.poll();
+        assert!(b.poll().is_empty(), "not delivered before the delay elapses");
+        std::thread::sleep(Duration::from_millis(40));
+        a.poll(); // flushes the staged packet
+        std::thread::sleep(Duration::from_millis(10));
+        let got = b.poll();
+        assert_eq!(got.len(), 1, "delayed packet arrives after the hold");
+        assert_eq!(inj.delays(), 1);
     }
 }

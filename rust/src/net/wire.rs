@@ -119,6 +119,39 @@ impl NetMsg {
         }
     }
 
+    /// Stable lowercase name of the wire variant — the `kind` filter key
+    /// of the fault plane ([`crate::fault`]): a `d1ht.faults.v1` rule
+    /// with `"kind": "replicate"` matches exactly the datagrams this
+    /// returns `"replicate"` for. Auto-generated acks inside the
+    /// transport use `"ack"`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            NetMsg::Maintenance { .. } => "maintenance",
+            NetMsg::Ack { .. } => "ack",
+            NetMsg::Lookup { .. } => "lookup",
+            NetMsg::LookupResp { .. } => "lookup_resp",
+            NetMsg::JoinReq { .. } => "join_req",
+            NetMsg::Table { .. } => "table",
+            NetMsg::LeaveNotice { .. } => "leave_notice",
+            NetMsg::Probe { .. } => "probe",
+            NetMsg::ProbeReply { .. } => "probe_reply",
+            NetMsg::Put { .. } => "put",
+            NetMsg::PutResp { .. } => "put_resp",
+            NetMsg::Get { .. } => "get",
+            NetMsg::GetResp { .. } => "get_resp",
+            NetMsg::Remove { .. } => "remove",
+            NetMsg::RemoveResp { .. } => "remove_resp",
+            NetMsg::Replicate { .. } => "replicate",
+            NetMsg::Handoff { .. } => "handoff",
+            NetMsg::BulkOffer { .. } => "bulk_offer",
+            NetMsg::BulkAccept { .. } => "bulk_accept",
+            NetMsg::BulkData { .. } => "bulk_data",
+            NetMsg::BulkAck { .. } => "bulk_ack",
+            NetMsg::BulkNack { .. } => "bulk_nack",
+            NetMsg::BulkDone { .. } => "bulk_done",
+        }
+    }
+
     /// Traffic class for per-peer attribution ([`crate::obs`]): which of
     /// the paper's budgets this datagram counts against. Acks are charged
     /// to the class of the message they acknowledge (the transport knows
@@ -510,6 +543,45 @@ mod tests {
         );
         assert_eq!(NetMsg::Lookup { nonce: 1, target: 2 }.reliable_seq(), None);
         assert_eq!(NetMsg::Ack { of_seq: 1 }.reliable_seq(), None);
+    }
+
+    #[test]
+    fn kinds_unique_and_snake_case() {
+        // one exemplar per variant; kind() must be injective so fault
+        // rules can target any single wire kind
+        let all = vec![
+            NetMsg::Maintenance { seq: 0, ttl: 0, joins: vec![], leaves: vec![] },
+            NetMsg::Ack { of_seq: 0 },
+            NetMsg::Lookup { nonce: 0, target: 0 },
+            NetMsg::LookupResp { nonce: 0, owner: a(1) },
+            NetMsg::JoinReq { joiner: a(1) },
+            NetMsg::Table { seq: 0, addrs: vec![] },
+            NetMsg::LeaveNotice { seq: 0, leaver: a(1) },
+            NetMsg::Probe { nonce: 0 },
+            NetMsg::ProbeReply { nonce: 0 },
+            NetMsg::Put { nonce: 0, key: 0, value: vec![] },
+            NetMsg::PutResp { nonce: 0, ok: true },
+            NetMsg::Get { nonce: 0, key: 0 },
+            NetMsg::GetResp { nonce: 0, found: false, version: 0, value: vec![] },
+            NetMsg::Remove { nonce: 0, key: 0 },
+            NetMsg::RemoveResp { nonce: 0, ok: true },
+            NetMsg::Replicate { seq: 0, key: 0, version: 0, tombstone: false, value: vec![] },
+            NetMsg::Handoff { seq: 0, pairs: vec![] },
+            NetMsg::BulkOffer { seq: 0, id: 0, kind: 0, total: 0, crc: 0, tcp_port: 0 },
+            NetMsg::BulkAccept { id: 0, from: 0 },
+            NetMsg::BulkData { id: 0, offset: 0, crc: 0, bytes: vec![] },
+            NetMsg::BulkAck { id: 0, next: 0 },
+            NetMsg::BulkNack { id: 0, from: 0 },
+            NetMsg::BulkDone { seq: 0, id: 0, ok: true },
+        ];
+        let mut kinds: Vec<&str> = all.iter().map(|m| m.kind()).collect();
+        assert!(kinds.iter().all(|k| k
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c == '_')));
+        kinds.sort_unstable();
+        let n = kinds.len();
+        kinds.dedup();
+        assert_eq!(kinds.len(), n, "kind() is injective");
     }
 
     #[test]

@@ -59,6 +59,14 @@ pub mod names {
             "Per-key replica re-creations sent by the anti-entropy pass";
         counter STORE_BULK_HANDOFFS = "store.bulk_handoffs",
             "Batched owner-handoff transfers sent over the bulk channel";
+        counter STORE_READ_REPAIRS = "store.read_repairs",
+            "Degraded reads repaired inline by pushing the value back to the fresh owner";
+        counter FAULT_PACKETS_DROPPED = "fault.packets_dropped",
+            "Packets vanished by an armed fault plan (loss rules + live partitions)";
+        counter FAULT_PACKETS_DUPLICATED = "fault.packets_duplicated",
+            "Extra packet copies emitted by an armed fault plan";
+        counter FAULT_PACKETS_DELAYED = "fault.packets_delayed",
+            "Packets postponed by an armed fault plan (delay/reorder rules)";
         gauge PEERS_LIVE = "peers.live",
             "Live peer population at snapshot time";
         gauge WINDOW_SECS = "window.secs",

@@ -49,6 +49,12 @@ impl MsgClass {
         }
     }
 
+    /// Inverse of [`MsgClass::name`] — used by the fault plane to parse
+    /// `class` selectors out of a `d1ht.faults.v1` plan.
+    pub fn from_name(name: &str) -> Option<MsgClass> {
+        MsgClass::ALL.iter().copied().find(|c| c.name() == name)
+    }
+
     fn idx(self) -> usize {
         match self {
             MsgClass::Maintenance => 0,
@@ -302,6 +308,14 @@ macro_rules! metric_catalog {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn class_from_name_roundtrips() {
+        for c in MsgClass::ALL {
+            assert_eq!(MsgClass::from_name(c.name()), Some(c));
+        }
+        assert_eq!(MsgClass::from_name("nonsense"), None);
+    }
 
     #[test]
     fn counters_and_gauges() {

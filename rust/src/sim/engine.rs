@@ -82,6 +82,15 @@ impl<E> Queue<E> {
         self.at(self.now + dt.max(0.0), ev);
     }
 
+    /// Schedule a whole timeline of `(at, ev)` pairs in one call —
+    /// insertion order is the tie-break, so a pre-sorted timeline (e.g.
+    /// a fault plan's crash schedule) replays identically every run.
+    pub fn schedule_all(&mut self, timeline: impl IntoIterator<Item = (f64, E)>) {
+        for (at, ev) in timeline {
+            self.at(at, ev);
+        }
+    }
+
     fn pop_due(&mut self, until: f64) -> Option<(f64, E)> {
         if self.heap.peek().map(|t| t.at <= until).unwrap_or(false) {
             let t = self.heap.pop().unwrap();
@@ -205,6 +214,15 @@ mod tests {
         assert_eq!(snaps.len(), 6, "ceil(15/2.5) chunks");
         assert_eq!(snaps.last().unwrap().0, 15.0);
         assert!(snaps.windows(2).all(|w| w[0].1 <= w[1].1), "monotone progress");
+    }
+
+    #[test]
+    fn schedule_all_preserves_timeline_order() {
+        let mut w = Recorder { seen: vec![] };
+        let mut q = Queue::new();
+        q.schedule_all(vec![(2.0, 5), (2.0, 6), (0.5, 4)]);
+        run_until(&mut w, &mut q, 10.0);
+        assert_eq!(w.seen, vec![(0.5, 4), (2.0, 5), (2.0, 6)]);
     }
 
     #[test]

@@ -39,6 +39,9 @@ pub struct StoreCounters {
     /// (one per destination per repair pass, charged
     /// `sizes::handoff_bits` — the sim twin of `net/bulk.rs` streaming).
     pub bulk_handoffs: u64,
+    /// Degraded reads that pushed the value back to the fresh owner
+    /// inline, so the next read of the key is one-hop again.
+    pub read_repairs: u64,
     /// Put/Get/GetResp wire traffic (client-facing).
     pub traffic: Traffic,
     /// Replicate/Handoff wire traffic (replication + churn repair).
@@ -80,6 +83,7 @@ impl StoreCounters {
         self.repair_transfers += o.repair_transfers;
         self.handoff_transfers += o.handoff_transfers;
         self.bulk_handoffs += o.bulk_handoffs;
+        self.read_repairs += o.read_repairs;
         self.traffic.merge(&o.traffic);
         self.repair_traffic.merge(&o.repair_traffic);
     }

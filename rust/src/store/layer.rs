@@ -316,6 +316,23 @@ impl StoreLayer {
             self.obs.charge_out(owner.0, MsgClass::Store, miss_bits);
             self.obs.charge_in(replica.0, MsgClass::Store, get_bits);
             self.obs.charge_out(replica.0, MsgClass::Store, hit_bits);
+            // read repair: the replica that served the degraded read
+            // pushes the value straight back to the fresh owner inline,
+            // so the next read of this key is one-hop again without
+            // waiting for the anti-entropy pass. Charged like any other
+            // replication datagram (+ ack) so the per-peer out==in
+            // balance holds.
+            let repl_bits =
+                bits(MessageBody::Replicate { key: rec.id, version: rec.version, value_bits: vb });
+            charge(&mut self.counters.repair_traffic, repl_bits);
+            charge(&mut self.counters.repair_traffic, sizes::V_A);
+            self.obs.charge_out(replica.0, MsgClass::Store, repl_bits);
+            self.obs.charge_in(owner.0, MsgClass::Store, repl_bits);
+            self.obs.charge_out(owner.0, MsgClass::Store, sizes::V_A);
+            self.obs.charge_in(replica.0, MsgClass::Store, sizes::V_A);
+            self.counters.read_repairs += 1;
+            self.obs.inc(names::STORE_READ_REPAIRS, 1);
+            self.records[idx].holders.insert(0, owner);
             if absent { GetOutcome::Miss } else { GetOutcome::Hit }
         } else {
             self.counters.gets_failed += 1;
@@ -630,5 +647,35 @@ mod tests {
             s.workload_step(&t1);
         }
         assert_eq!(s.counters.gets_degraded, before, "repair restored one-hop reads");
+    }
+
+    #[test]
+    fn read_repair_promotes_owner_inline() {
+        // Same ring shape as above: 2Q joins and owns (Q, 2Q] without
+        // holding it. A single degraded read must push the value back to
+        // the fresh owner so the *next* read of that key is one-hop,
+        // with no anti-entropy pass in between.
+        const Q: u64 = u64::MAX / 8;
+        let t0 = table(&[Q, 3 * Q, 5 * Q]);
+        let mut s = layer(60, 2);
+        s.preload(&t0);
+        let t1 = table(&[Q, 2 * Q, 3 * Q, 5 * Q]);
+        let owner = Id(2 * Q);
+        let idx = (0..s.records.len())
+            .find(|&i| {
+                let r = &s.records[i];
+                t1.successor(r.id) == Some(owner) && !r.holders.contains(&owner)
+            })
+            .expect("some preloaded key now belongs to the joiner");
+        assert_eq!(s.op_get(&t1, idx), GetOutcome::Hit);
+        assert_eq!(s.counters.gets_degraded, 1, "first read takes the extra hop");
+        assert_eq!(s.counters.read_repairs, 1, "and repairs the owner inline");
+        assert!(s.records[idx].holders.contains(&owner), "owner promoted to holder");
+        assert_eq!(s.op_get(&t1, idx), GetOutcome::Hit);
+        assert_eq!(s.counters.gets_one_hop, 1, "second read is one-hop again");
+        assert_eq!(s.counters.read_repairs, 1, "no further repair needed");
+        assert_eq!(s.obs.counter(names::STORE_READ_REPAIRS), 1);
+        // the repair push itself is booked as replication traffic
+        assert!(s.counters.repair_traffic.bits_out > 0, "repair push was charged");
     }
 }

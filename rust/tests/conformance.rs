@@ -1,18 +1,20 @@
 //! Tier-1 gate for the sim/net conformance harness: replay the golden
 //! traces through BOTH runtimes and machine-check the diff, then prove
-//! the harness has teeth by arming the net runtime's test-only
-//! replication fault and demanding a divergence.
+//! the harness has teeth by arming a replicate-dropping [`FaultPlan`]
+//! on the net runtime and demanding a divergence.
 //!
 //! The socket side spins real UDP peers on loopback with wall-clock
 //! settle windows, so these tests are seconds-long by design — they are
 //! the cross-runtime ground truth everything else leans on.
 
 use d1ht::conformance::{
-    diff_reports, explain, run_trace, run_trace_with_fault, Divergence, Trace, TraceOp, TraceStep,
+    diff_reports, explain, run_trace, run_trace_with_faults, Divergence, Trace, TraceOp, TraceStep,
 };
+use d1ht::fault::FaultPlan;
 
 const CHURN_ZIPF: &str = include_str!("traces/churn_zipf.json");
 const STEADY_SMALL: &str = include_str!("traces/steady_small.json");
+const PARTITION_HEAL: &str = include_str!("traces/partition_heal.json");
 
 #[test]
 fn golden_traces_parse_and_validate() {
@@ -24,6 +26,10 @@ fn golden_traces_parse_and_validate() {
     let steady = Trace::parse(STEADY_SMALL).expect("steady_small parses");
     assert_eq!(steady.name, "steady_small");
     assert_eq!(steady.peers, 4);
+    let ph = Trace::parse(PARTITION_HEAL).expect("partition_heal parses");
+    assert_eq!(ph.name, "partition_heal");
+    assert_eq!(ph.peers, 8);
+    assert_eq!(ph.keys, 24);
 }
 
 #[test]
@@ -86,10 +92,26 @@ fn fault_trace() -> Trace {
     trace
 }
 
+/// Two abrupt failures followed by two joins and a full read sweep —
+/// the recovery half of a partition: peers vanish, new blood arrives,
+/// and every surviving key must still read back identically in both
+/// runtimes once the roster heals (R = 3 keeps the sweep lossless).
+#[test]
+fn partition_heal_conforms() {
+    let trace = Trace::parse(PARTITION_HEAL).unwrap();
+    let outcome = run_trace(&trace).expect("both replays complete");
+    if let Some(d) = &outcome.divergence {
+        panic!("{}", explain(d, &outcome.sim, &outcome.net));
+    }
+    assert_eq!(outcome.sim.digest, outcome.net.digest, "retrievable-key digests agree");
+    assert!((outcome.sim.durability - 1.0).abs() < 1e-12, "R=3 + settles: nothing lost");
+}
+
 #[test]
 fn broken_replication_is_detected() {
     let trace = fault_trace();
-    let broken = run_trace_with_fault(&trace, true).expect("replays still complete");
+    let plan = FaultPlan::drop_kind("replicate");
+    let broken = run_trace_with_faults(&trace, Some(&plan)).expect("replays still complete");
     let d = broken.divergence.expect("broken replication must diverge");
     let text = explain(&d, &broken.sim, &broken.net);
     assert!(

@@ -6,6 +6,7 @@
 //! d1ht analyze --n <peers> --savg-min <mins> [--quarantine <frac>]
 //! d1ht serve --peers <n> [--lookups <k>] [--churn-steps <k>]
 //! d1ht sim --peers <n> --savg-min <mins> [--secs <s>] [--quarantine-tq <s>]
+//!          [--scale-smoke [--wall-budget-secs <s>] [--rss-budget-mb <m>]]
 //! d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--secs <s>]
 //! d1ht report [--peers <n>] [--secs <s>] [--seed <s>] [--trace drop|stderr]
 //! d1ht bench [--smoke] [--dir <d>] [--label <l>] [--verify] [--min-runs <n>]
@@ -103,12 +104,16 @@ d1ht — single-hop DHT (Monnerat & Amorim, CCPE 2014) reproduction
 USAGE:
   d1ht exp <id|all> [--paper] [--csv]    regenerate a paper table/figure
        ids: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8
-            ablation-aggregation ablation-id-reuse
+            store scale ablation-aggregation ablation-id-reuse
   d1ht analyze --n <peers> --savg-min <mins>
                                          closed-form overheads for one point
   d1ht serve --peers <n> [--lookups <k>] real socket cluster on loopback
   d1ht sim --peers <n> --savg-min <m> [--secs <s>] [--quarantine-tq <s>]
-                                         one simulated D1HT run
+           [--scale-smoke [--wall-budget-secs <s>] [--rss-budget-mb <m>]]
+                                         one simulated D1HT run; with
+                                         --scale-smoke, assert wall-clock,
+                                         peak-RSS and shared-routing-state
+                                         budgets (the CI scale gate)
   d1ht store --peers <n> [--keys <k>] [--replicas <r>] [--savg-min <m>]
              [--secs <s>] [--repair-secs <s>]
                                          replicated KV durability run
@@ -238,6 +243,16 @@ fn cmd_serve(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
     Ok(())
 }
 
+/// Peak resident-set size of this process in MiB (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux — callers skip the RSS budget
+/// assertion there rather than faking a number.
+fn peak_rss_mib() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
 fn cmd_sim(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
     use crate::dht::d1ht::{D1htCfg, D1htSim};
     use crate::sim::churn::ChurnCfg;
@@ -245,35 +260,92 @@ fn cmd_sim(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
 
     let n = args.get_usize("peers", 1000)?;
     let savg = args.get_f64("savg-min", 174.0)? * 60.0;
-    let secs = args.get_f64("secs", 600.0)?;
+    let scale_smoke = args.has("scale-smoke");
+    // the scale smoke is a budgeted CI gate, not a paper run: short
+    // settle + window keep the wall-clock in minutes at 10^5 peers
+    let (settle, default_secs) = if scale_smoke { (30.0, 60.0) } else { (120.0, 600.0) };
+    let secs = args.get_f64("secs", default_secs)?;
     let tq = args.get("quarantine-tq").map(|v| v.parse()).transpose().context("--quarantine-tq")?;
     let cfg = D1htCfg {
         churn: ChurnCfg::exponential(savg),
         quarantine_tq: tq,
-        lookup_rate: 1.0,
+        lookup_rate: if scale_smoke { 0.1 } else { 1.0 },
         ..Default::default()
     };
+    let wall_start = std::time::Instant::now();
     let mut sim = D1htSim::new(cfg);
     let mut q = Queue::new();
     sim.bootstrap(n, &mut q);
-    run_until(&mut sim, &mut q, 120.0);
+    run_until(&mut sim, &mut q, settle);
     sim.begin_recording(q.now());
     sim.start_lookups(&mut q);
-    run_until(&mut sim, &mut q, 120.0 + secs);
+    run_until(&mut sim, &mut q, settle + secs);
     sim.end_recording(q.now());
+    sim.note_queue_depth(q.peak_len());
+    let wall = wall_start.elapsed().as_secs_f64();
     let m = sim.metrics();
+    let measured_bps = sim.per_peer_maintenance_bps();
+    let model_bps = D1htModel::default().bandwidth_bps(sim.size().max(2) as f64, savg);
     let mut t = Table::new(
         format!("simulated D1HT run (n={n}, Savg={:.0}min, {secs}s window)", savg / 60.0),
         &["metric", "value"],
     );
     t.row(vec!["population".into(), sim.size().to_string()]);
-    t.row(vec!["per-peer maintenance".into(), bps(sim.per_peer_maintenance_bps())]);
-    t.row(vec!["aggregate maintenance".into(), bps(sim.per_peer_maintenance_bps() * sim.size() as f64)]);
+    t.row(vec!["per-peer maintenance".into(), bps(measured_bps)]);
+    t.row(vec!["per-peer maintenance (Eq. IV model)".into(), bps(model_bps)]);
+    t.row(vec!["aggregate maintenance".into(), bps(measured_bps * sim.size() as f64)]);
     t.row(vec!["lookups".into(), m.lookups_total().to_string()]);
     t.row(vec!["one-hop %".into(), format!("{:.3}", m.one_hop_ratio() * 100.0)]);
     t.row(vec!["lookup p50".into(), latency(m.lookup_latency.quantile_ns(0.5) as f64 / 1e9)]);
     t.row(vec!["events/s".into(), format!("{:.2}", 2.0 * sim.size() as f64 / savg)]);
-    emit(&[t], args.has("csv"), out)
+    t.row(vec!["routing state".into(), format!("{} B total ({} B shared base)",
+        sim.table_bytes(), sim.base_bytes_shared())]);
+    t.row(vec!["base epoch refreshes".into(), sim.base_refreshes().to_string()]);
+    t.row(vec!["event queue peak".into(), q.peak_len().to_string()]);
+    emit(&[t], args.has("csv"), out)?;
+    if scale_smoke {
+        let wall_budget = args.get_f64("wall-budget-secs", 600.0)?;
+        let rss_budget = args.get_f64("rss-budget-mb", 4096.0)?;
+        writeln!(out, "scale smoke: wall {wall:.1}s (budget {wall_budget}s)")?;
+        if wall > wall_budget {
+            bail!("scale smoke: wall-clock {wall:.1}s exceeds budget {wall_budget}s");
+        }
+        if let Some(rss) = peak_rss_mib() {
+            writeln!(out, "scale smoke: peak RSS {rss:.0} MiB (budget {rss_budget} MiB)")?;
+            if rss > rss_budget {
+                bail!("scale smoke: peak RSS {rss:.0} MiB exceeds budget {rss_budget} MiB");
+            }
+        } else {
+            writeln!(out, "scale smoke: peak RSS unavailable (non-Linux), budget skipped")?;
+        }
+        // shared-base memory contract: total routing state stays within a
+        // small multiple of one table, instead of the old n copies
+        let budget = 16 * 8 * sim.size().max(1);
+        if sim.table_bytes() > budget {
+            bail!(
+                "scale smoke: routing state {} B exceeds {} B (16x one shared table) — \
+                 deltas are not being rebased",
+                sim.table_bytes(),
+                budget
+            );
+        }
+        // measured maintenance bandwidth must be the model's order of
+        // magnitude (the exp/fig harness checks tighter bands; this gate
+        // catches wholesale accounting or dissemination regressions).
+        // Only meaningful at scale: at toy populations Θ caps at its
+        // 60 s maximum and a short window sees almost no traffic.
+        if sim.size() >= 10_000
+            && m.window_secs >= 30.0
+            && !(model_bps / 10.0..=model_bps * 10.0).contains(&measured_bps)
+        {
+            bail!(
+                "scale smoke: per-peer maintenance {measured_bps:.1} bps is not within 10x of \
+                 the Eq. IV model ({model_bps:.1} bps)"
+            );
+        }
+        writeln!(out, "scale smoke OK")?;
+    }
+    Ok(())
 }
 
 fn cmd_store(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
@@ -369,6 +441,7 @@ fn cmd_report(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
     let every = (secs / 4.0).max(1.0);
     run_until_observed(&mut sim, &mut q, 60.0 + secs, every, |sim, t| sim.trace_snapshot(t));
     sim.end_recording(q.now());
+    sim.note_queue_depth(q.peak_len());
     writeln!(out, "{}", sim.report_json().render())?;
     Ok(())
 }
@@ -644,6 +717,18 @@ mod tests {
         let v = run_to_string(&["bench", "--verify", "--dir", &d]).unwrap();
         assert!(v.contains("OK"), "{v}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sim_scale_smoke_asserts_budgets() {
+        let s = run_to_string(&["sim", "--peers", "256", "--secs", "20", "--scale-smoke"]).unwrap();
+        assert!(s.contains("scale smoke OK"), "{s}");
+        assert!(s.contains("routing state"), "{s}");
+        assert!(s.contains("event queue peak"), "{s}");
+        let err = run_to_string(&[
+            "sim", "--peers", "64", "--secs", "5", "--scale-smoke", "--wall-budget-secs", "0",
+        ]);
+        assert!(err.is_err(), "an impossible wall budget must fail the gate");
     }
 
     #[test]

@@ -65,16 +65,16 @@ pub fn replay_sim(trace: &Trace) -> Result<ConformanceReport> {
     for step in &trace.steps {
         match step.op {
             TraceOp::Put { key } => {
-                let truth = sim.truth().clone();
-                sim.store_mut().expect("store enabled").op_put(&truth, key);
+                let (truth, store) = sim.store_with_truth().expect("store enabled");
+                store.op_put(truth, key);
             }
             TraceOp::Remove { key } => {
-                let truth = sim.truth().clone();
-                sim.store_mut().expect("store enabled").op_remove(&truth, key);
+                let (truth, store) = sim.store_with_truth().expect("store enabled");
+                store.op_remove(truth, key);
             }
             TraceOp::Get { key } => {
-                let truth = sim.truth().clone();
-                let out = sim.store_mut().expect("store enabled").op_get(&truth, key);
+                let (truth, store) = sim.store_with_truth().expect("store enabled");
+                let out = store.op_get(truth, key);
                 gets.push(out == GetOutcome::Hit);
                 get_keys.push(key);
             }

@@ -19,6 +19,7 @@ pub enum ExperimentId {
     AblationAggregation,
     AblationIdReuse,
     Store,
+    Scale,
 }
 
 impl ExperimentId {
@@ -36,8 +37,9 @@ impl ExperimentId {
             "ablation-aggregation" => ExperimentId::AblationAggregation,
             "ablation-id-reuse" => ExperimentId::AblationIdReuse,
             "store" => ExperimentId::Store,
+            "scale" => ExperimentId::Scale,
             other => bail!(
-                "unknown experiment '{other}' (try: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8 store ablation-aggregation ablation-id-reuse)"
+                "unknown experiment '{other}' (try: table1 fig3 fig4a fig4b fig5a fig5b fig6 fig7 fig8 store scale ablation-aggregation ablation-id-reuse)"
             ),
         })
     }
@@ -77,6 +79,7 @@ pub fn run_experiment(id: ExperimentId, fid: Fidelity) -> Result<Vec<Table>> {
         }
         ExperimentId::Fig8 => vec![experiments::fig8::run()],
         ExperimentId::Store => vec![experiments::store::run(fid)],
+        ExperimentId::Scale => vec![experiments::scale::run(fid)],
         ExperimentId::AblationAggregation => {
             vec![experiments::ablations::aggregation(1024, 3600.0, 300.0)]
         }

@@ -1,6 +1,6 @@
 //! The D1HT system as a simulation world (§III–§VI).
 //!
-//! Every peer keeps a full routing table and an [`Edra`] instance. The
+//! Every peer keeps a full routing *view* and an [`Edra`] instance. The
 //! world drives: Θ-interval closes (maintenance dissemination), Rule-5
 //! predecessor monitoring, the §VII-A churn process (half SIGKILL-style
 //! failures that lose buffered events, half graceful leaves that flush),
@@ -14,6 +14,23 @@
 //! counted against `f`. This keeps the event count tractable at the
 //! paper's 30 lookups/s/peer scale while measuring exactly the quantity
 //! the paper reports (the one-hop ratio and the latency distribution).
+//!
+//! # Memory model at scale
+//!
+//! Simulating 10⁵–10⁶ peers in one process means the naive layout —
+//! every peer owning a full `Vec<Id>` table copy — costs O(n²) bytes
+//! (8 TB at 10⁶). Three structures keep the footprint linear-ish
+//! (details and measured numbers in `docs/SCALE.md`):
+//!
+//! * routing state is a [`TableView`]: an `Arc` onto one shared
+//!   ground-truth snapshot plus a tiny private delta, re-anchored
+//!   through the sim's [`BaseManager`] as epochs advance;
+//! * per-peer event dedup is a [`SeenSet`] bitmap over globally
+//!   sequenced events ([`EventRegistry`]) instead of a per-peer
+//!   `HashMap<Event, f64>`;
+//! * peers live in index-addressed slots ([`Peers`]) rather than a
+//!   `BTreeMap<Id, Peer>`, so per-peer overhead is flat and iteration
+//!   is a linear scan.
 
 use std::collections::BTreeMap;
 
@@ -21,9 +38,9 @@ use crate::edra::Edra;
 use crate::fault::plan::{FaultPlan, Verdict};
 use crate::id::{space, Id};
 use crate::obs::{self, Json, MsgClass, Registry, Tracer};
-use crate::proto::messages::{Event, Message, MessageBody};
+use crate::proto::messages::{Event, EventKind, Message, MessageBody};
 use crate::proto::sizes;
-use crate::routing::Table;
+use crate::routing::{BaseManager, Table, TableView};
 use crate::sim::churn::{ChurnCfg, LeaveStyle, REJOIN_DELAY_SECS};
 use crate::sim::cpu::CpuModel;
 use crate::sim::engine::{Queue, World};
@@ -97,15 +114,14 @@ struct Peer {
     /// so a same-ID rejoin does not resurrect the previous life's timer
     /// chains (which would multiply keep-alives and probes).
     epoch: u64,
-    table: Table,
+    table: TableView,
     edra: Edra,
     predecessor: Id,
     last_pred_seen: f64,
-    /// Events acknowledged recently: a peer acknowledges each event at
-    /// most once (§IV), independent of its table state. Entries expire
-    /// (EVENT_SEEN_EXPIRY) so a same-ID rejoin 3 minutes later is a new
-    /// event.
-    seen: std::collections::HashMap<Event, f64>,
+    /// Events acknowledged so far, as a bitmap over the global
+    /// [`EventRegistry`] sequence numbers: a peer acknowledges each event
+    /// incarnation at most once (§IV), independent of its table state.
+    seen: SeenSet,
     /// §VI join protocol: joiners this peer admitted recently; they get
     /// buffered events forwarded directly until the dissemination trees
     /// include them.
@@ -118,52 +134,210 @@ struct Peer {
 /// different TTLs", made time-bounded).
 const JOIN_GRACE_SECS: f64 = 30.0;
 
-/// Size bound for the per-peer acknowledged-event set; entries older
-/// than this are reclaimable on overflow (generous: far above any
-/// dissemination time).
-const EVENT_SEEN_EXPIRY: f64 = 3600.0;
+/// A joiner's [`SeenSet`] floor is set so that events detected more than
+/// this long ago are treated as already acknowledged: they finished
+/// circulating long before the joiner existed, while genuinely in-flight
+/// events (always far younger) must still be acknowledged and forwarded
+/// so the joiner's dissemination subtree is not starved. Generous — far
+/// above any dissemination time (a few ρΘ).
+const SEEN_BACKLOG_SECS: f64 = 900.0;
 
-impl Peer {
-    /// True the first time `ev` is seen in the peer's *current view of
-    /// that peer's membership*: acknowledging join(X) clears any seen
-    /// leave(X) and vice versa, so a same-ID rejoin is a fresh event
-    /// while duplicate copies of one event are suppressed no matter how
-    /// slowly they travel (time-based expiry would let stragglers
-    /// recirculate — see the Rule-2 note in `deliver`).
-    fn first_ack(&mut self, ev: Event, now: f64) -> bool {
-        if self.seen.len() > 100_000 {
-            let cutoff = now - EVENT_SEEN_EXPIRY;
-            self.seen.retain(|_, &mut t| t > cutoff);
-        }
-        if self.seen.contains_key(&ev) {
+/// Hard cap on a [`SeenSet`] bitmap (words of 64 events). Overflow trims
+/// the oldest region, treating it as seen — at every scale the cap
+/// covers far more events than can be in flight simultaneously, so only
+/// long-dead sequence numbers are ever folded away. Bounds per-peer
+/// dedup state to 4 KB worst-case regardless of churn volume.
+const SEEN_MAX_WORDS: usize = 512;
+
+/// Compact acknowledged-event set: a sliding bitmap over the global
+/// event sequence space. `floor + i` is seen iff bit `i` is set; every
+/// sequence below `floor` is implicitly seen. EDRA delivers each event
+/// to every peer, so the low end of the bitmap fills densely and the
+/// fully-seen prefix is continually trimmed into `floor` — steady-state
+/// size is O(events in flight), a few hundred bytes, versus the
+/// ~48 B/entry unbounded `HashMap<Event, f64>` it replaces.
+#[derive(Debug, Default)]
+struct SeenSet {
+    floor: u32,
+    words: Vec<u64>,
+}
+
+impl SeenSet {
+    fn starting_at(floor: u32) -> Self {
+        SeenSet { floor, words: Vec::new() }
+    }
+
+    /// True the first time `seq` is marked; false on duplicates and on
+    /// anything below the floor.
+    fn first(&mut self, seq: u32) -> bool {
+        if seq < self.floor {
             return false;
         }
-        let opposite = Event {
-            peer: ev.peer,
-            kind: match ev.kind {
-                crate::proto::messages::EventKind::Join => {
-                    crate::proto::messages::EventKind::Leave
-                }
-                crate::proto::messages::EventKind::Leave => {
-                    crate::proto::messages::EventKind::Join
-                }
-            },
-            default_port: ev.default_port,
-        };
-        self.seen.remove(&opposite);
-        self.seen.insert(ev, now);
+        let idx = (seq - self.floor) as usize;
+        let (w, b) = (idx / 64, idx % 64);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        if self.words[w] & (1u64 << b) != 0 {
+            return false;
+        }
+        self.words[w] |= 1u64 << b;
+        // fold the fully-acknowledged prefix into the floor
+        let full = self.words.iter().take_while(|&&x| x == u64::MAX).count();
+        if full > 0 {
+            self.words.drain(..full);
+            self.floor += (full * 64) as u32;
+        }
+        if self.words.len() > SEEN_MAX_WORDS {
+            let cut = self.words.len() - SEEN_MAX_WORDS;
+            self.words.drain(..cut);
+            self.floor += (cut * 64) as u32;
+        }
         true
+    }
+}
+
+/// Global event sequencer: assigns each membership-event *incarnation* a
+/// dense `u32` sequence number and remembers its first detection time
+/// (the Fig. 6 reference point). A same-ID rejoin after a leave is a new
+/// incarnation — detection allocates a fresh sequence whenever the
+/// opposite-kind event is newer — so peers acknowledge it afresh, which
+/// reproduces the old per-peer `seen` map's join/leave flip semantics.
+#[derive(Debug, Default)]
+struct EventRegistry {
+    /// Latest incarnation of each event. Never iterated, so the hasher's
+    /// nondeterministic order cannot leak into trajectories.
+    seq_of: std::collections::HashMap<Event, u32>,
+    /// Birth (first local detection) time per sequence number.
+    born: Vec<f64>,
+}
+
+fn opposite(ev: Event) -> Event {
+    Event {
+        peer: ev.peer,
+        kind: match ev.kind {
+            EventKind::Join => EventKind::Leave,
+            EventKind::Leave => EventKind::Join,
+        },
+        default_port: ev.default_port,
+    }
+}
+
+impl EventRegistry {
+    fn alloc(&mut self, ev: Event, now: f64) -> u32 {
+        let s = self.born.len() as u32;
+        self.born.push(now);
+        self.seq_of.insert(ev, s);
+        s
+    }
+
+    /// Sequence for a *received* copy of `ev`: the latest incarnation.
+    /// Allocates defensively if the event was somehow never detected.
+    fn resolve_ack(&mut self, ev: Event, now: f64) -> u32 {
+        match self.seq_of.get(&ev) {
+            Some(&s) => s,
+            None => self.alloc(ev, now),
+        }
+    }
+
+    /// Sequence for a *locally detected* `ev`: reuses the current
+    /// incarnation if it is still the newest for this (peer, port), else
+    /// opens a new one (rejoin after leave, or first sighting ever).
+    fn resolve_detect(&mut self, ev: Event, now: f64) -> u32 {
+        let opp_seq = self.seq_of.get(&opposite(ev)).copied();
+        match self.seq_of.get(&ev) {
+            Some(&s) if opp_seq.is_none_or(|o| o < s) => s,
+            _ => self.alloc(ev, now),
+        }
+    }
+
+    fn born_of(&self, seq: u32) -> f64 {
+        self.born[seq as usize]
+    }
+
+    /// Floor for a freshly created peer's [`SeenSet`]: everything
+    /// detected before `now - SEEN_BACKLOG_SECS` is treated as seen.
+    /// `born` is nondecreasing (virtual time only moves forward).
+    fn floor_at(&self, now: f64) -> u32 {
+        self.born.partition_point(|&t| t < now - SEEN_BACKLOG_SECS) as u32
+    }
+}
+
+/// Index-addressed peer container: stable `u32` slots plus an `Id`
+/// lookup index. Replaces `BTreeMap<Id, Peer>` — O(1) hot-path access
+/// with no per-node allocation, and iteration is a dense scan over
+/// slots. Iteration order is slot order (creation order, with freed
+/// slots reused LIFO): deterministic for a given seed, and every
+/// consumer is order-insensitive. The `HashMap` index itself is never
+/// iterated, so its nondeterministic internal order cannot leak.
+#[derive(Default)]
+struct Peers {
+    index: std::collections::HashMap<Id, u32>,
+    slots: Vec<Option<Peer>>,
+    free: Vec<u32>,
+}
+
+impl Peers {
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+    fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+    fn contains_key(&self, id: &Id) -> bool {
+        self.index.contains_key(id)
+    }
+    fn get(&self, id: &Id) -> Option<&Peer> {
+        self.index.get(id).and_then(|&s| self.slots[s as usize].as_ref())
+    }
+    fn get_mut(&mut self, id: &Id) -> Option<&mut Peer> {
+        let s = *self.index.get(id)?;
+        self.slots[s as usize].as_mut()
+    }
+    fn insert(&mut self, id: Id, peer: Peer) {
+        if let Some(&s) = self.index.get(&id) {
+            self.slots[s as usize] = Some(peer);
+            return;
+        }
+        let s = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Some(peer);
+                s
+            }
+            None => {
+                self.slots.push(Some(peer));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.index.insert(id, s);
+    }
+    fn remove(&mut self, id: &Id) -> Option<Peer> {
+        let s = self.index.remove(id)?;
+        let p = self.slots[s as usize].take();
+        self.free.push(s);
+        p
+    }
+    fn values(&self) -> impl Iterator<Item = &Peer> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+    fn values_mut(&mut self) -> impl Iterator<Item = &mut Peer> {
+        self.slots.iter_mut().filter_map(|s| s.as_mut())
     }
 }
 
 pub struct D1htSim {
     pub cfg: D1htCfg,
     rng: Rng,
-    peers: BTreeMap<Id, Peer>,
+    peers: Peers,
     /// Quarantined peers: label -> session time remaining at insertion.
     quarantined: BTreeMap<u64, f64>,
     /// Ground-truth overlay membership.
     truth: Table,
+    /// Publisher of the shared base snapshots every peer's [`TableView`]
+    /// anchors to. Notified on every `truth` mutation.
+    base: BaseManager,
+    /// Global event sequencer + birth times (Fig. 6 reference point).
+    events: EventRegistry,
     label_to_id: BTreeMap<u64, Id>,
     next_label: u64,
     next_epoch: u64,
@@ -178,7 +352,9 @@ pub struct D1htSim {
     pub closes_timer: u64,
     pub closes_cap: u64,
     pub probes: u64,
-    /// Diagnostics: how often each event was locally detected (should be 1).
+    /// Diagnostics: how often each event was locally detected (should be
+    /// 1). Insertion-capped so extreme-scale churn cannot grow it
+    /// unboundedly; counts for already-tracked events stay exact.
     pub detect_counts: std::collections::HashMap<Event, u32>,
     /// Shared observability table: per-peer `(direction, msg_class)`
     /// traffic attribution plus lookup/EDRA latency histograms. Written
@@ -189,9 +365,10 @@ pub struct D1htSim {
     /// any other sink is observation-only (no RNG, no queue effects),
     /// so results stay bit-identical — asserted in `cli.rs` tests.
     pub tracer: Tracer,
-    /// Birth time (first local detection) of each membership event —
-    /// the reference point for the Fig. 6 propagation-delay histogram.
-    event_born: std::collections::HashMap<Event, f64>,
+    /// High-water mark of the event queue, as reported by the driver via
+    /// [`D1htSim::note_queue_depth`] (the sim has no queue handle of its
+    /// own); surfaced as `sim.queue_peak_depth`.
+    queue_peak: u64,
     /// Armed fault plan, if any ([`D1htSim::arm_faults`]). The sim twin
     /// of the socket runtime's [`crate::fault::FaultInjector`].
     faults: Option<SimFaultState>,
@@ -215,9 +392,11 @@ impl D1htSim {
         D1htSim {
             rng: Rng::new(cfg.seed),
             cfg,
-            peers: BTreeMap::new(),
+            peers: Peers::default(),
             quarantined: BTreeMap::new(),
             truth: Table::new(),
+            base: BaseManager::new(),
+            events: EventRegistry::default(),
             label_to_id: BTreeMap::new(),
             next_label: 0,
             next_epoch: 1,
@@ -232,7 +411,7 @@ impl D1htSim {
             detect_counts: Default::default(),
             obs: Registry::new(),
             tracer: Tracer::default(),
-            event_born: Default::default(),
+            queue_peak: 0,
             faults: None,
         }
     }
@@ -290,6 +469,14 @@ impl D1htSim {
         &self.truth
     }
 
+    /// Borrow the ground truth and the store layer simultaneously — the
+    /// replay drivers feed `op_put`/`op_get`/`op_remove` with the
+    /// current membership without cloning the whole table per step.
+    pub fn store_with_truth(&mut self) -> Option<(&Table, &mut StoreLayer)> {
+        let truth = &self.truth;
+        self.store.as_mut().map(|s| (truth, s))
+    }
+
     /// Current ground-truth membership, ascending by ring ID — the
     /// stable roster the conformance replay indexes `leave`/`fail`
     /// steps against.
@@ -297,9 +484,35 @@ impl D1htSim {
         self.truth.ids().to_vec()
     }
 
+    /// Total routing-state bytes: the shared base snapshot plus every
+    /// peer's private delta (`sim.table_bytes`). The number the old
+    /// per-peer-copy layout would put at `n · n · 8`.
+    pub fn table_bytes(&self) -> usize {
+        self.base.base_bytes() + self.peers.values().map(|p| p.table.memory_bytes()).sum::<usize>()
+    }
+
+    /// Base snapshot republishes since the sim started
+    /// (`sim.base_epoch_refreshes`).
+    pub fn base_refreshes(&self) -> u64 {
+        self.base.refreshes()
+    }
+
+    /// Bytes held by the one shared base snapshot alone.
+    pub fn base_bytes_shared(&self) -> usize {
+        self.base.base_bytes()
+    }
+
+    /// Record the event queue's high-water mark (the driver calls this
+    /// with `Queue::peak_len` before asking for a report; the sim never
+    /// holds a queue reference of its own).
+    pub fn note_queue_depth(&mut self, peak: usize) {
+        self.queue_peak = self.queue_peak.max(peak as u64);
+    }
+
     /// Bootstrap `n` peers instantly with consistent tables (tests and
     /// latency experiments start from steady state, as after a long
-    /// quiet period).
+    /// quiet period). One shared base snapshot is published and every
+    /// peer's view anchors to it: O(n) total table bytes, not O(n²).
     pub fn bootstrap(&mut self, n: usize, q: &mut Queue<Ev>) {
         let mut ids = Vec::with_capacity(n);
         for _ in 0..n {
@@ -309,6 +522,7 @@ impl D1htSim {
             ids.push((label, id));
         }
         self.truth = Table::from_ids(ids.iter().map(|&(_, id)| id).collect());
+        self.base.reset_from(&self.truth);
         let rate_prior = self
             .cfg
             .churn
@@ -323,11 +537,11 @@ impl D1htSim {
                 id,
                 label,
                 epoch: self.next_epoch,
-                table: self.truth.clone(),
+                table: self.base.view_of_truth(&self.truth),
                 edra,
                 predecessor: self.truth.predecessor_excl(id).unwrap_or(id),
                 last_pred_seen: q.now(),
-                seen: Default::default(),
+                seen: SeenSet::default(),
                 recent_joiners: Vec::new(),
                 metrics: Metrics::new(),
             };
@@ -414,6 +628,9 @@ impl D1htSim {
             obs::names::WINDOW_SECS,
             (self.record_end - self.record_start).max(0.0),
         );
+        reg.set_gauge(obs::names::SIM_TABLE_BYTES, self.table_bytes() as f64);
+        reg.set_gauge(obs::names::SIM_QUEUE_PEAK_DEPTH, self.queue_peak as f64);
+        reg.inc(obs::names::SIM_BASE_REFRESHES, self.base.refreshes());
         let m = self.metrics();
         Json::Obj(vec![
             ("schema".into(), Json::s("d1ht.report.v1")),
@@ -562,7 +779,7 @@ impl D1htSim {
     pub fn all_known_ids(&self) -> std::collections::BTreeSet<Id> {
         let mut out = std::collections::BTreeSet::new();
         for p in self.peers.values() {
-            out.extend(p.table.ids().iter().copied());
+            out.extend(p.table.iter());
         }
         out
     }
@@ -575,9 +792,9 @@ impl D1htSim {
 
     /// Mean routing-table staleness vs ground truth (diagnostics).
     pub fn sample_staleness(&mut self) {
-        let truth = self.truth.clone();
+        let truth = &self.truth;
         for p in self.peers.values_mut() {
-            p.metrics.staleness.push(p.table.staleness_vs(&truth));
+            p.metrics.staleness.push(p.table.staleness_vs(truth));
         }
     }
 
@@ -598,6 +815,15 @@ impl D1htSim {
         let n = self.truth.len().max(2);
         q.after(peer.edra.tuner.theta(n), Ev::IntervalClose { peer: peer.id, epoch: peer.epoch });
         q.after(peer.edra.t_detect(n), Ev::PredCheck { peer: peer.id, epoch: peer.epoch });
+    }
+
+    /// Tally a local detection in the bounded diagnostic map.
+    fn note_detect(&mut self, ev: Event) {
+        if self.detect_counts.len() < 100_000 {
+            *self.detect_counts.entry(ev).or_insert(0) += 1;
+        } else if let Some(c) = self.detect_counts.get_mut(&ev) {
+            *c += 1;
+        }
     }
 
     fn charge_send(&mut self, id: Id, bits: u64, class: MsgClass) {
@@ -721,12 +947,6 @@ impl D1htSim {
     fn deliver(&mut self, to: Id, msg: Message, q: &mut Queue<Ev>) {
         let now = q.now();
         let bits = msg.wire_bits();
-        // bound the Fig. 6 birth-time map under extreme churn (entries
-        // are only read while their event is still circulating)
-        if self.event_born.len() > 100_000 {
-            let cutoff = now - EVENT_SEEN_EXPIRY;
-            self.event_born.retain(|_, &mut t| t > cutoff);
-        }
         if self.peers.get(&to).is_none() {
             // Recipient departed while the message was in flight. The
             // sender's ack timeout fires (§III reliability): it learns
@@ -744,7 +964,7 @@ impl D1htSim {
                     // duplicate announcements would re-disseminate after
                     // the dedup window and inflate every rate estimator.
                     sender.table.remove(to);
-                    let _ = now;
+                    sender.table.maybe_rebase(&self.base);
                     // re-target: same TTL slot, recomputed occupant
                     let k = 1usize << ttl.min(62);
                     let tlen = sender.table.len();
@@ -775,7 +995,7 @@ impl D1htSim {
                 // explicit UDP ack (Fig. 2): charged both ways, no event
                 self.charge_send(to, sizes::V_A, MsgClass::Maintenance);
                 self.charge_recv(msg.from, sizes::V_A, MsgClass::Maintenance);
-                let mut applied: Vec<Event> = Vec::new();
+                let mut applied: Vec<(Event, u32)> = Vec::new();
                 let peer = self.peers.get_mut(&to).unwrap();
                 if ttl == 0 && msg.from == peer.predecessor {
                     peer.last_pred_seen = now;
@@ -793,18 +1013,17 @@ impl D1htSim {
                     // events; dropping them would starve its subtree,
                     // while re-acknowledging duplicates would circulate
                     // events forever on transiently inconsistent rings).
-                    if peer.first_ack(ev, now) {
+                    let seq = self.events.resolve_ack(ev, now);
+                    if peer.seen.first(seq) {
                         peer.edra.acknowledge(ev, ttl, now);
                     }
                     if peer.table.apply(&ev) {
-                        applied.push(ev);
-                        if ev.peer == peer.predecessor
-                            && ev.kind == crate::proto::messages::EventKind::Leave
-                        {
+                        applied.push((ev, seq));
+                        if ev.peer == peer.predecessor && ev.kind == EventKind::Leave {
                             peer.predecessor =
                                 peer.table.predecessor_excl(peer.id).unwrap_or(peer.id);
                         }
-                        if ev.kind == crate::proto::messages::EventKind::Join {
+                        if ev.kind == EventKind::Join {
                             // new predecessor?
                             if ev.peer.in_arc(peer.predecessor, peer.id) && ev.peer != peer.id {
                                 peer.predecessor = ev.peer;
@@ -813,11 +1032,12 @@ impl D1htSim {
                         }
                     }
                 }
+                peer.table.maybe_rebase(&self.base);
                 // Fig. 6 metric: delay from an event's first local
                 // detection to its application at this peer's table
                 if self.recording {
-                    for ev in &applied {
-                        let Some(&born) = self.event_born.get(ev) else { continue };
+                    for &(ev, seq) in &applied {
+                        let born = self.events.born_of(seq);
                         let ns = ((now - born).max(0.0) * 1e9) as u64;
                         self.obs.record_peer(to.0, obs::names::EDRA_PROP_NS, ns);
                         self.obs.inc(obs::names::EDRA_EVENTS_APPLIED, 1);
@@ -866,17 +1086,20 @@ impl D1htSim {
                     p.last_pred_seen = now;
                 }
             } else {
+                let ev = Event::leave(pred);
+                let seq = self.events.resolve_detect(ev, now);
                 let peer = self.peers.get_mut(&id).unwrap();
                 peer.table.remove(pred);
-                let ev = Event::leave(pred);
-                if peer.first_ack(ev, now) {
+                peer.table.maybe_rebase(&self.base);
+                let detected = peer.seen.first(seq);
+                if detected {
                     peer.edra.detect_local(ev, n, now);
-                    *self.detect_counts.entry(ev).or_insert(0) += 1;
-                    self.event_born.entry(ev).or_insert(now);
                 }
-                let peer = self.peers.get_mut(&id).unwrap();
                 peer.predecessor = peer.table.predecessor_excl(peer.id).unwrap_or(peer.id);
                 peer.last_pred_seen = now;
+                if detected {
+                    self.note_detect(ev);
+                }
             }
         }
         if let Some(peer) = self.peers.get(&id) {
@@ -921,11 +1144,14 @@ impl D1htSim {
         if self.truth.contains(id) {
             return; // stale double-insert
         }
-        // join protocol (§VI): successor transfers its routing table
+        // join protocol (§VI): successor transfers its routing table.
+        // Cloning the successor's *view* copies the Arc base pointer and
+        // the small delta — O(delta), not O(n); the wire cost of the
+        // real transfer is still charged in full below.
         let succ_id = self.truth.successor(id).unwrap_or(id);
         let (mut table, rate_prior) = match self.peers.get(&succ_id) {
             Some(s) => (s.table.clone(), s.edra.tuner.observed_rate()),
-            None => (self.truth.clone(), 0.0),
+            None => (self.base.view_of_truth(&self.truth), 0.0),
         };
         if self.peers.contains_key(&succ_id) {
             // table transfer streamed over the bulk channel (TCP in the
@@ -935,6 +1161,7 @@ impl D1htSim {
             self.charge_send(succ_id, bits, MsgClass::Bulk);
         }
         table.insert(id);
+        table.maybe_rebase(&self.base);
         self.charge_recv(id, sizes::table_transfer_bits(table.len()), MsgClass::Bulk);
         let mut edra = Edra::new(id, self.cfg.f, now);
         edra.tuner = crate::edra::ThetaTuner::with_prior_rate(self.cfg.f, rate_prior);
@@ -947,26 +1174,33 @@ impl D1htSim {
             last_pred_seen: now,
             table,
             edra,
-            seen: Default::default(),
+            seen: SeenSet::starting_at(self.events.floor_at(now)),
             recent_joiners: Vec::new(),
             metrics: Metrics::new(),
         };
         self.label_to_id.insert(label, id);
         self.truth.insert(id);
+        self.base.note(id, true, &self.truth);
         let n = self.truth.len();
         // the successor detects and announces the join (Rule 6)
+        let jev = Event::join(id);
+        let mut detected = false;
         if let Some(s) = self.peers.get_mut(&succ_id) {
             s.table.insert(id);
+            s.table.maybe_rebase(&self.base);
             s.recent_joiners.push((id, now));
-            if s.first_ack(Event::join(id), now) {
-                s.edra.detect_local(Event::join(id), n, now);
-                *self.detect_counts.entry(Event::join(id)).or_insert(0) += 1;
-                self.event_born.entry(Event::join(id)).or_insert(now);
+            let seq = self.events.resolve_detect(jev, now);
+            if s.seen.first(seq) {
+                s.edra.detect_local(jev, n, now);
+                detected = true;
             }
             if id.in_arc(s.predecessor, s.id) {
                 s.predecessor = id;
                 s.last_pred_seen = now;
             }
+        }
+        if detected {
+            self.note_detect(jev);
         }
         self.schedule_peer_timers(&peer, q);
         self.peers.insert(id, peer);
@@ -998,6 +1232,7 @@ impl D1htSim {
         let now = q.now();
         let Some(mut peer) = self.peers.remove(&id) else { return };
         self.truth.remove(id);
+        self.base.note(id, false, &self.truth);
         let n = self.truth.len().max(2);
         let succ_id = peer.table.successor_excl(id).filter(|s| self.truth.contains(*s));
         match style {
@@ -1014,25 +1249,31 @@ impl D1htSim {
                     let bits = sizes::V_M + flushed * sizes::M_EVENT_AVG;
                     self.charge_send(id, bits, MsgClass::Maintenance);
                     self.charge_recv(sid, bits, MsgClass::Maintenance);
+                    let lv = Event::leave(id);
+                    let mut detected = false;
                     if let Some(s) = self.peers.get_mut(&sid) {
                         for o in &buffered {
                             for ev in &o.events {
                                 s.table.apply(ev);
-                                if s.first_ack(*ev, now) {
+                                let seq = self.events.resolve_ack(*ev, now);
+                                if s.seen.first(seq) {
                                     s.edra.acknowledge(*ev, o.ttl, now);
                                 }
                             }
                         }
                         s.table.remove(id);
-                        let lv = Event::leave(id);
-                        if s.first_ack(lv, now) {
+                        let seq = self.events.resolve_detect(lv, now);
+                        if s.seen.first(seq) {
                             s.edra.detect_local(lv, n, now);
-                            *self.detect_counts.entry(lv).or_insert(0) += 1;
-                            self.event_born.entry(lv).or_insert(now);
+                            detected = true;
                         }
                         if s.predecessor == id {
                             s.predecessor = s.table.predecessor_excl(s.id).unwrap_or(s.id);
                         }
+                        s.table.maybe_rebase(&self.base);
+                    }
+                    if detected {
+                        self.note_detect(lv);
                     }
                 }
             }
@@ -1371,8 +1612,8 @@ mod tests {
         // every live peer that originated a lookup has a per-peer hist
         let attributed: u64 = sim
             .peers
-            .keys()
-            .filter_map(|id| sim.obs.peer_hist(id.0, obs::names::LOOKUP_RTT_NS))
+            .values()
+            .filter_map(|p| sim.obs.peer_hist(p.id.0, obs::names::LOOKUP_RTT_NS))
             .map(|h| h.count())
             .sum();
         assert_eq!(attributed, m.lookups_total());
@@ -1435,10 +1676,9 @@ mod tests {
         assert_eq!(m.store.puts + m.store.gets_total(), 0, "no autonomous workload");
         let (total, _) = sim.store_retrievable();
         assert_eq!(total, 0, "nothing written yet");
-        let truth = sim.truth.clone();
-        let store = sim.store_mut().unwrap();
-        store.op_put(&truth, 3);
-        assert!(store.probe(&truth, 3));
+        let (truth, store) = sim.store_with_truth().unwrap();
+        store.op_put(truth, 3);
+        assert!(store.probe(truth, 3));
         let (total, alive) = sim.store_retrievable();
         assert_eq!((total, alive), (1, 1));
     }
@@ -1465,5 +1705,70 @@ mod tests {
         assert!(!sim.quarantined.is_empty(), "survivors are waiting");
         run_until(&mut sim, &mut q, 1200.0);
         assert!(sim.size() > at_300, "survivors inserted after T_q");
+    }
+
+    #[test]
+    fn join_allocates_delta_not_full_table_copy() {
+        // the memory-model contract at scale: bootstrap publishes ONE
+        // shared snapshot, and a join allocates O(delta) private bytes —
+        // not another n-entry table per peer touched
+        let (mut sim, mut q) = quiet_world(10_000);
+        let full_table = sim.truth.len() * 8;
+        assert_eq!(
+            sim.table_bytes(),
+            sim.base.base_bytes(),
+            "no private deltas after bootstrap"
+        );
+        q.after(1.0, Ev::Arrive { label: u64::MAX });
+        run_until(&mut sim, &mut q, 2.0);
+        assert_eq!(sim.size(), 10_001);
+        let joiner_label = sim.next_label - 1;
+        let jid = sim.label_to_id[&joiner_label];
+        let joiner = sim.peers.get(&jid).unwrap();
+        assert!(
+            joiner.table.memory_bytes() <= 64,
+            "joiner private table bytes: {} (old layout: {full_table})",
+            joiner.table.memory_bytes()
+        );
+        let private: usize = sim.peers.values().map(|p| p.table.memory_bytes()).sum();
+        assert!(
+            private < full_table,
+            "one join cost {private} private bytes total — more than a \
+             whole table copy ({full_table})"
+        );
+        assert_eq!(sim.table_bytes(), sim.base.base_bytes() + private);
+    }
+
+    #[test]
+    fn seen_set_dedups_and_trims() {
+        let mut s = SeenSet::default();
+        assert!(s.first(5));
+        assert!(!s.first(5), "duplicate suppressed");
+        for i in 0..200u32 {
+            s.first(i);
+        }
+        assert!(s.floor >= 64, "fully-acknowledged prefix folded into floor");
+        assert!(!s.first(0), "below the floor counts as seen");
+        // a sparse far-future sequence triggers the hard cap
+        assert!(s.first(10_000_000));
+        assert!(s.words.len() <= SEEN_MAX_WORDS);
+        assert!(!s.first(10_000_000));
+    }
+
+    #[test]
+    fn event_registry_incarnations() {
+        let mut r = EventRegistry::default();
+        let j = Event::join(Id(7));
+        let l = Event::leave(Id(7));
+        let s1 = r.resolve_detect(j, 1.0);
+        assert_eq!(r.resolve_detect(j, 2.0), s1, "re-detection reuses the incarnation");
+        assert_eq!(r.resolve_ack(j, 2.0), s1, "acks map to the latest incarnation");
+        let s2 = r.resolve_detect(l, 3.0);
+        assert!(s2 > s1, "leave after join is a new incarnation");
+        let s3 = r.resolve_detect(j, 4.0);
+        assert!(s3 > s2, "rejoin after leave is a new incarnation");
+        assert_eq!(r.born_of(s1), 1.0);
+        assert_eq!(r.born_of(s3), 4.0, "each incarnation keeps its own birth time");
+        assert_eq!(r.floor_at(4.0 + SEEN_BACKLOG_SECS + 1.0), 3);
     }
 }

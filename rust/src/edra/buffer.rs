@@ -1,19 +1,33 @@
 //! The per-interval event buffer (Rule 3's "events acknowledged during
 //! the ending Θ interval", stratified by acknowledgment TTL).
-
-use std::collections::HashMap;
+//!
+//! Stored as two parallel vectors in acknowledgment order plus a small
+//! sorted index for O(log n) dedup — no `HashMap` per peer. A Θ interval
+//! buffers at most `2E` events (Eq. IV.4), so the index stays tiny and
+//! the whole structure drains back to empty capacity-reusing vectors;
+//! at 10⁶ simulated peers this representation is both smaller and
+//! faster to drain than the old map (batched aggregation: one pass,
+//! no per-event hashing or rehash growth).
 
 use crate::proto::messages::Event;
+
+/// Total order on event identity used by the dedup index.
+#[inline]
+fn key(ev: &Event) -> (u64, u8, bool) {
+    (ev.peer.0, ev.kind as u8, ev.default_port)
+}
 
 /// Events acknowledged during the current Θ interval, with the TTL each
 /// was acknowledged at. An event re-acknowledged within one interval
 /// keeps the *highest* TTL (widest report set — see `Edra::acknowledge`).
 #[derive(Debug, Clone, Default)]
 pub struct EventBuffer {
-    // Keyed by the event identity (peer + kind); values are ack TTLs.
-    slots: HashMap<Event, u8>,
-    // Ack order for deterministic drains.
-    order: Vec<Event>,
+    /// Buffered events in acknowledgment order.
+    evs: Vec<Event>,
+    /// `ttls[i]` is the (max) ack TTL of `evs[i]`.
+    ttls: Vec<u8>,
+    /// Positions into `evs`, sorted by event identity — the dedup index.
+    index: Vec<u32>,
 }
 
 impl EventBuffer {
@@ -22,38 +36,36 @@ impl EventBuffer {
     }
 
     pub fn push(&mut self, ev: Event, ttl: u8) {
-        match self.slots.get_mut(&ev) {
-            Some(t) => *t = (*t).max(ttl),
-            None => {
-                self.slots.insert(ev, ttl);
-                self.order.push(ev);
+        let k = key(&ev);
+        match self.index.binary_search_by_key(&k, |&i| key(&self.evs[i as usize])) {
+            Ok(pos) => {
+                let i = self.index[pos] as usize;
+                self.ttls[i] = self.ttls[i].max(ttl);
+            }
+            Err(pos) => {
+                self.index.insert(pos, self.evs.len() as u32);
+                self.evs.push(ev);
+                self.ttls.push(ttl);
             }
         }
     }
 
     pub fn len(&self) -> usize {
-        self.order.len()
+        self.evs.len()
     }
     pub fn is_empty(&self) -> bool {
-        self.order.is_empty()
+        self.evs.is_empty()
     }
 
     /// Non-destructive snapshot of buffered events, in ack order.
     pub fn peek_events(&self) -> Vec<Event> {
-        self.order.clone()
+        self.evs.clone()
     }
 
     /// Drain in acknowledgment order, yielding `(event, ack_ttl)`.
     pub fn drain(&mut self) -> Vec<(Event, u8)> {
-        let out = self
-            .order
-            .drain(..)
-            .map(|ev| {
-                let ttl = self.slots.remove(&ev).expect("order/slots in sync");
-                (ev, ttl)
-            })
-            .collect();
-        debug_assert!(self.slots.is_empty());
+        self.index.clear();
+        let out = self.evs.drain(..).zip(self.ttls.drain(..)).collect();
         out
     }
 }
@@ -106,5 +118,23 @@ mod tests {
         b.drain();
         b.push(Event::join(Id(1)), 3);
         assert_eq!(b.drain(), vec![(Event::join(Id(1)), 3)]);
+    }
+
+    #[test]
+    fn interleaved_dedup_preserves_ack_order() {
+        let mut b = EventBuffer::new();
+        b.push(Event::join(Id(9)), 0);
+        b.push(Event::join(Id(1)), 1);
+        b.push(Event::join(Id(9)), 3); // dedup hits the first slot
+        b.push(Event::leave(Id(9)), 2);
+        assert_eq!(b.len(), 3);
+        assert_eq!(
+            b.drain(),
+            vec![
+                (Event::join(Id(9)), 3),
+                (Event::join(Id(1)), 1),
+                (Event::leave(Id(9)), 2)
+            ]
+        );
     }
 }

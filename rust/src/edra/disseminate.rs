@@ -18,7 +18,7 @@
 
 use crate::id::Id;
 use crate::proto::messages::Event;
-use crate::routing::Table;
+use crate::routing::RoutingView;
 
 /// `ρ = ⌈log2 n⌉` (Rule 1); 0 for degenerate 0/1-peer systems.
 #[inline]
@@ -39,8 +39,10 @@ pub struct Outgoing {
 }
 
 /// Plan the interval-close messages for peer `me` given its routing table
-/// and the drained `(event, ack_ttl)` buffer.
-pub fn plan_messages(me: Id, table: &Table, acked: &[(Event, u8)]) -> Vec<Outgoing> {
+/// and the drained `(event, ack_ttl)` buffer. Generic over the table
+/// representation — the socket runtime plans from a plain `Table`, the
+/// simulator from a shared-base `TableView`.
+pub fn plan_messages<V: RoutingView>(me: Id, table: &V, acked: &[(Event, u8)]) -> Vec<Outgoing> {
     let n = table.len();
     if n <= 1 {
         return Vec::new(); // alone on the ring: no one to notify
@@ -73,7 +75,7 @@ pub fn plan_messages(me: Id, table: &Table, acked: &[(Event, u8)]) -> Vec<Outgoi
 /// absent from the table, so the geometric test is the right one — it
 /// asks "would this peer's slot fall inside the covered arc", which is
 /// exactly what Rule 8 needs to prevent wrap-around double-acks.
-fn in_stretch(me: Id, table: &Table, k: usize, peer: Id) -> bool {
+fn in_stretch<V: RoutingView>(me: Id, table: &V, k: usize, peer: Id) -> bool {
     if peer == me {
         return true;
     }
@@ -88,6 +90,7 @@ fn in_stretch(me: Id, table: &Table, k: usize, peer: Id) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::routing::Table;
 
     fn table(ids: &[u64]) -> Table {
         Table::from_ids(ids.iter().map(|&x| Id(x)).collect())

@@ -23,7 +23,7 @@ pub use theta::ThetaTuner;
 
 use crate::id::Id;
 use crate::proto::messages::Event;
-use crate::routing::Table;
+use crate::routing::RoutingView;
 
 /// Per-peer EDRA state machine.
 #[derive(Debug, Clone)]
@@ -73,7 +73,7 @@ impl Edra {
     /// Close the interval: drain the buffer into concrete outgoing
     /// messages per Rules 1–4, 7, 8. Returns the planned messages;
     /// the caller transmits them and handles acks/retransmission.
-    pub fn close_interval(&mut self, table: &Table, now: f64) -> Vec<Outgoing> {
+    pub fn close_interval<V: RoutingView>(&mut self, table: &V, now: f64) -> Vec<Outgoing> {
         let events = self.buffer.drain();
         self.interval_start = now;
         self.tuner.expire(now);
@@ -102,6 +102,7 @@ impl Edra {
 mod tests {
     use super::*;
     use crate::proto::messages::Event;
+    use crate::routing::Table;
 
     fn table(n: u64) -> Table {
         Table::from_ids((0..n).map(|i| Id(i * 1000)).collect())

@@ -13,13 +13,20 @@
 //! few Θ's worth of Gnutella-scale traffic; the estimator is deliberately
 //! simple — the paper only requires that peers *adapt* to the observed
 //! rate, and the experiments churn at a constant Eq.-III.1 rate.
-
-use std::collections::VecDeque;
+//!
+//! Representation: a fixed ring of 120 one-second *count* slots instead
+//! of a `VecDeque` of raw timestamps. The rate only ever divides a count
+//! by the window length, so per-event timestamps bought nothing but
+//! memory — at 10⁶ peers the old deque peaked near 200 KB *per peer*
+//! versus the ring's fixed 480 B (docs/SCALE.md). Quantization moves the
+//! window edge by at most one second (< 1% of the window), well inside
+//! the estimator's tolerance.
 
 use super::disseminate::rho_for;
 
 const WINDOW_SECS: f64 = 120.0;
-const MAX_SAMPLES: usize = 100_000;
+/// One-second count slots covering the window.
+const SLOTS: usize = WINDOW_SECS as usize;
 
 /// Bounds keep Θ sane for tiny test systems and cold starts.
 pub const THETA_MIN_SECS: f64 = 0.05;
@@ -28,31 +35,62 @@ pub const THETA_MAX_SECS: f64 = 60.0;
 #[derive(Debug, Clone)]
 pub struct ThetaTuner {
     f: f64,
-    /// Event timestamps within the sliding window.
-    times: VecDeque<f64>,
+    /// Ring of per-second event counts; slot `s % SLOTS` holds events
+    /// with `floor(t) == s` for the last `SLOTS` absolute seconds.
+    slots: [u32; SLOTS],
+    /// Absolute one-second slot index of the newest ring slot.
+    cur_slot: u64,
+    /// Total events currently counted in the ring.
+    count: u32,
     /// Fallback rate estimate used before the window has 2+ events.
     prior_rate: f64,
 }
 
 impl ThetaTuner {
     pub fn new(f: f64) -> Self {
-        ThetaTuner { f, times: VecDeque::new(), prior_rate: 0.0 }
+        ThetaTuner { f, slots: [0; SLOTS], cur_slot: 0, count: 0, prior_rate: 0.0 }
     }
 
     /// Pre-seed the rate estimate (a joining peer can bootstrap from its
     /// successor's estimate instead of starting cold).
     pub fn with_prior_rate(f: f64, rate: f64) -> Self {
-        ThetaTuner { f, times: VecDeque::new(), prior_rate: rate.max(0.0) }
+        let mut t = ThetaTuner::new(f);
+        t.prior_rate = rate.max(0.0);
+        t
     }
 
     pub fn f(&self) -> f64 {
         self.f
     }
 
+    /// Slide the ring forward to cover `now`, zeroing slots that fell
+    /// out of the window.
+    fn advance_to(&mut self, now: f64) {
+        let slot = now.max(0.0) as u64;
+        if slot <= self.cur_slot {
+            return;
+        }
+        if slot - self.cur_slot >= SLOTS as u64 {
+            // jumped past the whole window
+            self.slots = [0; SLOTS];
+            self.count = 0;
+        } else {
+            for s in self.cur_slot + 1..=slot {
+                let i = (s % SLOTS as u64) as usize;
+                self.count -= self.slots[i];
+                self.slots[i] = 0;
+            }
+        }
+        self.cur_slot = slot;
+    }
+
     pub fn observe_event(&mut self, now: f64) {
-        self.times.push_back(now);
-        if self.times.len() > MAX_SAMPLES {
-            self.times.pop_front();
+        self.advance_to(now);
+        let slot = now.max(0.0) as u64;
+        // out-of-order events older than the window are simply dropped
+        if self.cur_slot - slot < SLOTS as u64 {
+            self.slots[(slot % SLOTS as u64) as usize] += 1;
+            self.count += 1;
         }
         self.expire(now);
     }
@@ -61,14 +99,8 @@ impl ThetaTuner {
     /// so Θ relaxes toward its maximum instead of freezing at the last
     /// busy-period estimate (which would sustain needless keep-alives).
     pub fn expire(&mut self, now: f64) {
-        while let Some(&t) = self.times.front() {
-            if now - t > WINDOW_SECS {
-                self.times.pop_front();
-            } else {
-                break;
-            }
-        }
-        if self.times.len() < 2 {
+        self.advance_to(now);
+        if self.count < 2 {
             self.prior_rate *= 0.5;
             if self.prior_rate < 1e-6 {
                 self.prior_rate = 0.0;
@@ -76,9 +108,18 @@ impl ThetaTuner {
         }
     }
 
-    /// Raw sample timestamps (diagnostics).
+    /// Sample timestamps synthesized from the ring at one-second
+    /// resolution (diagnostics only).
     pub fn sample_times(&self) -> Vec<f64> {
-        self.times.iter().copied().collect()
+        let oldest = self.cur_slot.saturating_sub(SLOTS as u64 - 1);
+        let mut out = Vec::with_capacity(self.count as usize);
+        for s in oldest..=self.cur_slot {
+            let c = self.slots[(s % SLOTS as u64) as usize];
+            for _ in 0..c {
+                out.push(s as f64);
+            }
+        }
+        out
     }
 
     /// Locally observed system event rate `r` (events/sec).
@@ -89,12 +130,8 @@ impl ThetaTuner {
     /// `T_detect = 2Θ` assumes *uniform* Θ — a peer whose Θ undershoots
     /// its predecessor's keep-alive period probes it continuously.
     pub fn observed_rate(&self) -> f64 {
-        if self.times.len() >= 2 {
-            let span = self.times.back().unwrap() - self.times.front().unwrap();
-            // until the window fills, fall back to the span estimate
-            // blended toward the conservative (longer-Θ) side
-            let horizon = span.max(WINDOW_SECS);
-            return self.times.len() as f64 / horizon;
+        if self.count >= 2 {
+            return self.count as f64 / WINDOW_SECS;
         }
         self.prior_rate
     }
@@ -191,5 +228,20 @@ mod tests {
         // long quiet gap: window empties, falls back to prior (0)
         t.observe_event(10_000.0);
         assert!(t.observed_rate() < r_then);
+    }
+
+    #[test]
+    fn ring_rate_matches_count_over_window() {
+        // steady 2 ev/s: after warmup the ring holds ~240 events
+        let mut t = ThetaTuner::new(0.01);
+        let mut now = 0.0;
+        for _ in 0..1000 {
+            now += 0.5;
+            t.observe_event(now);
+        }
+        let r = t.observed_rate();
+        assert!((r - 2.0).abs() / 2.0 < 0.02, "r={r}");
+        // memory stays fixed regardless of event volume
+        assert_eq!(std::mem::size_of_val(&t.slots), SLOTS * 4);
     }
 }

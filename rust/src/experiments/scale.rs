@@ -1,0 +1,132 @@
+//! Scale sweep: measured per-peer maintenance bandwidth vs the Eq. IV
+//! closed form, plus the routing-state memory contract, at populations
+//! the per-peer-copy layout could not hold.
+//!
+//! Every cell drives [`crate::dht::d1ht::D1htSim`] directly (not the
+//! harness) so it can report the shared-base accounting: total routing
+//! bytes (one base snapshot + all private deltas), the bytes the old
+//! one-table-per-peer layout would need (`n² · 8`), and how many base
+//! epochs were republished during the run. `docs/SCALE.md` records the
+//! 10⁵/10⁶ numbers measured with this experiment.
+
+use crate::analysis::d1ht::D1htModel;
+use crate::dht::d1ht::{D1htCfg, D1htSim};
+use crate::experiments::common::Fidelity;
+use crate::sim::churn::ChurnCfg;
+use crate::sim::engine::{run_until, Queue};
+use crate::util::fmt::{bps, Table};
+
+pub const SAVG_MINS: f64 = 174.0;
+
+pub struct ScaleCell {
+    pub n: usize,
+    pub measured_bps: f64,
+    pub model_bps: f64,
+    pub table_bytes: usize,
+    pub base_bytes: usize,
+    pub base_refreshes: u64,
+    pub queue_peak: usize,
+}
+
+/// Run one population cell: bootstrap, settle, then a recorded window
+/// under Eq. III.1 churn with a light lookup workload.
+pub fn run_cell(n: usize, settle: f64, window: f64, seed: u64) -> ScaleCell {
+    let savg = SAVG_MINS * 60.0;
+    let cfg = D1htCfg {
+        churn: ChurnCfg::exponential(savg),
+        lookup_rate: 0.1,
+        seed,
+        ..Default::default()
+    };
+    let mut sim = D1htSim::new(cfg);
+    let mut q = Queue::new();
+    sim.bootstrap(n, &mut q);
+    run_until(&mut sim, &mut q, settle);
+    sim.begin_recording(q.now());
+    sim.start_lookups(&mut q);
+    run_until(&mut sim, &mut q, settle + window);
+    sim.end_recording(q.now());
+    sim.note_queue_depth(q.peak_len());
+    ScaleCell {
+        n: sim.size(),
+        measured_bps: sim.per_peer_maintenance_bps(),
+        model_bps: D1htModel::default().bandwidth_bps(sim.size().max(2) as f64, savg),
+        table_bytes: sim.table_bytes(),
+        base_bytes: sim.base_bytes_shared(),
+        base_refreshes: sim.base_refreshes(),
+        queue_peak: q.peak_len(),
+    }
+}
+
+pub fn run(fid: Fidelity) -> Table {
+    let mut t = Table::new(
+        format!("Scale — per-peer maintenance vs Eq. IV model, shared routing state (Savg={SAVG_MINS}min)"),
+        &[
+            "peers",
+            "measured/peer",
+            "model/peer",
+            "ratio",
+            "routing state",
+            "shared base",
+            "naive layout",
+            "base refreshes",
+            "queue peak",
+        ],
+    );
+    let (sizes, settle, window): (&[usize], f64, f64) = match fid {
+        Fidelity::Paper => (&[10_000, 100_000], 60.0, 300.0),
+        Fidelity::Quick => (&[1_000, 4_000], 60.0, 120.0),
+    };
+    for &n in sizes {
+        let c = run_cell(n, settle, window, 1);
+        let naive = n.saturating_mul(n).saturating_mul(8);
+        t.row(vec![
+            c.n.to_string(),
+            bps(c.measured_bps),
+            bps(c.model_bps),
+            format!("{:.2}", c.measured_bps / c.model_bps.max(1e-9)),
+            format!("{} B", c.table_bytes),
+            format!("{} B", c.base_bytes),
+            format!("{naive} B"),
+            c.base_refreshes.to_string(),
+            c.queue_peak.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scale_memory_contract() {
+        let t = run(Fidelity::Quick);
+        assert_eq!(t.rows.len(), 2);
+        for row in &t.rows {
+            let n: usize = row[0].parse().unwrap();
+            let total: usize =
+                row[4].strip_suffix(" B").unwrap().parse().unwrap();
+            let base: usize = row[5].strip_suffix(" B").unwrap().parse().unwrap();
+            assert!(base >= 8 * n * 9 / 10, "base covers the population: {base} for n={n}");
+            assert!(
+                total < 16 * 8 * n,
+                "routing state {total} B exceeds 16x one table at n={n} — deltas not rebased"
+            );
+        }
+    }
+
+    #[test]
+    fn cell_tracks_model_at_tuned_theta() {
+        // n=4000 tunes theta well below its cap, so measured per-peer
+        // bandwidth must land in the model's order of magnitude
+        let c = run_cell(4_000, 60.0, 120.0, 1);
+        assert!(c.measured_bps > 0.0);
+        assert!(
+            (c.model_bps / 10.0..=c.model_bps * 10.0).contains(&c.measured_bps),
+            "measured {} vs model {}",
+            c.measured_bps,
+            c.model_bps
+        );
+    }
+}

@@ -71,6 +71,12 @@ pub mod names {
             "Live peer population at snapshot time";
         gauge WINDOW_SECS = "window.secs",
             "Measurement-window length in (virtual) seconds";
+        gauge SIM_TABLE_BYTES = "sim.table_bytes",
+            "Total routing-state bytes: shared base snapshot plus every peer's private delta";
+        counter SIM_BASE_REFRESHES = "sim.base_epoch_refreshes",
+            "Ground-truth base snapshot republishes (new epochs) since the sim started";
+        gauge SIM_QUEUE_PEAK_DEPTH = "sim.queue_peak_depth",
+            "High-water mark of in-flight events in the simulator timer wheel";
         hist LOOKUP_RTT_NS = "lookup.rtt_ns",
             "Lookup round-trip time, nanoseconds (paper Fig. 7 latency axis)";
         hist EDRA_PROP_NS = "edra.propagation_ns",

@@ -1,5 +1,67 @@
 //! Full routing tables (§III, §VI): every peer knows every other peer.
+//!
+//! Two representations share one query API:
+//!
+//! * [`Table`] — a plain sorted `Vec<Id>`; owned outright. Ground truth,
+//!   the socket runtime, and small tools use it.
+//! * [`view::TableView`] — an `Arc`-shared epoch-tagged base snapshot
+//!   plus a private sorted delta. Simulated peers use it so that n peers
+//!   cost O(n + Σ|delta|) memory instead of O(n²) (docs/SCALE.md).
+//!
+//! [`RoutingView`] is the read-side trait EDRA's planner is generic
+//! over, so both representations drive dissemination unchanged.
 
 pub mod table;
+pub mod view;
 
 pub use table::Table;
+pub use view::{BaseManager, TableView};
+
+use crate::id::Id;
+
+/// The read-side routing queries EDRA planning needs. Implemented by
+/// both [`Table`] and [`TableView`]; kept minimal on purpose — the
+/// planner only ever asks for the ring size and i-th successors.
+pub trait RoutingView {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Membership test.
+    fn contains(&self, id: Id) -> bool;
+    /// The live owner of an arbitrary ring point (its successor) —
+    /// replica placement routes through this.
+    fn owner_of(&self, key: Id) -> Option<Id>;
+    /// The i-th successor of a *member* peer (None if `p` is unknown).
+    fn succ(&self, p: Id, i: usize) -> Option<Id>;
+}
+
+impl RoutingView for Table {
+    fn len(&self) -> usize {
+        Table::len(self)
+    }
+    fn contains(&self, id: Id) -> bool {
+        Table::contains(self, id)
+    }
+    fn owner_of(&self, key: Id) -> Option<Id> {
+        Table::successor(self, key)
+    }
+    fn succ(&self, p: Id, i: usize) -> Option<Id> {
+        Table::succ(self, p, i)
+    }
+}
+
+impl RoutingView for view::TableView {
+    fn len(&self) -> usize {
+        view::TableView::len(self)
+    }
+    fn contains(&self, id: Id) -> bool {
+        view::TableView::contains(self, id)
+    }
+    fn owner_of(&self, key: Id) -> Option<Id> {
+        view::TableView::successor(self, key)
+    }
+    fn succ(&self, p: Id, i: usize) -> Option<Id> {
+        view::TableView::succ(self, p, i)
+    }
+}

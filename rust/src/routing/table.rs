@@ -19,6 +19,27 @@ pub struct Table {
     ids: Vec<Id>, // sorted, deduped
 }
 
+/// Branchless lower bound: index of the first element `>= key`.
+///
+/// The classic two-pointer halving loop — the update of `base` is a
+/// conditional move, not a branch, so the CPU never mispredicts on the
+/// (random) comparison outcome. Equivalent to
+/// `ids.partition_point(|&x| x < key)`; the equivalence is pinned by a
+/// randomized differential test below and the speedup is tracked by the
+/// `table.successor_branchless/4k` bench.
+#[inline]
+pub(crate) fn lower_bound(ids: &[Id], key: Id) -> usize {
+    let mut base = 0usize;
+    let mut size = ids.len();
+    while size > 1 {
+        let half = size / 2;
+        // cmov-friendly: both sides of the select are always computed
+        base += usize::from(ids[base + half - 1] < key) * half;
+        size -= half;
+    }
+    base + usize::from(size == 1 && ids[base] < key)
+}
+
 impl Table {
     pub fn new() -> Self {
         Table { ids: Vec::new() }
@@ -78,52 +99,56 @@ impl Table {
     /// (inclusive). THE data-path operation.
     #[inline]
     pub fn successor(&self, k: Id) -> Option<Id> {
-        if self.ids.is_empty() {
+        let n = self.ids.len();
+        if n == 0 {
             return None;
         }
-        match self.ids.binary_search(&k) {
-            Ok(i) => Some(self.ids[i]),
-            Err(i) if i == self.ids.len() => Some(self.ids[0]),
-            Err(i) => Some(self.ids[i]),
-        }
+        let i = lower_bound(&self.ids, k);
+        Some(self.ids[if i == n { 0 } else { i }])
     }
 
     /// The i-th successor of a *member* peer.
     pub fn succ(&self, p: Id, i: usize) -> Option<Id> {
-        let pos = self.ids.binary_search(&p).ok()?;
-        Some(self.ids[(pos + i) % self.ids.len()])
+        let n = self.ids.len();
+        let pos = lower_bound(&self.ids, p);
+        if pos == n || self.ids[pos] != p {
+            return None;
+        }
+        Some(self.ids[(pos + i) % n])
     }
 
     /// The i-th predecessor of a *member* peer.
     pub fn pred(&self, p: Id, i: usize) -> Option<Id> {
-        let pos = self.ids.binary_search(&p).ok()?;
         let n = self.ids.len();
+        let pos = lower_bound(&self.ids, p);
+        if pos == n || self.ids[pos] != p {
+            return None;
+        }
         Some(self.ids[(pos + n - (i % n)) % n])
     }
 
     /// Successor/predecessor of an arbitrary point, excluding the point
     /// itself — what a peer uses to find *its own* neighbors.
     pub fn successor_excl(&self, k: Id) -> Option<Id> {
-        if self.ids.is_empty() {
+        let n = self.ids.len();
+        if n == 0 {
             return None;
         }
-        match self.ids.binary_search(&k) {
-            Ok(i) => Some(self.ids[(i + 1) % self.ids.len()]),
-            Err(i) if i == self.ids.len() => Some(self.ids[0]),
-            Err(i) => Some(self.ids[i]),
+        let i = lower_bound(&self.ids, k);
+        if i < n && self.ids[i] == k {
+            Some(self.ids[(i + 1) % n])
+        } else {
+            Some(self.ids[if i == n { 0 } else { i }])
         }
     }
 
     pub fn predecessor_excl(&self, k: Id) -> Option<Id> {
-        if self.ids.is_empty() {
+        let n = self.ids.len();
+        if n == 0 {
             return None;
         }
-        match self.ids.binary_search(&k) {
-            Ok(i) | Err(i) => {
-                let n = self.ids.len();
-                Some(self.ids[(i + n - 1) % n])
-            }
-        }
+        let i = lower_bound(&self.ids, k);
+        Some(self.ids[(i + n - 1) % n])
     }
 
     /// Fraction of entries in `self` that differ from ground truth
@@ -133,19 +158,26 @@ impl Table {
         if truth.ids.is_empty() && self.ids.is_empty() {
             return 0.0;
         }
-        let mut stale = 0usize;
-        // entries we have that truth lacks
-        for id in &self.ids {
-            if !truth.contains(*id) {
-                stale += 1;
+        // single merge walk over the two sorted vectors (O(n), not the
+        // former O(n log n) contains-loop — this runs per peer at scale)
+        let (mut i, mut j, mut stale) = (0usize, 0usize, 0usize);
+        while i < self.ids.len() && j < truth.ids.len() {
+            match self.ids[i].cmp(&truth.ids[j]) {
+                std::cmp::Ordering::Equal => {
+                    i += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    stale += 1;
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    stale += 1;
+                    j += 1;
+                }
             }
         }
-        // entries truth has that we lack
-        for id in &truth.ids {
-            if !self.contains(*id) {
-                stale += 1;
-            }
-        }
+        stale += self.ids.len() - i + truth.ids.len() - j;
         stale as f64 / truth.ids.len().max(1) as f64
     }
 
@@ -225,6 +257,30 @@ mod tests {
         let mine = t(&[1, 2, 3, 5]);
         assert!((mine.staleness_vs(&truth) - 0.5).abs() < 1e-12);
         assert_eq!(Table::new().staleness_vs(&Table::new()), 0.0);
+    }
+
+    #[test]
+    fn lower_bound_matches_partition_point() {
+        let mut state = 0xD1D1u64;
+        let mut next = move || {
+            state = crate::util::rng::mix64(state);
+            state
+        };
+        for n in [0usize, 1, 2, 3, 7, 64, 1000] {
+            let mut ids: Vec<Id> = (0..n).map(|_| Id(next() % 512)).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            for _ in 0..200 {
+                let key = Id(next() % 520);
+                assert_eq!(
+                    lower_bound(&ids, key),
+                    ids.partition_point(|&x| x < key),
+                    "n={} key={:?}",
+                    ids.len(),
+                    key
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,714 @@
+//! Shared-base + delta routing tables (the PR-9 memory model; see
+//! docs/SCALE.md).
+//!
+//! Every simulated peer used to own a full `Table` clone — O(n²) routing
+//! bytes across the system (~8 TB at 10⁶ peers). Here peers share one
+//! immutable, epoch-tagged ground-truth snapshot ([`BaseSnap`], behind an
+//! `Arc`) and privately store only how their view *differs* from it:
+//!
+//! * `added`   — sorted ids the peer believes in that the base lacks
+//!   (missed joins relative to the snapshot),
+//! * `removed` — sorted `u32` indices into the base for ids the peer no
+//!   longer believes in (applied leaves).
+//!
+//! The view's membership set is pure algebra — `base ∖ removed ∪ added` —
+//! so every query the old `Table` answered ([`TableView::successor`],
+//! [`TableView::succ`]/[`TableView::pred`], exclusive neighbors,
+//! [`TableView::staleness_vs`]) is answered by rank/select over two
+//! sorted arrays in O(log² n), byte-identically (pinned by the
+//! differential property test below).
+//!
+//! [`BaseManager`] owns the current snapshot. Ground-truth membership
+//! ops are journaled ([`BaseManager::note`]); every
+//! [`REFRESH_EVERY`] ops the manager publishes a fresh snapshot and
+//! keeps a bounded per-epoch diff history so a peer whose delta grew
+//! past [`REBASE_DELTA`] can re-anchor onto the newest base in O(diff)
+//! ([`TableView::rebase`]) — with an O(n) merge-walk fallback once the
+//! history no longer reaches back to the peer's epoch. Rebasing never
+//! changes a view's membership set, only its representation.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::id::Id;
+use crate::proto::messages::{Event, EventKind};
+use crate::routing::table::lower_bound;
+use crate::routing::Table;
+
+/// Ground-truth ops between snapshot publishes before a new base epoch
+/// is cut. Amortizes the O(n) snapshot copy over 64 membership events.
+pub const REFRESH_EVERY: usize = 64;
+
+/// Per-peer delta size that triggers a rebase onto the newest base.
+pub const REBASE_DELTA: usize = 96;
+
+/// Epoch diffs retained for incremental rebases. At `REFRESH_EVERY` ops
+/// per epoch this reaches ~16k events back — far beyond any peer's lag
+/// in a converging system; stragglers past it pay the O(n) fallback.
+const MAX_DIFFS: usize = 256;
+
+/// One immutable ground-truth snapshot, shared by every view anchored
+/// to its epoch.
+#[derive(Debug)]
+pub struct BaseSnap {
+    pub epoch: u64,
+    pub ids: Vec<Id>, // sorted, deduped
+}
+
+/// Owner of the current [`BaseSnap`] plus the journal that turns
+/// ground-truth churn into epoch diffs.
+#[derive(Debug)]
+pub struct BaseManager {
+    cur: Arc<BaseSnap>,
+    /// `diffs[i]` is the op log transforming epoch `first_epoch + i`
+    /// into `first_epoch + i + 1`, in application order.
+    diffs: VecDeque<Vec<(Id, bool)>>,
+    first_epoch: u64,
+    /// Ops since the current snapshot was cut (base → live truth).
+    pending: Vec<(Id, bool)>,
+    refreshes: u64,
+}
+
+impl Default for BaseManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BaseManager {
+    pub fn new() -> Self {
+        BaseManager {
+            cur: Arc::new(BaseSnap { epoch: 0, ids: Vec::new() }),
+            diffs: VecDeque::new(),
+            first_epoch: 0,
+            pending: Vec::new(),
+            refreshes: 0,
+        }
+    }
+
+    /// Re-anchor on `truth` wholesale (bootstrap): new epoch, no diffs.
+    pub fn reset_from(&mut self, truth: &Table) {
+        self.cur =
+            Arc::new(BaseSnap { epoch: self.cur.epoch + 1, ids: truth.ids().to_vec() });
+        self.diffs.clear();
+        self.pending.clear();
+        self.first_epoch = self.cur.epoch;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.cur.epoch
+    }
+
+    /// Snapshot publishes since construction (`sim.base_epoch_refreshes`).
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
+    }
+
+    /// Bytes held by the one shared snapshot (counted once per system).
+    pub fn base_bytes(&self) -> usize {
+        self.cur.ids.len() * std::mem::size_of::<Id>()
+    }
+
+    /// Journal one ground-truth membership op (call right after the
+    /// truth table changed; `truth` is the post-op table). Returns true
+    /// when this op triggered a snapshot refresh.
+    pub fn note(&mut self, id: Id, is_add: bool, truth: &Table) -> bool {
+        self.pending.push((id, is_add));
+        if self.pending.len() < REFRESH_EVERY {
+            return false;
+        }
+        let ops = std::mem::take(&mut self.pending);
+        self.diffs.push_back(ops);
+        if self.diffs.len() > MAX_DIFFS {
+            self.diffs.pop_front();
+            self.first_epoch += 1;
+        }
+        self.cur =
+            Arc::new(BaseSnap { epoch: self.cur.epoch + 1, ids: truth.ids().to_vec() });
+        self.refreshes += 1;
+        true
+    }
+
+    /// A view equal to live ground truth: current base plus the pending
+    /// journal replayed as delta ops. O(pending), not O(n) — this is
+    /// what replaced the `truth.clone()` handed to joiners.
+    pub fn view_of_truth(&self, truth: &Table) -> TableView {
+        let mut v = TableView {
+            base: self.cur.clone(),
+            added: Vec::new(),
+            removed: Vec::new(),
+        };
+        for &(id, is_add) in &self.pending {
+            if is_add {
+                v.insert(id);
+            } else {
+                v.remove(id);
+            }
+        }
+        debug_assert_eq!(v.len(), truth.len(), "base + pending must equal truth");
+        v
+    }
+
+    /// Flattened op iterator from `epoch` up to the current base, or
+    /// None if the history was capped past it.
+    fn ops_since(&self, epoch: u64) -> Option<impl Iterator<Item = &(Id, bool)>> {
+        if epoch < self.first_epoch {
+            return None;
+        }
+        let skip = (epoch - self.first_epoch) as usize;
+        Some(self.diffs.iter().skip(skip).flatten())
+    }
+
+    #[cfg(test)]
+    fn forget_history(&mut self) {
+        self.first_epoch += self.diffs.len() as u64;
+        self.diffs.clear();
+    }
+}
+
+/// A peer's routing view: shared base snapshot + private sorted delta.
+#[derive(Debug, Clone)]
+pub struct TableView {
+    base: Arc<BaseSnap>,
+    /// In the view but not in the base. Sorted; disjoint from the live
+    /// part of the base.
+    added: Vec<Id>,
+    /// Indices into `base.ids` the view no longer contains. Sorted.
+    removed: Vec<u32>,
+}
+
+impl TableView {
+    pub fn len(&self) -> usize {
+        self.base.ids.len() - self.removed.len() + self.added.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn base_epoch(&self) -> u64 {
+        self.base.epoch
+    }
+
+    /// Private (per-peer) delta entries — the rebase trigger.
+    pub fn delta_len(&self) -> usize {
+        self.added.len() + self.removed.len()
+    }
+
+    /// Per-peer footprint: delta only. The base is shared and counted
+    /// once per system ([`BaseManager::base_bytes`]).
+    pub fn memory_bytes(&self) -> usize {
+        self.added.len() * std::mem::size_of::<Id>()
+            + self.removed.len() * std::mem::size_of::<u32>()
+    }
+
+    pub fn contains(&self, id: Id) -> bool {
+        if self.added.binary_search(&id).is_ok() {
+            return true;
+        }
+        match self.base.ids.binary_search(&id) {
+            Ok(i) => self.removed.binary_search(&(i as u32)).is_err(),
+            Err(_) => false,
+        }
+    }
+
+    /// Insert a peer (idempotent). Returns true if it was new.
+    pub fn insert(&mut self, id: Id) -> bool {
+        match self.base.ids.binary_search(&id) {
+            Ok(i) => match self.removed.binary_search(&(i as u32)) {
+                Ok(pos) => {
+                    self.removed.remove(pos);
+                    true
+                }
+                Err(_) => false, // live in base already
+            },
+            Err(_) => match self.added.binary_search(&id) {
+                Ok(_) => false,
+                Err(pos) => {
+                    self.added.insert(pos, id);
+                    true
+                }
+            },
+        }
+    }
+
+    /// Remove a peer. Returns true if it was present.
+    pub fn remove(&mut self, id: Id) -> bool {
+        match self.added.binary_search(&id) {
+            Ok(pos) => {
+                self.added.remove(pos);
+                true
+            }
+            Err(_) => match self.base.ids.binary_search(&id) {
+                Ok(i) => match self.removed.binary_search(&(i as u32)) {
+                    Ok(_) => false, // already removed
+                    Err(pos) => {
+                        self.removed.insert(pos, i as u32);
+                        true
+                    }
+                },
+                Err(_) => false,
+            },
+        }
+    }
+
+    /// Apply a membership event; true if the view changed (same
+    /// contract as `Table::apply`).
+    pub fn apply(&mut self, ev: &Event) -> bool {
+        match ev.kind {
+            EventKind::Join => self.insert(ev.peer),
+            EventKind::Leave => self.remove(ev.peer),
+        }
+    }
+
+    /// Number of view members strictly below `key`. The rank primitive
+    /// behind every ring query: three sorted-array partition points.
+    fn count_lt(&self, key: Id) -> usize {
+        let b = &self.base.ids;
+        let base_lt = lower_bound(b, key);
+        // removed is sorted by index and b is sorted by value, so the
+        // referenced ids are ascending in index order too
+        let removed_lt = self.removed.partition_point(|&ri| b[ri as usize] < key);
+        let added_lt = lower_bound(&self.added, key);
+        base_lt - removed_lt + added_lt
+    }
+
+    /// The `j`-th smallest view member (0-indexed; `j < len`).
+    fn select(&self, j: usize) -> Id {
+        debug_assert!(j < self.len());
+        // How many `added` entries rank below j? count_lt(added[x]) is
+        // strictly increasing in x, so partition_point finds the split.
+        let x = self.added.partition_point(|&a| self.count_lt(a) < j);
+        if x < self.added.len() && self.count_lt(self.added[x]) == j {
+            return self.added[x];
+        }
+        // Answer lives in the base: the (j - x)-th *live* base entry.
+        // Fixed-point skip over removed indices (≤ |removed|+1 rounds).
+        let y = j - x;
+        let mut idx = y;
+        loop {
+            let skipped = self.removed.partition_point(|&r| (r as usize) <= idx);
+            let next = y + skipped;
+            if next == idx {
+                break;
+            }
+            idx = next;
+        }
+        self.base.ids[idx]
+    }
+
+    /// Successor of `k` on the ring (inclusive, wrapping) — identical
+    /// to `Table::successor`.
+    #[inline]
+    pub fn successor(&self, k: Id) -> Option<Id> {
+        let n = self.len();
+        if n == 0 {
+            return None;
+        }
+        let r = self.count_lt(k);
+        Some(self.select(if r == n { 0 } else { r }))
+    }
+
+    /// The i-th successor of a *member* peer.
+    pub fn succ(&self, p: Id, i: usize) -> Option<Id> {
+        if !self.contains(p) {
+            return None;
+        }
+        let n = self.len();
+        let pos = self.count_lt(p);
+        Some(self.select((pos + i) % n))
+    }
+
+    /// The i-th predecessor of a *member* peer.
+    pub fn pred(&self, p: Id, i: usize) -> Option<Id> {
+        if !self.contains(p) {
+            return None;
+        }
+        let n = self.len();
+        let pos = self.count_lt(p);
+        Some(self.select((pos + n - (i % n)) % n))
+    }
+
+    pub fn successor_excl(&self, k: Id) -> Option<Id> {
+        let n = self.len();
+        if n == 0 {
+            return None;
+        }
+        let r = self.count_lt(k);
+        if self.contains(k) {
+            Some(self.select((r + 1) % n))
+        } else {
+            Some(self.select(if r == n { 0 } else { r }))
+        }
+    }
+
+    pub fn predecessor_excl(&self, k: Id) -> Option<Id> {
+        let n = self.len();
+        if n == 0 {
+            return None;
+        }
+        let r = self.count_lt(k);
+        Some(self.select((r + n - 1) % n))
+    }
+
+    /// Sorted iterator over the view's members (merge of live base and
+    /// added, both already sorted and disjoint).
+    pub fn iter(&self) -> ViewIter<'_> {
+        ViewIter { view: self, bi: 0, ai: 0, ri: 0 }
+    }
+
+    /// Materialize the membership (diagnostics / full-rebase fallback).
+    pub fn to_ids(&self) -> Vec<Id> {
+        self.iter().collect()
+    }
+
+    /// Staleness vs ground truth — same metric as `Table::staleness_vs`
+    /// (symmetric difference over truth size), via one merge walk.
+    pub fn staleness_vs(&self, truth: &Table) -> f64 {
+        let t = truth.ids();
+        if t.is_empty() && self.is_empty() {
+            return 0.0;
+        }
+        let mut stale = 0usize;
+        let mut j = 0usize;
+        for id in self.iter() {
+            while j < t.len() && t[j] < id {
+                stale += 1;
+                j += 1;
+            }
+            if j < t.len() && t[j] == id {
+                j += 1;
+            } else {
+                stale += 1;
+            }
+        }
+        stale += t.len() - j;
+        stale as f64 / t.len().max(1) as f64
+    }
+
+    /// Re-anchor this view onto the manager's current base. Membership
+    /// is preserved exactly; only the representation changes. O(ops
+    /// since our epoch) via the diff history, O(n) merge walk once the
+    /// history has been capped past our epoch.
+    pub fn rebase(&mut self, mgr: &BaseManager) {
+        if self.base.epoch == mgr.cur.epoch {
+            return;
+        }
+        let Some(ops) = mgr.ops_since(self.base.epoch) else {
+            // fallback: materialize and re-diff against the new base
+            let mine = self.to_ids();
+            let nb = &mgr.cur.ids;
+            let mut added = Vec::new();
+            let mut removed = Vec::new();
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < mine.len() && j < nb.len() {
+                match mine[i].cmp(&nb[j]) {
+                    std::cmp::Ordering::Equal => {
+                        i += 1;
+                        j += 1;
+                    }
+                    std::cmp::Ordering::Less => {
+                        added.push(mine[i]);
+                        i += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        removed.push(j as u32);
+                        j += 1;
+                    }
+                }
+            }
+            added.extend_from_slice(&mine[i..]);
+            removed.extend((j..nb.len()).map(|k| k as u32));
+            self.added = added;
+            self.removed = removed;
+            self.base = mgr.cur.clone();
+            return;
+        };
+        // Incremental: walk the op log keeping two small sorted sets —
+        // `extra` (in view, not in the evolving base) and `missing` (in
+        // the evolving base, not in view). The view's set never changes.
+        let mut extra = std::mem::take(&mut self.added);
+        let mut missing: Vec<Id> =
+            self.removed.iter().map(|&i| self.base.ids[i as usize]).collect();
+        for &(id, is_add) in ops {
+            if is_add {
+                match extra.binary_search(&id) {
+                    // the base caught up with an id we knew early
+                    Ok(p) => {
+                        extra.remove(p);
+                    }
+                    Err(_) => {
+                        if let Err(p) = missing.binary_search(&id) {
+                            missing.insert(p, id);
+                        }
+                    }
+                }
+            } else {
+                match missing.binary_search(&id) {
+                    // the base caught up with an id we dropped early
+                    Ok(p) => {
+                        missing.remove(p);
+                    }
+                    Err(_) => {
+                        if let Err(p) = extra.binary_search(&id) {
+                            extra.insert(p, id);
+                        }
+                    }
+                }
+            }
+        }
+        let nb = &mgr.cur.ids;
+        let mut removed = Vec::with_capacity(missing.len());
+        for id in missing {
+            // missing ⊆ new base by construction; defensive skip if not
+            if let Ok(i) = nb.binary_search(&id) {
+                removed.push(i as u32);
+            }
+        }
+        self.added = extra;
+        self.removed = removed;
+        self.base = mgr.cur.clone();
+    }
+
+    /// Rebase when the private delta outgrew [`REBASE_DELTA`] — the
+    /// amortized hook callers invoke after mutating the view.
+    #[inline]
+    pub fn maybe_rebase(&mut self, mgr: &BaseManager) {
+        if self.delta_len() >= REBASE_DELTA && self.base.epoch != mgr.cur.epoch {
+            self.rebase(mgr);
+        }
+    }
+}
+
+/// Sorted merge iterator over a view's members.
+pub struct ViewIter<'a> {
+    view: &'a TableView,
+    bi: usize,
+    ai: usize,
+    ri: usize,
+}
+
+impl Iterator for ViewIter<'_> {
+    type Item = Id;
+
+    fn next(&mut self) -> Option<Id> {
+        let b = &self.view.base.ids;
+        let added = &self.view.added;
+        let removed = &self.view.removed;
+        loop {
+            // skip removed base slots at the cursor
+            while self.bi < b.len()
+                && self.ri < removed.len()
+                && removed[self.ri] as usize == self.bi
+            {
+                self.bi += 1;
+                self.ri += 1;
+            }
+            let have_b = self.bi < b.len();
+            let have_a = self.ai < added.len();
+            return match (have_b, have_a) {
+                (false, false) => None,
+                (true, false) => {
+                    let id = b[self.bi];
+                    self.bi += 1;
+                    Some(id)
+                }
+                (false, true) => {
+                    let id = added[self.ai];
+                    self.ai += 1;
+                    Some(id)
+                }
+                (true, true) => {
+                    if added[self.ai] < b[self.bi] {
+                        let id = added[self.ai];
+                        self.ai += 1;
+                        Some(id)
+                    } else {
+                        let id = b[self.bi];
+                        self.bi += 1;
+                        Some(id)
+                    }
+                }
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn table(ids: &[u64]) -> Table {
+        Table::from_ids(ids.iter().map(|&x| Id(x)).collect())
+    }
+
+    fn mgr_over(ids: &[u64]) -> (BaseManager, Table) {
+        let t = table(ids);
+        let mut m = BaseManager::new();
+        m.reset_from(&t);
+        (m, t)
+    }
+
+    #[test]
+    fn fresh_view_equals_base() {
+        let (m, t) = mgr_over(&[10, 20, 30, 40]);
+        let v = m.view_of_truth(&t);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.to_ids(), t.ids());
+        assert_eq!(v.delta_len(), 0);
+        assert_eq!(v.memory_bytes(), 0, "no private bytes before any delta");
+    }
+
+    #[test]
+    fn delta_ops_and_queries() {
+        let (m, t) = mgr_over(&[10, 20, 30]);
+        let mut v = m.view_of_truth(&t);
+        assert!(v.insert(Id(25)));
+        assert!(!v.insert(Id(25)), "duplicate insert");
+        assert!(v.remove(Id(10)));
+        assert!(!v.remove(Id(10)));
+        assert_eq!(v.to_ids(), vec![Id(20), Id(25), Id(30)]);
+        assert_eq!(v.successor(Id(21)), Some(Id(25)));
+        assert_eq!(v.successor(Id(31)), Some(Id(20)), "wraps");
+        assert_eq!(v.succ(Id(25), 1), Some(Id(30)));
+        assert_eq!(v.pred(Id(25), 1), Some(Id(20)));
+        assert_eq!(v.succ(Id(10), 1), None, "removed id is a non-member");
+        assert_eq!(v.successor_excl(Id(25)), Some(Id(30)));
+        assert_eq!(v.predecessor_excl(Id(20)), Some(Id(30)));
+        // re-adding a removed base id shrinks the delta back
+        assert!(v.insert(Id(10)));
+        assert!(v.remove(Id(25)));
+        assert_eq!(v.delta_len(), 0);
+    }
+
+    #[test]
+    fn view_of_truth_tracks_pending_journal() {
+        let (mut m, mut t) = mgr_over(&[1, 2, 3]);
+        t.insert(Id(9));
+        m.note(Id(9), true, &t);
+        t.remove(Id(2));
+        m.note(Id(2), false, &t);
+        let v = m.view_of_truth(&t);
+        assert_eq!(v.to_ids(), t.ids());
+        assert_eq!(v.staleness_vs(&t), 0.0);
+    }
+
+    #[test]
+    fn refresh_cuts_epochs_and_rebase_is_lossless() {
+        let (mut m, mut t) = mgr_over(&[5, 10, 15, 20]);
+        let mut v = m.view_of_truth(&t);
+        let e0 = m.epoch();
+        // churn truth through several refresh windows
+        let mut next = 1000u64;
+        for _ in 0..(REFRESH_EVERY * 3 + 7) {
+            t.insert(Id(next));
+            m.note(Id(next), true, &t);
+            next += 1;
+        }
+        assert!(m.epoch() > e0);
+        assert_eq!(m.refreshes(), 3);
+        // the view didn't hear about any of it: its set is unchanged
+        assert_eq!(v.len(), 4);
+        let before = v.to_ids();
+        v.rebase(&m);
+        assert_eq!(v.base_epoch(), m.epoch());
+        assert_eq!(v.to_ids(), before, "rebase preserves membership exactly");
+        // after rebase the missed joins live in `removed` (in base, not
+        // in view) — delta grows, but stays O(lag), not O(n)
+        assert_eq!(v.delta_len(), REFRESH_EVERY * 3);
+    }
+
+    #[test]
+    fn rebase_fallback_without_history() {
+        let (mut m, mut t) = mgr_over(&[5, 10, 15, 20]);
+        let mut v = m.view_of_truth(&t);
+        v.insert(Id(7));
+        v.remove(Id(15));
+        for i in 0..(REFRESH_EVERY * 2) {
+            let id = Id(2000 + i as u64);
+            t.insert(id);
+            m.note(id, true, &t);
+        }
+        m.forget_history();
+        let before = v.to_ids();
+        v.rebase(&m);
+        assert_eq!(v.to_ids(), before, "O(n) fallback preserves membership");
+        assert_eq!(v.base_epoch(), m.epoch());
+    }
+
+    /// Satellite: differential property test — the base+delta view must
+    /// answer every query byte-identically to the old `Vec<Id>` Table
+    /// across seeded random op sequences, including epoch refreshes and
+    /// both rebase paths.
+    #[test]
+    fn differential_view_vs_table() {
+        for seed in [1u64, 7, 0xD1B7] {
+            let mut rng = Rng::new(seed);
+            let mut truth = Table::new();
+            let mut m = BaseManager::new();
+            // seed population
+            for i in 0..64 {
+                truth.insert(Id(rng.next_u64() % 10_000 + i));
+            }
+            m.reset_from(&truth);
+            let mut view = m.view_of_truth(&truth);
+            let mut reference = truth.clone(); // old representation, same set
+            for step in 0..4000 {
+                match rng.below(100) {
+                    // membership event applied to BOTH representations
+                    0..=39 => {
+                        let ev = if rng.chance(0.5) {
+                            Event::join(Id(rng.next_u64() % 10_000))
+                        } else {
+                            Event::leave(Id(rng.next_u64() % 10_000))
+                        };
+                        assert_eq!(view.apply(&ev), reference.apply(&ev), "step {step}");
+                    }
+                    // ground-truth churn (drives epoch refreshes)
+                    40..=69 => {
+                        let id = Id(rng.next_u64() % 10_000);
+                        if rng.chance(0.5) {
+                            if truth.insert(id) {
+                                m.note(id, true, &truth);
+                            }
+                        } else if truth.remove(id) {
+                            m.note(id, false, &truth);
+                        }
+                    }
+                    70..=74 => view.rebase(&m),
+                    75 => {
+                        m.forget_history();
+                        view.rebase(&m);
+                    }
+                    _ => {
+                        let k = Id(rng.next_u64() % 11_000);
+                        assert_eq!(view.successor(k), reference.successor(k), "step {step}");
+                        assert_eq!(
+                            view.successor_excl(k),
+                            reference.successor_excl(k),
+                            "step {step}"
+                        );
+                        assert_eq!(
+                            view.predecessor_excl(k),
+                            reference.predecessor_excl(k),
+                            "step {step}"
+                        );
+                        let i = rng.below(8) as usize;
+                        assert_eq!(view.succ(k, i), reference.succ(k, i), "step {step}");
+                        assert_eq!(view.pred(k, i), reference.pred(k, i), "step {step}");
+                        assert_eq!(view.contains(k), reference.contains(k));
+                    }
+                }
+                assert_eq!(view.len(), reference.len(), "step {step}");
+                if step % 512 == 0 {
+                    assert_eq!(view.to_ids(), reference.ids().to_vec(), "step {step}");
+                    let s_view = view.staleness_vs(&truth);
+                    let s_ref = reference.staleness_vs(&truth);
+                    assert!((s_view - s_ref).abs() < 1e-12, "step {step}");
+                }
+            }
+            assert_eq!(view.to_ids(), reference.ids().to_vec());
+        }
+    }
+}

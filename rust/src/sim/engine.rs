@@ -2,9 +2,25 @@
 //!
 //! Deterministic: ties in time break by insertion sequence, so a given
 //! (seed, configuration) always replays the same interleaving.
+//!
+//! The queue is a 3-level hierarchical timer wheel (1024 slots/level at
+//! ~1 ms tick resolution, plus an overflow list) rather than a
+//! `BinaryHeap`. At million-peer scale the sim keeps millions of timers
+//! in flight; the heap's O(log n) sift with cold cache lines per op was
+//! a top profile entry, while the wheel inserts in O(1) for the common
+//! near-future case and pops by scanning a 16-word occupancy bitmap.
+//!
+//! Determinism argument (docs/SCALE.md has the long form): events in
+//! *different* ticks drain strictly in tick order as the cursor sweeps;
+//! events in the *same* tick share one level-0 slot, which is kept
+//! sorted by the exact `(at, seq)` key the heap ordered by — so the pop
+//! sequence is identical to the heap's, including the clamped-to-now
+//! case, which lands in the cursor's current slot and sorts by the same
+//! key. Level-1/2 slots and the overflow list are unsorted on purpose:
+//! they are drained *wholesale* into lower levels before anything in
+//! them can pop, so their internal order never influences pop order.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// A world advances by handling its own event type.
 pub trait World {
@@ -18,21 +34,46 @@ struct Timed<E> {
     ev: E,
 }
 
-impl<E> PartialEq for Timed<E> {
-    fn eq(&self, o: &Self) -> bool {
-        self.at == o.at && self.seq == o.seq
-    }
+const WHEEL_BITS: u32 = 10;
+const WHEEL_SLOTS: usize = 1 << WHEEL_BITS; // 1024 slots per level
+const SLOT_MASK: u64 = WHEEL_SLOTS as u64 - 1;
+const OCC_WORDS: usize = WHEEL_SLOTS / 64;
+/// Ticks per second: ~1 ms resolution. Level 0 spans 1 s, level 1 ~17
+/// min, level 2 ~12 days of virtual time; the rest overflows.
+const TICK_HZ: f64 = 1024.0;
+
+#[inline]
+fn tick_of(at: f64) -> u64 {
+    (at * TICK_HZ) as u64 // saturating float->int cast
 }
-impl<E> Eq for Timed<E> {}
-impl<E> PartialOrd for Timed<E> {
-    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
-        Some(self.cmp(o))
-    }
+
+#[inline]
+fn occ_set(words: &mut [u64; OCC_WORDS], s: usize) {
+    words[s >> 6] |= 1u64 << (s & 63);
 }
-impl<E> Ord for Timed<E> {
-    fn cmp(&self, o: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first.
-        o.at.total_cmp(&self.at).then_with(|| o.seq.cmp(&self.seq))
+
+#[inline]
+fn occ_clear(words: &mut [u64; OCC_WORDS], s: usize) {
+    words[s >> 6] &= !(1u64 << (s & 63));
+}
+
+/// Lowest occupied slot index `>= from`, if any.
+#[inline]
+fn occ_next(words: &[u64; OCC_WORDS], from: usize) -> Option<usize> {
+    if from >= WHEEL_SLOTS {
+        return None;
+    }
+    let mut w = from >> 6;
+    let mut word = words[w] & (!0u64 << (from & 63));
+    loop {
+        if word != 0 {
+            return Some((w << 6) + word.trailing_zeros() as usize);
+        }
+        w += 1;
+        if w >= OCC_WORDS {
+            return None;
+        }
+        word = words[w];
     }
 }
 
@@ -40,7 +81,21 @@ impl<E> Ord for Timed<E> {
 pub struct Queue<E> {
     now: f64,
     seq: u64,
-    heap: BinaryHeap<Timed<E>>,
+    /// Wheel cursor: every queued event's (clamped) tick is `>= cur`.
+    cur: u64,
+    /// Level 0: one slot per tick; each slot sorted *descending* by
+    /// `(at, seq)` so the earliest event pops from the back in O(1).
+    l0: Vec<Vec<Timed<E>>>,
+    /// Levels 1/2: one slot per 2^10 / 2^20 ticks; unsorted (drained
+    /// wholesale into lower levels as the cursor advances).
+    l1: Vec<Vec<Timed<E>>>,
+    l2: Vec<Vec<Timed<E>>>,
+    /// Beyond level 2's horizon.
+    overflow: Vec<Timed<E>>,
+    /// Per-level slot occupancy bitmaps.
+    occ: [[u64; OCC_WORDS]; 3],
+    len: usize,
+    peak: usize,
     processed: u64,
 }
 
@@ -52,7 +107,19 @@ impl<E> Default for Queue<E> {
 
 impl<E> Queue<E> {
     pub fn new() -> Self {
-        Queue { now: 0.0, seq: 0, heap: BinaryHeap::new(), processed: 0 }
+        Queue {
+            now: 0.0,
+            seq: 0,
+            cur: 0,
+            l0: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            l1: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            l2: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            overflow: Vec::new(),
+            occ: [[0; OCC_WORDS]; 3],
+            len: 0,
+            peak: 0,
+            processed: 0,
+        }
     }
 
     pub fn now(&self) -> f64 {
@@ -60,10 +127,14 @@ impl<E> Queue<E> {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+    /// High-water mark of in-flight events (`sim.queue_peak_depth`).
+    pub fn peak_len(&self) -> usize {
+        self.peak
     }
     /// Total events handled so far (throughput metric for §Perf).
     pub fn processed(&self) -> u64 {
@@ -74,7 +145,12 @@ impl<E> Queue<E> {
     pub fn at(&mut self, at: f64, ev: E) {
         let at = if at < self.now { self.now } else { at };
         self.seq += 1;
-        self.heap.push(Timed { at, seq: self.seq, ev });
+        self.len += 1;
+        if self.len > self.peak {
+            self.peak = self.len;
+        }
+        let seq = self.seq;
+        self.place(Timed { at, seq, ev });
     }
 
     /// Schedule `ev` after a delay.
@@ -91,15 +167,91 @@ impl<E> Queue<E> {
         }
     }
 
-    fn pop_due(&mut self, until: f64) -> Option<(f64, E)> {
-        if self.heap.peek().map(|t| t.at <= until).unwrap_or(false) {
-            let t = self.heap.pop().unwrap();
-            self.now = t.at;
-            self.processed += 1;
-            Some((t.at, t.ev))
+    /// File `t` into the wheel level whose window (relative to the
+    /// cursor) contains its tick. Ticks already passed by the cursor
+    /// (clamped events) land in the cursor's own slot.
+    fn place(&mut self, t: Timed<E>) {
+        let tk = tick_of(t.at).max(self.cur);
+        let cur = self.cur;
+        if tk >> WHEEL_BITS == cur >> WHEEL_BITS {
+            let s = (tk & SLOT_MASK) as usize;
+            let v = &mut self.l0[s];
+            let pos = v.partition_point(|x| {
+                x.at.total_cmp(&t.at).then_with(|| x.seq.cmp(&t.seq)) == Ordering::Greater
+            });
+            v.insert(pos, t);
+            occ_set(&mut self.occ[0], s);
+        } else if tk >> (2 * WHEEL_BITS) == cur >> (2 * WHEEL_BITS) {
+            let s = ((tk >> WHEEL_BITS) & SLOT_MASK) as usize;
+            self.l1[s].push(t);
+            occ_set(&mut self.occ[1], s);
+        } else if tk >> (3 * WHEEL_BITS) == cur >> (3 * WHEEL_BITS) {
+            let s = ((tk >> (2 * WHEEL_BITS)) & SLOT_MASK) as usize;
+            self.l2[s].push(t);
+            occ_set(&mut self.occ[2], s);
         } else {
-            None
+            self.overflow.push(t);
         }
+    }
+
+    /// Advance the cursor (draining upper levels down) until level 0
+    /// holds the globally earliest event; return its slot. None = empty.
+    fn cascade_to_l0(&mut self) -> Option<usize> {
+        loop {
+            if let Some(s) = occ_next(&self.occ[0], (self.cur & SLOT_MASK) as usize) {
+                return Some(s);
+            }
+            // level-0 window exhausted: drain the next level-1 slot
+            let p1 = ((self.cur >> WHEEL_BITS) & SLOT_MASK) as usize;
+            if let Some(s1) = occ_next(&self.occ[1], p1 + 1) {
+                self.cur = ((self.cur >> (2 * WHEEL_BITS)) << (2 * WHEEL_BITS))
+                    | ((s1 as u64) << WHEEL_BITS);
+                let evs = std::mem::take(&mut self.l1[s1]);
+                occ_clear(&mut self.occ[1], s1);
+                for t in evs {
+                    self.place(t);
+                }
+                continue;
+            }
+            // level-1 window exhausted too: drain the next level-2 slot
+            let p2 = ((self.cur >> (2 * WHEEL_BITS)) & SLOT_MASK) as usize;
+            if let Some(s2) = occ_next(&self.occ[2], p2 + 1) {
+                self.cur = ((self.cur >> (3 * WHEEL_BITS)) << (3 * WHEEL_BITS))
+                    | ((s2 as u64) << (2 * WHEEL_BITS));
+                let evs = std::mem::take(&mut self.l2[s2]);
+                occ_clear(&mut self.occ[2], s2);
+                for t in evs {
+                    self.place(t);
+                }
+                continue;
+            }
+            // whole wheel empty: jump to the earliest overflow event
+            if self.overflow.is_empty() {
+                return None;
+            }
+            let min_tk = self.overflow.iter().map(|t| tick_of(t.at)).min().unwrap();
+            self.cur = (min_tk >> (2 * WHEEL_BITS)) << (2 * WHEEL_BITS);
+            let evs = std::mem::take(&mut self.overflow);
+            for t in evs {
+                self.place(t);
+            }
+        }
+    }
+
+    fn pop_due(&mut self, until: f64) -> Option<(f64, E)> {
+        let s = self.cascade_to_l0()?;
+        if self.l0[s].last().map(|t| t.at > until).unwrap_or(true) {
+            return None;
+        }
+        let t = self.l0[s].pop().unwrap();
+        if self.l0[s].is_empty() {
+            occ_clear(&mut self.occ[0], s);
+        }
+        self.cur = (self.cur & !SLOT_MASK) | s as u64;
+        self.now = t.at;
+        self.len -= 1;
+        self.processed += 1;
+        Some((t.at, t.ev))
     }
 }
 
@@ -234,5 +386,124 @@ mod tests {
         q.at(1.0, 9); // in the past: clamps to now=5... fires at >=5
         run_until(&mut w, &mut q, 10.0);
         assert!(w.seen.iter().any(|&(t, e)| e == 9 && t >= 5.0));
+    }
+
+    #[test]
+    fn peak_depth_tracks_high_water_mark() {
+        let mut w = Recorder { seen: vec![] };
+        let mut q = Queue::new();
+        for i in 0..50 {
+            q.at(i as f64, 0);
+        }
+        assert_eq!(q.peak_len(), 50);
+        run_until(&mut w, &mut q, 100.0);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.peak_len(), 50, "peak survives the drain");
+    }
+
+    /// Reference implementation: the old `BinaryHeap` calendar queue.
+    /// The wheel must reproduce its pop sequence exactly.
+    struct RefQueue<E> {
+        now: f64,
+        seq: u64,
+        heap: std::collections::BinaryHeap<RefTimed<E>>,
+    }
+
+    struct RefTimed<E> {
+        at: f64,
+        seq: u64,
+        ev: E,
+    }
+
+    impl<E> PartialEq for RefTimed<E> {
+        fn eq(&self, o: &Self) -> bool {
+            self.at == o.at && self.seq == o.seq
+        }
+    }
+    impl<E> Eq for RefTimed<E> {}
+    impl<E> PartialOrd for RefTimed<E> {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl<E> Ord for RefTimed<E> {
+        fn cmp(&self, o: &Self) -> Ordering {
+            o.at.total_cmp(&self.at).then_with(|| o.seq.cmp(&self.seq))
+        }
+    }
+
+    impl<E> RefQueue<E> {
+        fn new() -> Self {
+            RefQueue { now: 0.0, seq: 0, heap: std::collections::BinaryHeap::new() }
+        }
+        fn at(&mut self, at: f64, ev: E) {
+            let at = if at < self.now { self.now } else { at };
+            self.seq += 1;
+            self.heap.push(RefTimed { at, seq: self.seq, ev });
+        }
+        fn pop_due(&mut self, until: f64) -> Option<(f64, E)> {
+            if self.heap.peek().map(|t| t.at <= until).unwrap_or(false) {
+                let t = self.heap.pop().unwrap();
+                self.now = t.at;
+                Some((t.at, t.ev))
+            } else {
+                None
+            }
+        }
+    }
+
+    /// Differential test: drive wheel and heap through an identical
+    /// randomized workload — near/far/same-tick/past inserts interleaved
+    /// with partial drains — and demand identical pop sequences.
+    #[test]
+    fn wheel_matches_heap_reference() {
+        for seed in [3u64, 11, 0x5CA1E] {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let mut wheel: Queue<u64> = Queue::new();
+            let mut heap: RefQueue<u64> = RefQueue::new();
+            let mut id = 0u64;
+            let mut horizon = 0.0f64;
+            for _round in 0..300 {
+                // a burst of inserts across every placement regime
+                for _ in 0..rng.below(20) {
+                    let at = match rng.below(10) {
+                        0 => horizon - rng.range(0, 5_000) as f64 * 1e-3, // past: clamps
+                        1..=5 => horizon + rng.range(0, 900) as f64 * 1e-3, // level 0/1
+                        6..=7 => horizon + rng.range(0, 1_000_000) as f64 * 1e-3, // level 1/2
+                        8 => horizon + rng.range(0, 2_000_000_000) as f64 * 1e-3, // level 2+
+                        _ => horizon + rng.below(4) as f64 * (1.0 / TICK_HZ), // tick ties
+                    };
+                    wheel.at(at, id);
+                    heap.at(at, id);
+                    id += 1;
+                }
+                // drain up to a horizon that sometimes jumps far ahead
+                horizon += match rng.below(8) {
+                    0 => 2_000.0,
+                    1 => 100_000.0,
+                    _ => rng.range(0, 2_000) as f64 * 1e-3,
+                };
+                loop {
+                    let a = wheel.pop_due(horizon);
+                    let b = heap.pop_due(horizon);
+                    match (a, b) {
+                        (None, None) => break,
+                        (Some((ta, ea)), Some((tb, eb))) => {
+                            assert_eq!(ea, eb, "seed {seed}: event order diverged");
+                            assert_eq!(ta, tb, "seed {seed}: pop time diverged");
+                            // spawn follow-ups mid-drain, like World::handle
+                            if ea % 7 == 0 {
+                                let dt = rng.range(0, 10_000) as f64 * 1e-3;
+                                wheel.at(ta + dt, id);
+                                heap.at(ta + dt, id);
+                                id += 1;
+                            }
+                        }
+                        (a, b) => panic!("seed {seed}: one queue dried up: {a:?} vs {b:?}"),
+                    }
+                }
+                assert_eq!(wheel.len(), heap.heap.len(), "seed {seed}");
+            }
+        }
     }
 }

@@ -25,7 +25,7 @@ use crate::id::{space, Id};
 use crate::obs::{names, MsgClass, Registry};
 use crate::proto::messages::{Message, MessageBody};
 use crate::proto::sizes;
-use crate::routing::Table;
+use crate::routing::RoutingView;
 use crate::sim::metrics::StoreCounters;
 use crate::store::replication::replica_set;
 use crate::store::zipf::Zipf;
@@ -155,7 +155,7 @@ impl StoreLayer {
 
     /// Place every key on its current replica set (uncharged: the
     /// preload models state built up before the measurement window).
-    pub fn preload(&mut self, truth: &Table) {
+    pub fn preload<V: RoutingView>(&mut self, truth: &V) {
         for rec in &mut self.records {
             rec.holders = replica_set(truth, rec.id, self.cfg.replication);
             rec.version = 1;
@@ -171,7 +171,7 @@ impl StoreLayer {
 
     /// One workload operation (put with probability `put_fraction`,
     /// else get) against the current ground-truth membership.
-    pub fn workload_step(&mut self, truth: &Table) {
+    pub fn workload_step<V: RoutingView>(&mut self, truth: &V) {
         if truth.is_empty() {
             return;
         }
@@ -188,18 +188,18 @@ impl StoreLayer {
 
     /// Replay a write against key index `idx` (conformance driver entry
     /// point; same charging as a workload put).
-    pub fn op_put(&mut self, truth: &Table, idx: usize) {
+    pub fn op_put<V: RoutingView>(&mut self, truth: &V, idx: usize) {
         self.put(truth, idx);
     }
 
     /// Replay a delete against key index `idx`.
-    pub fn op_remove(&mut self, truth: &Table, idx: usize) {
+    pub fn op_remove<V: RoutingView>(&mut self, truth: &V, idx: usize) {
         self.remove(truth, idx);
     }
 
     /// Replay a read against key index `idx`, returning the normalized
     /// outcome the conformance differ compares exactly across runtimes.
-    pub fn op_get(&mut self, truth: &Table, idx: usize) -> GetOutcome {
+    pub fn op_get<V: RoutingView>(&mut self, truth: &V, idx: usize) -> GetOutcome {
         self.get(truth, idx)
     }
 
@@ -207,14 +207,14 @@ impl StoreLayer {
     /// `idx` currently retrievable (written, not tombstoned, and held by
     /// at least one live peer)? Runs after the traffic window closes, so
     /// it must not perturb counters or flows.
-    pub fn probe(&self, truth: &Table, idx: usize) -> bool {
+    pub fn probe<V: RoutingView>(&self, truth: &V, idx: usize) -> bool {
         let rec = &self.records[idx];
         rec.version > 0 && !rec.deleted && rec.holders.iter().any(|h| truth.contains(*h))
     }
 
     /// A rewrite: the client sends the value to the key's owner, which
     /// pushes copies to the other R−1 replicas.
-    fn put(&mut self, truth: &Table, idx: usize) {
+    fn put<V: RoutingView>(&mut self, truth: &V, idx: usize) {
         let vb = self.cfg.value_bits;
         let rec = &mut self.records[idx];
         let desired = replica_set(truth, rec.id, self.cfg.replication);
@@ -252,7 +252,7 @@ impl StoreLayer {
 
     /// A delete: route a `Remove` to the owner, which tombstones the
     /// entry and replicates the tombstone to the other R−1 replicas.
-    fn remove(&mut self, truth: &Table, idx: usize) {
+    fn remove<V: RoutingView>(&mut self, truth: &V, idx: usize) {
         let rec = &mut self.records[idx];
         let desired = replica_set(truth, rec.id, self.cfg.replication);
         if desired.is_empty() {
@@ -286,13 +286,13 @@ impl StoreLayer {
     /// the owner does not hold the value (fresh owner after churn).
     /// Reads of a deleted key are answered by the tombstone (carrying no
     /// value payload).
-    fn get(&mut self, truth: &Table, idx: usize) -> GetOutcome {
+    fn get<V: RoutingView>(&mut self, truth: &V, idx: usize) -> GetOutcome {
         let rec = &self.records[idx];
         // a tombstone answers authoritatively, but what it serves is
         // absence; a never-written key (version 0) can only miss
         let absent = rec.deleted || rec.version == 0;
         let vb = if absent { 0 } else { self.cfg.value_bits };
-        let Some(owner) = truth.successor(rec.id) else {
+        let Some(owner) = truth.owner_of(rec.id) else {
             return GetOutcome::Miss;
         };
         let get_bits = bits(MessageBody::Get { key: rec.id });
@@ -351,7 +351,7 @@ impl StoreLayer {
     /// mirroring the real runtime's `net/bulk.rs` streaming; replica
     /// re-creation toward non-owners stays per-key `Replicate`
     /// datagrams, as the socket runtime sends them.
-    pub fn repair(&mut self, truth: &Table) {
+    pub fn repair<V: RoutingView>(&mut self, truth: &V) {
         let r = self.cfg.replication;
         let value_bits = self.cfg.value_bits;
         // new-owner destination → (keys in the batch, total value bits)
@@ -426,7 +426,7 @@ impl StoreLayer {
     /// Durability sweep: `(total live keys, live keys with at least one
     /// surviving replica)` against the current membership. Deleted keys
     /// are excluded — absence of a tombstoned key is correct, not loss.
-    pub fn retrievable(&self, truth: &Table) -> (usize, usize) {
+    pub fn retrievable<V: RoutingView>(&self, truth: &V) -> (usize, usize) {
         let live: Vec<&KeyRecord> =
             self.records.iter().filter(|r| !r.deleted && r.version > 0).collect();
         let alive = live
@@ -437,7 +437,7 @@ impl StoreLayer {
     }
 
     /// Total live replicas (gauge; ≈ keys × R in steady state).
-    pub fn replicas_total(&self, truth: &Table) -> usize {
+    pub fn replicas_total<V: RoutingView>(&self, truth: &V) -> usize {
         self.records
             .iter()
             .map(|r| r.holders.iter().filter(|h| truth.contains(**h)).count())
@@ -448,6 +448,7 @@ impl StoreLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::routing::Table;
 
     fn table(ids: &[u64]) -> Table {
         Table::from_ids(ids.iter().map(|&x| Id(x)).collect())

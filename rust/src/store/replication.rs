@@ -1,17 +1,21 @@
 //! Replica placement: successor-list replication (DHash/DistHash style).
 
 use crate::id::Id;
-use crate::routing::Table;
+use crate::routing::RoutingView;
 
 /// The peers that should hold `key`: its successor (the *owner*) and the
 /// next `r − 1` distinct ring successors. Clamped to the table size, so
 /// the result always contains distinct live-table members with the owner
 /// first. Empty iff the table is empty or `r == 0`.
-pub fn replica_set(table: &Table, key: Id, r: usize) -> Vec<Id> {
+///
+/// Generic over [`RoutingView`]: placement works identically against the
+/// concrete `Table` (socket runtime, sim ground truth) and the
+/// shared-base `TableView` peers hold at scale.
+pub fn replica_set<V: RoutingView>(table: &V, key: Id, r: usize) -> Vec<Id> {
     if r == 0 {
         return Vec::new();
     }
-    let Some(owner) = table.successor(key) else {
+    let Some(owner) = table.owner_of(key) else {
         return Vec::new();
     };
     let r = r.min(table.len());
@@ -30,6 +34,7 @@ pub fn replica_set(table: &Table, key: Id, r: usize) -> Vec<Id> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::routing::Table;
 
     fn t(ids: &[u64]) -> Table {
         Table::from_ids(ids.iter().map(|&x| Id(x)).collect())

@@ -209,10 +209,22 @@ pub fn run_topic(topic: &str, target: Duration) -> Vec<BenchResult> {
             let ids: Vec<Id> = (0..4000).map(|_| Id(rng.next_u64())).collect();
             let table = Table::from_ids(ids);
             let mut probe = 0u64;
-            vec![bench_auto("table.successor/4k", target, || {
-                probe = probe.wrapping_add(0x9E37_79B9_7F4A_7C15);
-                black_box(table.successor(Id(probe)));
-            })]
+            let mut walk = Id(0);
+            vec![
+                bench_auto("table.successor/4k", target, || {
+                    probe = probe.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                    black_box(table.successor(Id(probe)));
+                }),
+                // Same branchless lower_bound, but on the branch-predictor's
+                // worst diet: a ring walk whose probe is the previous answer,
+                // so every search lands somewhere new. The branchy binary
+                // search this replaced degraded here; the branchless one
+                // should time the same as the random-probe case above.
+                bench_auto("table.successor_branchless/4k", target, || {
+                    walk = table.successor(Id(walk.0.wrapping_add(1))).unwrap();
+                    black_box(walk);
+                }),
+            ]
         }
         "edra" => {
             use crate::edra::Edra;
@@ -250,10 +262,18 @@ pub fn run_topic(topic: &str, target: Duration) -> Vec<BenchResult> {
                 joins: vec![addr; 25],
                 leaves: vec![addr; 25],
             };
+            let mut reuse = Vec::with_capacity(1024);
             vec![
                 bench_auto("proto.codec.roundtrip/50ev", target, || {
                     let buf = codec::encode(&msg);
                     black_box(codec::decode(&buf).unwrap());
+                }),
+                // encode-only into a caller-owned buffer: what the sim's
+                // per-event-batch hot path pays once allocation is hoisted.
+                bench_auto("proto.codec.encode_into/50ev", target, || {
+                    reuse.clear();
+                    codec::encode_into(&msg, &mut reuse);
+                    black_box(reuse.len());
                 }),
                 bench_auto("net.wire.roundtrip/50addr", target, || {
                     let buf = wire::encode(&dgram);

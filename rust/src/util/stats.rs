@@ -69,25 +69,27 @@ impl Running {
 ///
 /// Buckets are log-spaced with `SUB` linear sub-buckets per octave, giving
 /// a worst-case relative quantile error of ~1/SUB. Range: 1 ns .. ~584 y.
-#[derive(Debug, Clone)]
+///
+/// Storage is *sparse*: a vec of `(bucket, count)` pairs sorted by bucket
+/// index, not a dense 2048-slot array. A simulated peer records one or
+/// two latency distributions that each land in a handful of buckets, so
+/// the old eager `vec![0; 2048]` (16 KB) per histogram dominated per-peer
+/// memory at 10⁶ peers; sparse pairs cost ~12 B per *distinct* bucket.
+#[derive(Debug, Clone, Default)]
 pub struct LatencyHist {
-    counts: Vec<u64>,
+    /// `(bucket index, count)`, sorted ascending by bucket index.
+    counts: Vec<(u16, u64)>,
     total: u64,
     sum_ns: u128,
 }
 
 const SUB: u64 = 32; // sub-buckets per octave => ~3% quantile error
 const OCTAVES: usize = 64;
-
-impl Default for LatencyHist {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+const MAX_BUCKET: usize = OCTAVES * SUB as usize - 1;
 
 impl LatencyHist {
     pub fn new() -> Self {
-        LatencyHist { counts: vec![0; OCTAVES * SUB as usize], total: 0, sum_ns: 0 }
+        Self::default()
     }
 
     fn bucket(ns: u64) -> usize {
@@ -102,8 +104,11 @@ impl LatencyHist {
     }
 
     pub fn record_ns(&mut self, ns: u64) {
-        let b = Self::bucket(ns).min(self.counts.len() - 1);
-        self.counts[b] += 1;
+        let b = Self::bucket(ns).min(MAX_BUCKET) as u16;
+        match self.counts.binary_search_by_key(&b, |&(i, _)| i) {
+            Ok(pos) => self.counts[pos].1 += 1,
+            Err(pos) => self.counts.insert(pos, (b, 1)),
+        }
         self.total += 1;
         self.sum_ns += ns as u128;
     }
@@ -127,13 +132,13 @@ impl LatencyHist {
         }
         let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil().max(1.0) as u64;
         let mut acc = 0u64;
-        for (i, &c) in self.counts.iter().enumerate() {
+        for &(i, c) in &self.counts {
             acc += c;
             if acc >= target {
-                return Self::lower_bound_of(i);
+                return Self::lower_bound_of(i as usize);
             }
         }
-        Self::lower_bound_of(self.counts.len() - 1)
+        Self::lower_bound_of(self.counts.last().map_or(MAX_BUCKET, |&(i, _)| i as usize))
     }
 
     fn lower_bound_of(idx: usize) -> u64 {
@@ -147,9 +152,34 @@ impl LatencyHist {
     }
 
     pub fn merge(&mut self, o: &LatencyHist) {
-        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
-            *a += b;
+        if o.counts.is_empty() {
+            // still fold totals (kept in lockstep, but stay defensive)
+            self.total += o.total;
+            self.sum_ns += o.sum_ns;
+            return;
         }
+        let mut merged = Vec::with_capacity(self.counts.len() + o.counts.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.counts.len() && j < o.counts.len() {
+            match self.counts[i].0.cmp(&o.counts[j].0) {
+                std::cmp::Ordering::Equal => {
+                    merged.push((self.counts[i].0, self.counts[i].1 + o.counts[j].1));
+                    i += 1;
+                    j += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    merged.push(self.counts[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    merged.push(o.counts[j]);
+                    j += 1;
+                }
+            }
+        }
+        merged.extend_from_slice(&self.counts[i..]);
+        merged.extend_from_slice(&o.counts[j..]);
+        self.counts = merged;
         self.total += o.total;
         self.sum_ns += o.sum_ns;
     }
@@ -253,6 +283,33 @@ mod tests {
         b.record_ns(1_000_000);
         a.merge(&b);
         assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn hist_sparse_merge_matches_sequential_records() {
+        // merging two sparse histograms must equal recording everything
+        // into one, across interleaved/overlapping/disjoint buckets
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        let mut all = LatencyHist::new();
+        for k in 0..5_000u64 {
+            let ns = rng.range(1, 10_000_000);
+            if k % 2 == 0 { a.record_ns(ns) } else { b.record_ns(ns) }
+            all.record_ns(ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.mean_ns(), all.mean_ns());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile_ns(q), all.quantile_ns(q), "q={q}");
+        }
+        // sparse: a tight distribution touches few buckets, not 2048
+        let mut tight = LatencyHist::new();
+        for _ in 0..100_000 {
+            tight.record_secs(0.000_150);
+        }
+        assert_eq!(tight.counts.len(), 1);
     }
 
     #[test]

@@ -137,11 +137,15 @@ USAGE:
                                          plan on the net side only
                                          (docs/CONFORMANCE.md)
   d1ht chaos [--smoke] [--seed <s>] [--peers <n>] [--keys <k>]
-             [--faults <plan.json>]
+             [--faults <plan.json>] [--data-dir <d>]
                                          seeded fault-injection soak on a
                                          real loopback cluster; exits
                                          non-zero unless the cluster
-                                         converges after heal
+                                         converges after heal; with
+                                         --data-dir, peers run durable
+                                         log-structured storage and the
+                                         kill+restart pass must recover
+                                         records from disk
                                          (docs/FAULTS.md)
   d1ht help";
 
@@ -532,18 +536,22 @@ fn cmd_chaos(args: &Args, out: &mut dyn std::io::Write) -> Result<()> {
             std::fs::read_to_string(p).with_context(|| format!("reading fault plan {p}"))?;
         cfg.plan = Some(FaultPlan::parse(&text)?);
     }
+    cfg.data_dir = args.get("data-dir").map(std::path::PathBuf::from);
     let report = run_chaos(&cfg)?;
     writeln!(out, "{}", report.render())?;
     if !report.passes() {
         bail!(
             "chaos seed {} failed thresholds: retrievability {:.4} (min {}), \
-             retry amplification {:.2} (max {}), peer panics {}",
+             retry amplification {:.2} (max {}), peer panics {}, \
+             recovered records {} (persistent: {})",
             cfg.seed,
             report.retrievability,
             crate::fault::CHAOS_RETRIEVABILITY_MIN,
             report.retry_amplification,
             crate::fault::CHAOS_RETRY_AMPLIFICATION_MAX,
-            report.peer_panics
+            report.peer_panics,
+            report.recovered_records,
+            report.persistent
         );
     }
     Ok(())

@@ -7,10 +7,13 @@
 //! (`net/transport.rs`) tests and deployments tune via config keys
 //! `rto-ms`, `rto-max-ms`, `backoff-factor`, `max-retries`, `seen-cap`,
 //! `seen-expiry-secs` (env:
-//! `D1HT_RTO_MS`, ...), and of [`BulkTuning`], the bulk-transfer
+//! `D1HT_RTO_MS`, ...), of [`BulkTuning`], the bulk-transfer
 //! channel knobs (`net/bulk.rs`) behind `bulk-frame-bytes`,
 //! `bulk-window-frames`, `bulk-resume-retries`, `bulk-stall-ms`,
-//! `bulk-ack-every`, `bulk-tcp`.
+//! `bulk-ack-every`, `bulk-tcp`, and of [`StorageTuning`], the
+//! log-structured storage backend knobs (`store/log.rs`) behind
+//! `storage-segment-bytes`, `storage-compact-segments`,
+//! `storage-gc-age-secs`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -252,6 +255,55 @@ impl BulkTuning {
     }
 }
 
+/// Log-structured storage backend knobs (`store/log.rs`): segment
+/// rotation size, the compaction trigger, and the tombstone-GC age
+/// floor. The on-disk format and the GC policy these parameters govern
+/// are documented in docs/STORAGE.md, whose prose is pinned to these
+/// defaults by `store::log::tests::docs_pin_format_and_gc_policy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StorageTuning {
+    /// The active segment is sealed and a fresh one opened once it
+    /// reaches this many bytes (sealing fsyncs the sealed file).
+    pub segment_bytes: usize,
+    /// Sealed-segment count that triggers a compaction on the next
+    /// maintenance pass.
+    pub compact_segments: usize,
+    /// Age floor for tombstone GC: a tombstone may be dropped during
+    /// compaction only once it is at least this old (versions are
+    /// microsecond wall-clock timestamps in the socket runtime) *and*
+    /// the caller asserts it has been replicated — see
+    /// `store::backend::StorageBackend::maintain`.
+    pub gc_min_age: Duration,
+}
+
+impl Default for StorageTuning {
+    fn default() -> Self {
+        StorageTuning {
+            segment_bytes: 4 * 1024 * 1024,
+            compact_segments: 4,
+            gc_min_age: Duration::from_secs(600),
+        }
+    }
+}
+
+impl StorageTuning {
+    /// Read the tuning from a [`Config`] (missing keys keep defaults;
+    /// `D1HT_*` env overrides win as usual).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = Self::default();
+        Ok(StorageTuning {
+            // Below ~1 KiB a segment cannot hold one max-size datagram
+            // value plus its header; clamp so misconfiguration degrades
+            // to "rotate often", not "rotate every record".
+            segment_bytes: cfg.get_usize("storage-segment-bytes", d.segment_bytes)?.max(1024),
+            compact_segments: cfg.get_usize("storage-compact-segments", d.compact_segments)?.max(1),
+            gc_min_age: Duration::from_secs(
+                cfg.get_usize("storage-gc-age-secs", d.gc_min_age.as_secs() as usize)? as u64,
+            ),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +428,27 @@ mod tests {
         // frame size is clamped to datagram-safe bounds
         let c = Config::parse("bulk-frame-bytes = 1000000\n").unwrap();
         assert_eq!(BulkTuning::from_config(&c, &tr).unwrap().frame_bytes, 60_000);
+    }
+
+    #[test]
+    fn storage_tuning_from_config() {
+        let s = StorageTuning::from_config(&Config::new()).unwrap();
+        assert_eq!(s, StorageTuning::default());
+        let c = Config::parse(
+            "storage-segment-bytes = 65536\nstorage-compact-segments = 2\nstorage-gc-age-secs = 30\n",
+        )
+        .unwrap();
+        let s = StorageTuning::from_config(&c).unwrap();
+        assert_eq!(s.segment_bytes, 65536);
+        assert_eq!(s.compact_segments, 2);
+        assert_eq!(s.gc_min_age, Duration::from_secs(30));
+        // degenerate values are clamped, not obeyed
+        let c = Config::parse("storage-segment-bytes = 1\nstorage-compact-segments = 0\n").unwrap();
+        let s = StorageTuning::from_config(&c).unwrap();
+        assert_eq!(s.segment_bytes, 1024);
+        assert_eq!(s.compact_segments, 1);
+        assert!(StorageTuning::from_config(&Config::parse("storage-gc-age-secs = x\n").unwrap())
+            .is_err());
     }
 
     #[test]

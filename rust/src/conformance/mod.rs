@@ -8,9 +8,10 @@
 //! the other agrees, so this module pins them against each other:
 //!
 //! 1. [`trace`] — the recorded workload format (`d1ht.trace.v1`): a
-//!    seeded sequence of `join`/`leave`/`fail`/`put`/`get`/`remove`
-//!    steps with logical timestamps, plus `settle` barriers after every
-//!    membership change. Golden traces live in `rust/tests/traces/`.
+//!    seeded sequence of `join`/`leave`/`fail`/`restart`/`put`/`get`/
+//!    `remove` steps with logical timestamps, plus `settle` barriers
+//!    after every membership change. Golden traces live in
+//!    `rust/tests/traces/`.
 //! 2. [`sim`] / [`net`] — one replay driver per runtime. Each replays
 //!    the identical step sequence and reduces the outcome to a
 //!    normalized [`ConformanceReport`] (`d1ht.conformance.v1`): every

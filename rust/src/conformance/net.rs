@@ -104,6 +104,18 @@ fn value_bytes(kid: u64, version: u64, len: usize) -> Vec<u8> {
         .collect()
 }
 
+/// Best-effort cleanup of the durable-replay scratch directory, on
+/// every exit path (including bails) via Drop.
+struct TempRoot(Option<std::path::PathBuf>);
+
+impl Drop for TempRoot {
+    fn drop(&mut self) {
+        if let Some(p) = &self.0 {
+            let _ = std::fs::remove_dir_all(p);
+        }
+    }
+}
+
 /// Replay `trace` against a real loopback cluster, optionally under an
 /// armed [`FaultPlan`]. The plan is wired into every peer's transport
 /// through one shared [`FaultInjector`] and armed only *after* the
@@ -112,6 +124,13 @@ fn value_bytes(kid: u64, version: u64, len: usize) -> Vec<u8> {
 /// sim replay stays fault-free — a plan that actually breaks the
 /// cluster (e.g. dropping every `replicate`) must therefore surface as
 /// a divergence.
+///
+/// A trace containing `restart` steps runs *durable*: every peer gets a
+/// per-spawn data directory under a scratch root (log backend,
+/// docs/STORAGE.md), a `fail` remembers the killed peer's directory,
+/// and the matching `restart` respawns on it — so the comeback peer
+/// replays its shard from disk before anti-entropy tops it up. The
+/// scratch root is removed when the replay ends, pass or fail.
 pub fn replay_net(trace: &Trace, faults: Option<&FaultPlan>) -> Result<ConformanceReport> {
     trace.validate()?;
     let inj = match faults {
@@ -138,8 +157,33 @@ pub fn replay_net(trace: &Trace, faults: Option<&FaultPlan>) -> Result<Conforman
         faults: inj.clone(),
         ..Default::default()
     };
-    let mut cluster =
-        Cluster::start_with(trace.peers, cfg.clone(), SPACING).context("cluster start")?;
+    let data_root = if trace.steps.iter().any(|s| matches!(s.op, TraceOp::Restart)) {
+        let tag: String = trace.name.chars().filter(|c| c.is_ascii_alphanumeric()).collect();
+        Some(std::env::temp_dir().join(format!(
+            "d1ht-conform-{}-{tag}-{}",
+            std::process::id(),
+            trace.seed
+        )))
+    } else {
+        None
+    };
+    let _cleanup = TempRoot(data_root.clone());
+    if let Some(root) = &data_root {
+        let _ = std::fs::remove_dir_all(root); // stale scratch from a crashed run
+    }
+    let mut cluster = match &data_root {
+        Some(root) => Cluster::start_with_dirs(trace.peers, cfg.clone(), SPACING, root)
+            .context("durable cluster start")?,
+        None => Cluster::start_with(trace.peers, cfg.clone(), SPACING).context("cluster start")?,
+    };
+    // parallel to `cluster.peers`: each live peer's data dir (None when
+    // the replay is not durable)
+    let mut peer_dirs: Vec<Option<std::path::PathBuf>> = (0..trace.peers)
+        .map(|i| data_root.as_ref().map(|r| r.join(format!("peer-{i}"))))
+        .collect();
+    let mut dir_next = trace.peers;
+    // data dirs of failed peers, newest last — what `restart` pops
+    let mut crashed_dirs: Vec<Option<std::path::PathBuf>> = Vec::new();
     let mut roster_next = 0usize;
     if let Some(inj) = &inj {
         for p in &cluster.peers {
@@ -217,7 +261,26 @@ pub fn replay_net(trace: &Trace, faults: Option<&FaultPlan>) -> Result<Conforman
             TraceOp::Join => {
                 // no baseline: the joiner's table transfer is charged to
                 // the replay window, like a sim join while recording
-                cluster.join_one(cfg.clone()).context("mid-replay join")?;
+                let jdir = data_root.as_ref().map(|r| r.join(format!("peer-{dir_next}")));
+                dir_next += 1;
+                cluster
+                    .join_one(NetPeerCfg { data_dir: jdir.clone(), ..cfg.clone() })
+                    .context("mid-replay join")?;
+                peer_dirs.push(jdir);
+                if let Some(inj) = &inj {
+                    let np = cluster.peers.last().expect("just joined");
+                    inj.register(np.addr.port(), roster_next);
+                    roster_next += 1;
+                }
+            }
+            TraceOp::Restart => {
+                // respawn on the crashed peer's directory: open replays
+                // the shard, anti-entropy delivers the rest
+                let dir = crashed_dirs.pop().expect("validated: restart follows a fail");
+                cluster
+                    .join_one(NetPeerCfg { data_dir: dir.clone(), ..cfg.clone() })
+                    .context("restart rejoin")?;
+                peer_dirs.push(dir);
                 if let Some(inj) = &inj {
                     let np = cluster.peers.last().expect("just joined");
                     inj.register(np.addr.port(), roster_next);
@@ -234,11 +297,14 @@ pub fn replay_net(trace: &Trace, faults: Option<&FaultPlan>) -> Result<Conforman
                     );
                 }
                 let handle = cluster.peers.remove(peer);
+                let dir = peer_dirs.remove(peer);
                 flows.harvest(&handle);
                 if matches!(step.op, TraceOp::Leave { .. }) {
                     handle.leave();
                 } else {
                     handle.kill();
+                    // the "disk" survives the crash for a later restart
+                    crashed_dirs.push(dir);
                 }
             }
             TraceOp::Settle => std::thread::sleep(SETTLE),

@@ -62,6 +62,12 @@ pub fn replay_sim(trace: &Trace) -> Result<ConformanceReport> {
     let mut exp = Expectation::new(trace.keys);
     let mut gets = Vec::new();
     let mut get_keys = Vec::new();
+    // Fail steps push the crashed peer's durable key set (what its log
+    // would hold at crash time); Restart pops the newest one. Between a
+    // Restart and its mandatory Settle we also remember the pre-arrival
+    // roster, so the arrived peer can be identified afterwards.
+    let mut crash_disks: Vec<Vec<(usize, u64)>> = Vec::new();
+    let mut pending_restart: Option<(Vec<crate::id::Id>, Vec<(usize, u64)>)> = None;
     for step in &trace.steps {
         match step.op {
             TraceOp::Put { key } => {
@@ -93,13 +99,37 @@ pub fn replay_sim(trace: &Trace) -> Result<ConformanceReport> {
                 let style = if matches!(step.op, TraceOp::Leave { .. }) {
                     LeaveStyle::Graceful
                 } else {
+                    // the crash's "disk image": every key the peer held a
+                    // replica of, at its current version — snapshotted
+                    // *before* depart, because the repair pass rebuilds
+                    // holder sets without it
+                    let snap = sim
+                        .store()
+                        .map(|s| s.crash_snapshot(roster[peer]))
+                        .unwrap_or_default();
+                    crash_disks.push(snap);
                     LeaveStyle::Failure
                 };
                 sim.depart(roster[peer], style, &mut q);
             }
+            TraceOp::Restart => {
+                let snap = crash_disks.pop().expect("validated: restart follows a fail");
+                pending_restart = Some((sim.live_ids(), snap));
+                q.after(0.0, Ev::Arrive { label: u64::MAX });
+            }
             TraceOp::Settle => {
                 let t = q.now() + SETTLE_SECS;
                 run_until(&mut sim, &mut q, t);
+                if let Some((before, snap)) = pending_restart.take() {
+                    let new_id = sim
+                        .live_ids()
+                        .into_iter()
+                        .find(|id| !before.contains(id))
+                        .expect("restart arrival applied during settle");
+                    if let Some(store) = sim.store_mut() {
+                        store.recover(new_id, &snap);
+                    }
+                }
             }
         }
         exp.apply(step.op);

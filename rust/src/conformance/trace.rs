@@ -36,6 +36,12 @@ pub enum TraceOp {
     Leave { peer: usize },
     /// Roster index `peer` fails abruptly (SIGKILL half of §VII-A).
     Fail { peer: usize },
+    /// The most recently failed, not-yet-restarted peer comes back *with
+    /// its durable state*: the socket driver respawns it on the crashed
+    /// peer's data directory (log replay, docs/STORAGE.md) and the sim
+    /// models recovery as replaying the key set that survived on disk at
+    /// crash time. The restarted peer joins at the end of the roster.
+    Restart,
     /// Write key `key` (value bytes are derived deterministically from
     /// the key's ring ID and per-key version by each driver).
     Put { key: usize },
@@ -55,6 +61,7 @@ impl TraceOp {
             TraceOp::Join => "join",
             TraceOp::Leave { .. } => "leave",
             TraceOp::Fail { .. } => "fail",
+            TraceOp::Restart => "restart",
             TraceOp::Put { .. } => "put",
             TraceOp::Get { .. } => "get",
             TraceOp::Remove { .. } => "remove",
@@ -114,7 +121,7 @@ impl Trace {
                     TraceOp::Put { key } | TraceOp::Get { key } | TraceOp::Remove { key } => {
                         m.push(("key".to_string(), Json::u(key as u64)));
                     }
-                    TraceOp::Join | TraceOp::Settle => {}
+                    TraceOp::Join | TraceOp::Restart | TraceOp::Settle => {}
                 }
                 Json::Obj(m)
             })
@@ -172,6 +179,7 @@ impl Trace {
             };
             let op = match opname {
                 "join" => TraceOp::Join,
+                "restart" => TraceOp::Restart,
                 "settle" => TraceOp::Settle,
                 "leave" => TraceOp::Leave { peer: field("peer")? },
                 "fail" => TraceOp::Fail { peer: field("peer")? },
@@ -206,6 +214,9 @@ impl Trace {
             bail!("trace value_len {} out of (0, 1MiB]", self.value_len);
         }
         let mut live = self.peers;
+        // abrupt failures whose durable state is still on disk and
+        // unclaimed by a restart — the pool `restart` draws from
+        let mut failed_pending = 0usize;
         let mut last_t = 0u64;
         for (i, step) in self.steps.iter().enumerate() {
             if step.t < last_t {
@@ -214,7 +225,7 @@ impl Trace {
             last_t = step.t;
             let needs_settle = matches!(
                 step.op,
-                TraceOp::Join | TraceOp::Leave { .. } | TraceOp::Fail { .. }
+                TraceOp::Join | TraceOp::Leave { .. } | TraceOp::Fail { .. } | TraceOp::Restart
             );
             if needs_settle {
                 let next = self.steps.get(i + 1).map(|s| s.op);
@@ -228,6 +239,13 @@ impl Trace {
             }
             match step.op {
                 TraceOp::Join => live += 1,
+                TraceOp::Restart => {
+                    if failed_pending == 0 {
+                        bail!("step {i}: restart without a preceding un-restarted fail");
+                    }
+                    failed_pending -= 1;
+                    live += 1;
+                }
                 TraceOp::Leave { peer } | TraceOp::Fail { peer } => {
                     if peer == 0 {
                         bail!(
@@ -242,6 +260,9 @@ impl Trace {
                         bail!("step {i}: departure would drop the population below 3");
                     }
                     live -= 1;
+                    if matches!(step.op, TraceOp::Fail { .. }) {
+                        failed_pending += 1;
+                    }
                 }
                 TraceOp::Put { key } | TraceOp::Get { key } | TraceOp::Remove { key } => {
                     if key >= self.keys {
@@ -378,6 +399,22 @@ mod tests {
         let mut t = Trace::generate("v", 1, 5, 16, 8);
         t.steps.push(TraceStep { t: 999, op: TraceOp::Get { key: 16 } });
         assert!(t.validate().is_err(), "key index out of range");
+        let mut t = Trace::generate("v", 1, 5, 16, 8);
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Restart });
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Settle });
+        assert!(t.validate().is_err(), "restart needs an un-restarted fail");
+    }
+
+    #[test]
+    fn restart_roundtrips_and_validates_after_a_fail() {
+        let mut t = Trace::generate("r", 1, 5, 16, 8);
+        // the generated trace ends with a settle and contains one Fail
+        // that was never restarted, so a trailing restart is legal
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Restart });
+        t.steps.push(TraceStep { t: 999, op: TraceOp::Settle });
+        t.validate().expect("restart after fail validates");
+        let back = Trace::parse(&t.render()).unwrap();
+        assert_eq!(t, back, "restart survives render/parse");
     }
 
     #[test]

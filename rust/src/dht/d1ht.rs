@@ -631,6 +631,12 @@ impl D1htSim {
         reg.set_gauge(obs::names::SIM_TABLE_BYTES, self.table_bytes() as f64);
         reg.set_gauge(obs::names::SIM_QUEUE_PEAK_DEPTH, self.queue_peak as f64);
         reg.inc(obs::names::SIM_BASE_REFRESHES, self.base.refreshes());
+        // storage-backend counters live in the net runtime and the
+        // store layer's recovery path; register them at zero so every
+        // report carries the full catalog (inc(0) is merge-safe)
+        reg.inc(obs::names::STORE_TOMBSTONES_GC, 0);
+        reg.inc(obs::names::STORAGE_SEGMENTS_COMPACTED, 0);
+        reg.inc(obs::names::STORAGE_RECOVERED_RECORDS, 0);
         let m = self.metrics();
         Json::Obj(vec![
             ("schema".into(), Json::s("d1ht.report.v1")),

@@ -56,17 +56,24 @@ pub struct ChaosCfg {
     pub value_len: usize,
     pub seed: u64,
     pub plan: Option<FaultPlan>,
+    /// Durable mode (`d1ht chaos --data-dir DIR`): every peer stores its
+    /// shard under `DIR/peer-<i>` through the log-structured backend
+    /// (docs/STORAGE.md), and a crashed peer restarts *with its old
+    /// directory* — recovering its key set from the local log instead of
+    /// rejoining empty. The report then additionally gates on
+    /// `recovered_records > 0`. The caller owns `DIR`'s cleanup.
+    pub data_dir: Option<std::path::PathBuf>,
 }
 
 impl ChaosCfg {
     /// CI-sized run: small cluster, seconds not minutes.
     pub fn smoke(seed: u64) -> ChaosCfg {
-        ChaosCfg { peers: 6, keys: 24, value_len: 16, seed, plan: None }
+        ChaosCfg { peers: 6, keys: 24, value_len: 16, seed, plan: None, data_dir: None }
     }
 
     /// The full soak shape (`d1ht chaos` without `--smoke`).
     pub fn full(seed: u64) -> ChaosCfg {
-        ChaosCfg { peers: 10, keys: 64, value_len: 32, seed, plan: None }
+        ChaosCfg { peers: 10, keys: 64, value_len: 32, seed, plan: None, data_dir: None }
     }
 }
 
@@ -140,6 +147,12 @@ pub struct ChaosReport {
     /// Read-path degradation counters summed across surviving peers.
     pub read_repairs: u64,
     pub gets_fallback: u64,
+    /// Whether the run used durable per-peer data dirs (`--data-dir`).
+    pub persistent: bool,
+    /// Records replayed from local logs across the cluster — for a
+    /// persistent run the crash+restart peer must recover a non-empty
+    /// shard, so `passes()` requires this to be positive.
+    pub recovered_records: u64,
     /// Wall time from the first post-heal sweep to full retrievability
     /// (or the sweep deadline, if it never got there).
     pub converge_ms: u64,
@@ -150,6 +163,7 @@ impl ChaosReport {
         self.retrievability >= CHAOS_RETRIEVABILITY_MIN
             && self.peer_panics == 0
             && self.retry_amplification <= CHAOS_RETRY_AMPLIFICATION_MAX
+            && (!self.persistent || self.recovered_records > 0)
     }
 
     pub fn to_json(&self) -> Json {
@@ -168,6 +182,8 @@ impl ChaosReport {
             ("packets_delayed".into(), Json::u(self.packets_delayed)),
             ("read_repairs".into(), Json::u(self.read_repairs)),
             ("gets_fallback".into(), Json::u(self.gets_fallback)),
+            ("persistent".into(), Json::Bool(self.persistent)),
+            ("recovered_records".into(), Json::u(self.recovered_records)),
             ("converge_ms".into(), Json::u(self.converge_ms)),
             ("pass".into(), Json::Bool(self.passes())),
         ])
@@ -229,7 +245,16 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport> {
         ..NetPeerCfg::default()
     };
 
-    let mut cluster = Cluster::start_with(cfg.peers, ncfg.clone(), Duration::from_millis(100))?;
+    let spacing = Duration::from_millis(100);
+    let mut cluster = match &cfg.data_dir {
+        Some(root) => Cluster::start_with_dirs(cfg.peers, ncfg.clone(), spacing, root)?,
+        None => Cluster::start_with(cfg.peers, ncfg.clone(), spacing)?,
+    };
+    // per-roster-index data dir: a restart reuses the crashed peer's
+    // directory, which is what turns "rejoin empty" into "recover"
+    let dirs: Vec<Option<std::path::PathBuf>> = (0..cfg.peers)
+        .map(|i| cfg.data_dir.as_ref().map(|r| r.join(format!("peer-{i}"))))
+        .collect();
     // roster index = spawn order; a restarted peer re-registers its new
     // port under its old index so partition groups keep meaning it
     let mut roster: Vec<u16> = cluster.peers.iter().map(|p| p.addr.port()).collect();
@@ -284,9 +309,13 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport> {
                 }
             }
             TimelineEv::Restart(idx) => {
+                // durable mode hands the crashed peer its old directory
+                // back; the in-memory mode rejoins empty and relies on
+                // anti-entropy alone
+                let rcfg = NetPeerCfg { data_dir: dirs[idx].clone(), ..ncfg.clone() };
                 let mut ok = false;
                 for _ in 0..3 {
-                    if cluster.join_one(ncfg.clone()).is_ok() {
+                    if cluster.join_one(rcfg.clone()).is_ok() {
                         ok = true;
                         break;
                     }
@@ -329,7 +358,7 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport> {
 
     // settle the books
     let (mut sent, mut retx, mut panics) = (0u64, 0u64, 0usize);
-    let (mut repairs, mut fallbacks) = (0u64, 0u64);
+    let (mut repairs, mut fallbacks, mut recovered) = (0u64, 0u64, 0u64);
     for p in &cluster.peers {
         match p.stats() {
             Ok(s) => {
@@ -338,6 +367,7 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport> {
                 retx += s.retransmits.saturating_sub(b_retx);
                 repairs += s.read_repairs;
                 fallbacks += s.gets_fallback;
+                recovered += s.storage.recovered_records;
             }
             Err(_) => panics += 1,
         }
@@ -358,6 +388,8 @@ pub fn run_chaos(cfg: &ChaosCfg) -> Result<ChaosReport> {
         packets_delayed: inj.delays(),
         read_repairs: repairs,
         gets_fallback: fallbacks,
+        persistent: cfg.data_dir.is_some(),
+        recovered_records: recovered,
         converge_ms,
     };
     cluster.shutdown();
@@ -396,6 +428,8 @@ mod tests {
             packets_delayed: 3,
             read_repairs: 1,
             gets_fallback: 1,
+            persistent: false,
+            recovered_records: 0,
             converge_ms: 1200,
         };
         assert!(r.passes());
@@ -407,6 +441,11 @@ mod tests {
         r.retry_amplification = 1.0;
         r.peer_panics = 1;
         assert!(!r.passes(), "panics are fatal");
+        r.peer_panics = 0;
+        r.persistent = true;
+        assert!(!r.passes(), "a durable run must replay something from disk");
+        r.recovered_records = 12;
+        assert!(r.passes(), "recovery evidence satisfies the durable gate");
     }
 
     #[test]
@@ -439,10 +478,14 @@ mod tests {
             packets_delayed: 0,
             read_repairs: 0,
             gets_fallback: 0,
+            persistent: true,
+            recovered_records: 9,
             converge_ms: 0,
         };
         let doc = Json::parse(&r.render()).expect("valid json");
         assert_eq!(doc.get("seed").and_then(Json::as_i64), Some(7));
+        assert_eq!(doc.get("recovered_records").and_then(Json::as_i64), Some(9));
+        assert_eq!(doc.get("persistent"), Some(&Json::Bool(true)));
         assert_eq!(doc.get("pass"), Some(&Json::Bool(true)));
     }
 }

@@ -98,6 +98,35 @@ impl Cluster {
         Ok(Cluster { peers })
     }
 
+    /// Like [`Cluster::start_with`] but every peer is durable: peer `i`
+    /// stores its shard in `root/peer-<i>` through the log-structured
+    /// backend (docs/STORAGE.md). A killed peer respawned with the same
+    /// directory ([`Cluster::join_one`] with `data_dir` set) recovers
+    /// its key set from disk instead of rejoining empty. The caller owns
+    /// `root`'s lifetime (creation and cleanup).
+    pub fn start_with_dirs(
+        n: usize,
+        cfg: NetPeerCfg,
+        spacing: Duration,
+        root: &std::path::Path,
+    ) -> Result<Cluster> {
+        assert!(n >= 1);
+        let dir = |i: usize| Some(root.join(format!("peer-{i}")));
+        let mut peers = Vec::with_capacity(n);
+        let boot = spawn(NetPeerCfg { bootstrap: None, data_dir: dir(0), ..cfg.clone() })?;
+        let boot_addr = boot.addr;
+        peers.push(boot);
+        for i in 1..n {
+            std::thread::sleep(spacing);
+            peers.push(spawn(NetPeerCfg {
+                bootstrap: Some(boot_addr),
+                data_dir: dir(i),
+                ..cfg.clone()
+            })?);
+        }
+        Ok(Cluster { peers })
+    }
+
     /// Add one peer joining through the founding peer (`peers[0]`),
     /// spawned from `cfg` (bootstrap overwritten). The conformance
     /// replay's `join` step.

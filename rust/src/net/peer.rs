@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow::Result;
 
-use crate::config::{BulkTuning, TransportTuning};
+use crate::config::{BulkTuning, StorageTuning, TransportTuning};
 use crate::edra::Edra;
 use crate::fault::FaultInjector;
 use crate::id::{space, Id};
@@ -24,7 +24,7 @@ use crate::net::wire::NetMsg;
 use crate::obs::{self, ClassFlows, Hist, Json};
 use crate::proto::messages::Event;
 use crate::routing::Table;
-use crate::store::{replica_set, KvStore};
+use crate::store::{replica_set, KvStore, LogStore, StorageBackend, StorageCounters};
 use crate::util::stats::Traffic;
 
 #[derive(Debug, Clone)]
@@ -63,6 +63,15 @@ pub struct NetPeerCfg {
     /// [`crate::fault::FaultPlan::drop_kind`]`("replicate")` plan
     /// expresses the same fault.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Crash-safe local storage: when set, the peer's KV shard lives in
+    /// a [`crate::store::LogStore`] rooted at this directory, and a
+    /// crash + restart with the *same* directory replays the local log
+    /// (docs/STORAGE.md) before anti-entropy delivers the delta. `None`
+    /// (the default) keeps the shard purely in memory.
+    pub data_dir: Option<std::path::PathBuf>,
+    /// Log-backend thresholds (segment size, compaction trigger,
+    /// tombstone-GC age floor) — meaningful only with `data_dir`.
+    pub storage: StorageTuning,
 }
 
 impl Default for NetPeerCfg {
@@ -77,6 +86,8 @@ impl Default for NetPeerCfg {
             bulk: BulkTuning::default(),
             snapshot_every: None,
             faults: None,
+            data_dir: None,
+            storage: StorageTuning::default(),
         }
     }
 }
@@ -122,6 +133,11 @@ pub struct PeerStats {
     /// (ok or gave up) — the `bulk.transfer_ns` histogram of the
     /// [`crate::obs`] catalog, mergeable across peers.
     pub bulk_send_ns: Hist,
+    /// Storage-backend counters ([`crate::store::StorageCounters`]):
+    /// all-zero for the in-memory backend; with `data_dir` set,
+    /// `recovered_records` is the key set replayed from the local log at
+    /// open and the rest track compaction/GC/IO-degradation activity.
+    pub storage: StorageCounters,
     pub uptime: Duration,
 }
 
@@ -250,9 +266,10 @@ struct PeerState {
     lookups_sent: u64,
     lookups_one_hop: u64,
     lookups_retried: u64,
-    /// Replicated KV state (store layer).
+    /// Replicated KV state (store layer). In-memory by default; a
+    /// crash-safe [`LogStore`] when `NetPeerCfg::data_dir` is set.
     replication: usize,
-    kv: KvStore,
+    kv: Box<dyn StorageBackend>,
     /// Replica set each held key was last pushed to; anti-entropy only
     /// re-pushes when membership changed it. For keys we no longer
     /// replicate it also pins the set a handoff was last *attempted*
@@ -342,11 +359,7 @@ impl PeerState {
     /// floor, keeping same-peer writes strictly monotonic even if the
     /// clock steps backwards.
     fn write_version(&self, kid: Id) -> u64 {
-        let micros = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_micros() as u64)
-            .unwrap_or(0);
-        micros.max(self.kv.next_version(kid))
+        unix_micros().max(self.kv.next_version(kid))
     }
 
     /// Store locally and push `Replicate` copies to the other members of
@@ -542,6 +555,15 @@ impl PeerState {
     }
 }
 
+/// Wall-clock microseconds since the Unix epoch — the version domain of
+/// `write_version` and the time axis of the log backend's tombstone GC.
+fn unix_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
 fn run_peer(
     cfg: NetPeerCfg,
     mut tr: Transport,
@@ -550,6 +572,21 @@ fn run_peer(
     ready: Sender<Result<()>>,
 ) {
     let addr = tr.addr();
+    // storage backend: durable log when a data dir is configured (its
+    // open replays any surviving segments), plain map otherwise
+    let kv: Box<dyn StorageBackend> = match &cfg.data_dir {
+        Some(dir) => match LogStore::open(dir, cfg.storage) {
+            Ok(ls) => Box::new(ls),
+            Err(e) => {
+                let _ = ready.send(Err(crate::anyhow::anyhow!(
+                    "storage open failed in {}: {e}",
+                    dir.display()
+                )));
+                return;
+            }
+        },
+        None => Box::new(KvStore::new()),
+    };
     let mut st = PeerState {
         me,
         addr,
@@ -565,7 +602,7 @@ fn run_peer(
         lookups_one_hop: 0,
         lookups_retried: 0,
         replication: cfg.replication.max(1),
-        kv: KvStore::new(),
+        kv,
         repair_sets: BTreeMap::new(),
         bulk_handoff_pending: BTreeMap::new(),
         handoff_refs: BTreeMap::new(),
@@ -719,6 +756,7 @@ fn run_peer(
                     bulk_bytes_out: bulk.counters.data_bytes_sent,
                     bulk_bytes_in: bulk.counters.data_bytes_recv,
                     bulk_send_ns: st.bulk_send_ns.clone(),
+                    storage: st.kv.counters(),
                     uptime: st.started.elapsed(),
                 });
             }
@@ -964,7 +1002,14 @@ fn run_peer(
         }
         if st.last_repair.elapsed() >= cfg.repair_every && !st.kv.is_empty() {
             st.last_repair = Instant::now();
+            let pass_start = unix_micros();
             st.repair_tick(&mut tr, &mut bulk);
+            // storage upkeep rides the anti-entropy clock: flush the log
+            // tail, and compact/GC once enough segments sealed. The pass
+            // that just ran pushed every key written before it started,
+            // which is exactly the quorum bound tombstone GC needs
+            // (docs/STORAGE.md).
+            st.kv.maintain(unix_micros(), pass_start);
         }
 
         // 8. periodic observability snapshot (opt-in; a no-op beyond the
@@ -1344,7 +1389,7 @@ mod tests {
             lookups_one_hop: 0,
             lookups_retried: 0,
             replication: 3,
-            kv: KvStore::new(),
+            kv: Box::new(KvStore::new()),
             repair_sets: BTreeMap::new(),
             bulk_handoff_pending: BTreeMap::new(),
             handoff_refs: BTreeMap::new(),
@@ -1480,6 +1525,37 @@ mod tests {
         assert!(p.put(42, b"again".to_vec()).unwrap());
         assert_eq!(p.get(42).unwrap().as_deref(), Some(b"again".as_slice()));
         p.kill();
+    }
+
+    #[test]
+    fn data_dir_peer_recovers_its_shard_after_kill() {
+        let dir = std::env::temp_dir().join(format!("d1ht-peer-data-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = NetPeerCfg { data_dir: Some(dir.clone()), ..Default::default() };
+        let p = spawn(cfg.clone()).expect("spawn");
+        for k in 0u64..8 {
+            assert!(p.put(k, vec![k as u8; 16]).unwrap());
+        }
+        assert!(p.remove(3).unwrap());
+        assert_eq!(p.stats().unwrap().storage.recovered_records, 0, "fresh dir: nothing replayed");
+        p.kill();
+        // same directory, new identity: the shard comes back from disk
+        let p2 = spawn(cfg).expect("respawn");
+        let s = p2.stats().unwrap();
+        // the tombstone record supersedes key 3's put during replay, so
+        // the rebuilt index holds 8 entries: 7 live + 1 tombstone
+        assert_eq!(s.storage.recovered_records, 8, "7 live keys + 1 tombstone replayed");
+        assert_eq!(s.keys_stored, 7, "tombstone excluded from live count");
+        for k in 0u64..8 {
+            let got = p2.get(k).unwrap();
+            if k == 3 {
+                assert_eq!(got, None, "delete survived the restart");
+            } else {
+                assert_eq!(got.as_deref(), Some(vec![k as u8; 16].as_slice()), "key {k}");
+            }
+        }
+        p2.kill();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

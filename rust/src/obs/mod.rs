@@ -61,6 +61,12 @@ pub mod names {
             "Batched owner-handoff transfers sent over the bulk channel";
         counter STORE_READ_REPAIRS = "store.read_repairs",
             "Degraded reads repaired inline by pushing the value back to the fresh owner";
+        counter STORE_TOMBSTONES_GC = "store.tombstones_gc",
+            "Tombstones dropped by the log backend's age/quorum GC during compaction";
+        counter STORAGE_SEGMENTS_COMPACTED = "storage.segments_compacted",
+            "Log segment files retired by compaction (docs/STORAGE.md)";
+        counter STORAGE_RECOVERED_RECORDS = "storage.recovered_records",
+            "Records rebuilt from a local log by a crash+restart open scan";
         counter FAULT_PACKETS_DROPPED = "fault.packets_dropped",
             "Packets vanished by an armed fault plan (loss rules + live partitions)";
         counter FAULT_PACKETS_DUPLICATED = "fault.packets_duplicated",

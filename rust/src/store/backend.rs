@@ -1,0 +1,138 @@
+//! The pluggable storage backend behind each socket-runtime peer's KV
+//! shard.
+//!
+//! [`StorageBackend`] abstracts exactly the store surface `net/peer.rs`
+//! uses, so the two implementations are drop-in interchangeable:
+//!
+//! * [`KvStore`] — the original pure in-memory map, behavior unchanged;
+//!   still the default (`NetPeerCfg::data_dir = None`).
+//! * [`crate::store::log::LogStore`] — the crash-safe log-structured
+//!   backend (`NetPeerCfg::data_dir = Some(dir)`): the same in-memory
+//!   read path plus an append-only on-disk log replayed on open, so a
+//!   crash + restart recovers the peer's shard from local disk and then
+//!   merely *catches up* via anti-entropy instead of rejoining empty.
+//!   Format and recovery algorithm: docs/STORAGE.md.
+//!
+//! Write semantics are pinned to [`KvStore`]'s: version-gated
+//! (idempotent replication/repair; older versions and exact duplicates
+//! are rejected), tombstones retained until the backend's own
+//! maintenance pass proves them old *and* replicated
+//! ([`StorageBackend::maintain`]).
+
+use crate::id::Id;
+use crate::store::kv::{KvStore, Versioned};
+
+/// Durability counters a backend accumulates over its lifetime. The
+/// in-memory backend reports all-zero. [`crate::store::log::LogStore`]
+/// feeds these into `PeerStats` and the chaos report
+/// (`recovered_records > 0` is the crash+restart acceptance gate);
+/// the simulator-side twins live in the obs catalog as
+/// `storage.recovered_records` / `storage.segments_compacted` /
+/// `store.tombstones_gc` (docs/OBSERVABILITY.md).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorageCounters {
+    /// Records rebuilt from the local log by the open-time scan
+    /// (surviving keys, tombstones included).
+    pub recovered_records: u64,
+    /// Segment files retired by compaction.
+    pub segments_compacted: u64,
+    /// Tombstones dropped by the age/quorum GC during compaction.
+    pub tombstones_gc: u64,
+    /// Append/rotate/compact IO failures survived by degrading to
+    /// memory-only operation — the peer thread never panics on a full
+    /// or broken disk, it just stops being durable.
+    pub io_errors: u64,
+}
+
+/// Object-safe store interface (`Box<dyn StorageBackend>` lives on the
+/// peer thread, hence the `Send` supertrait). Method contracts mirror
+/// [`KvStore`]'s inherent methods one-for-one.
+pub trait StorageBackend: Send {
+    /// The version a fresh local write of `key` should carry.
+    fn next_version(&self, key: Id) -> u64;
+    /// Accept `bytes` at `version` unless something newer (or an exact
+    /// duplicate) is already held. Returns true iff the store changed.
+    fn put(&mut self, key: Id, version: u64, bytes: Vec<u8>) -> bool;
+    /// Record a delete at `version`, kept as a tombstone so repair
+    /// cannot resurrect an older live value.
+    fn put_tombstone(&mut self, key: Id, version: u64) -> bool;
+    fn get(&self, key: Id) -> Option<&Versioned>;
+    /// Drop an entry outright (handoff bookkeeping — NOT a user delete,
+    /// which must go through [`StorageBackend::put_tombstone`]).
+    fn remove(&mut self, key: Id) -> bool;
+    /// All entries in key order, tombstones included.
+    fn iter(&self) -> Box<dyn Iterator<Item = (&Id, &Versioned)> + '_>;
+    fn len(&self) -> usize;
+    /// Entries holding a live value (excludes tombstones).
+    fn live_len(&self) -> usize;
+    fn is_empty(&self) -> bool;
+    /// Periodic persistence hook, called by the peer right after each
+    /// anti-entropy pass: flush the active segment, compact when enough
+    /// sealed segments have piled up, and GC tombstones that are both
+    /// old (`version + gc_min_age ≤ now_micros` — versions are
+    /// microsecond wall-clock timestamps in the socket runtime) and
+    /// already replicated (`version ≤ replicated_before_micros`, the
+    /// start time of the last *completed* repair pass — the quorum
+    /// condition). No-op for the in-memory backend.
+    fn maintain(&mut self, now_micros: u64, replicated_before_micros: u64);
+    /// Lifetime durability counters (all-zero for the in-memory
+    /// backend).
+    fn counters(&self) -> StorageCounters;
+}
+
+impl StorageBackend for KvStore {
+    fn next_version(&self, key: Id) -> u64 {
+        KvStore::next_version(self, key)
+    }
+    fn put(&mut self, key: Id, version: u64, bytes: Vec<u8>) -> bool {
+        KvStore::put(self, key, version, bytes)
+    }
+    fn put_tombstone(&mut self, key: Id, version: u64) -> bool {
+        KvStore::put_tombstone(self, key, version)
+    }
+    fn get(&self, key: Id) -> Option<&Versioned> {
+        KvStore::get(self, key)
+    }
+    fn remove(&mut self, key: Id) -> bool {
+        KvStore::remove(self, key)
+    }
+    fn iter(&self) -> Box<dyn Iterator<Item = (&Id, &Versioned)> + '_> {
+        Box::new(KvStore::iter(self))
+    }
+    fn len(&self) -> usize {
+        KvStore::len(self)
+    }
+    fn live_len(&self) -> usize {
+        KvStore::live_len(self)
+    }
+    fn is_empty(&self) -> bool {
+        KvStore::is_empty(self)
+    }
+    fn maintain(&mut self, _now_micros: u64, _replicated_before_micros: u64) {}
+    fn counters(&self) -> StorageCounters {
+        StorageCounters::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_memory_backend_through_trait_object() {
+        let mut kv: Box<dyn StorageBackend> = Box::<KvStore>::default();
+        assert!(kv.is_empty());
+        assert_eq!(kv.next_version(Id(1)), 1);
+        assert!(kv.put(Id(1), 1, vec![7]));
+        assert!(!kv.put(Id(1), 1, vec![7]), "duplicate rejected through the trait too");
+        assert!(kv.put_tombstone(Id(2), 5));
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.live_len(), 1);
+        assert_eq!(kv.iter().count(), 2);
+        assert_eq!(kv.get(Id(1)).unwrap().bytes, vec![7]);
+        assert!(kv.remove(Id(2)));
+        // persistence hooks are inert for the in-memory map
+        kv.maintain(u64::MAX, u64::MAX);
+        assert_eq!(kv.counters(), StorageCounters::default());
+    }
+}

@@ -15,7 +15,10 @@ pub struct Versioned {
     pub version: u64,
     /// Deleted marker: the entry is kept (and replicated) so that
     /// anti-entropy cannot resurrect an older live value. `bytes` is
-    /// empty for tombstones. (Tombstone GC is a ROADMAP open item.)
+    /// empty for tombstones. The log-structured backend
+    /// (`store/log.rs`) GCs tombstones during compaction once they are
+    /// provably old and replicated; this in-memory map keeps them for
+    /// the life of the peer.
     pub tombstone: bool,
     pub bytes: Vec<u8>,
 }

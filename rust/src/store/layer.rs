@@ -443,6 +443,47 @@ impl StoreLayer {
             .map(|r| r.holders.iter().filter(|h| truth.contains(**h)).count())
             .sum()
     }
+
+    /// What `peer`'s local log would hold at crash time: the key
+    /// indices it replicates, each with the version it saw. Taken at
+    /// the moment of the failure (before any repair pass replaces the
+    /// holder sets) — the simulator twin of the on-disk segment scan in
+    /// `store/log.rs`.
+    pub fn crash_snapshot(&self, peer: Id) -> Vec<(usize, u64)> {
+        self.records
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.holders.contains(&peer))
+            .map(|(i, r)| (i, r.version))
+            .collect()
+    }
+
+    /// Model a `--data-dir` restart: the peer re-enters (as the fresh
+    /// identity `as_peer`) holding the key set that survived in its
+    /// local log. A snapshot record still counts iff the cluster has
+    /// not moved past it — same version, not deleted — in which case
+    /// the restarted peer becomes a live holder again, reviving even
+    /// keys whose every other replica died (the durability win over the
+    /// rejoin-empty path). Stale or tombstoned records are left for
+    /// anti-entropy to overwrite, exactly like the socket runtime.
+    /// Returns the recovered-record count (obs counter
+    /// `storage.recovered_records`).
+    pub fn recover(&mut self, as_peer: Id, snapshot: &[(usize, u64)]) -> usize {
+        let mut recovered = 0usize;
+        for &(idx, version) in snapshot {
+            let rec = &mut self.records[idx];
+            if rec.version != version || rec.deleted || version == 0 {
+                continue;
+            }
+            if !rec.holders.contains(&as_peer) {
+                rec.holders.push(as_peer);
+            }
+            rec.lost = false;
+            recovered += 1;
+        }
+        self.obs.inc(names::STORAGE_RECOVERED_RECORDS, recovered as u64);
+        recovered
+    }
 }
 
 #[cfg(test)]
@@ -543,6 +584,42 @@ mod tests {
         s.put(&t1, 0);
         let (_, alive) = s.retrievable(&t1);
         assert_eq!(alive, 1);
+    }
+
+    #[test]
+    fn crash_recovery_replays_surviving_key_set() {
+        let t0 = table(&[100, 200, 300]);
+        let mut s = layer(10, 3);
+        s.preload(&t0);
+        // 300 crashes with a data dir: snapshot at crash time, BEFORE
+        // any repair pass rewrites the holder sets
+        let snap = s.crash_snapshot(Id(300));
+        assert_eq!(snap.len(), 10, "R=3 over 3 peers: 300 held everything");
+        // then every other holder departs too — without local logs this
+        // is total loss
+        let t1 = table(&[999]);
+        s.repair(&t1);
+        assert_eq!(s.retrievable(&t1), (10, 0));
+        // one key moves on while 300 is down: its log record is stale
+        s.put(&t1, 3);
+        // 300 restarts under a fresh identity (restart = new address =
+        // new ring id in the socket runtime) and replays its log
+        let recovered = s.recover(Id(301), &snap);
+        assert_eq!(recovered, 9, "all but the rewritten key revive");
+        assert_eq!(s.obs.counter(names::STORAGE_RECOVERED_RECORDS), 9);
+        let t2 = table(&[999, 301]);
+        let (total, alive) = s.retrievable(&t2);
+        assert_eq!((total, alive), (10, 10), "log recovery revives the shard");
+        // recovery is idempotent and never double-counts holders
+        assert_eq!(s.recover(Id(301), &snap), 9);
+        assert!(s.records[0].holders.iter().filter(|h| **h == Id(301)).count() == 1);
+        // a tombstoned key's record is left for anti-entropy: of 301's
+        // nine held keys (the rewritten key lives on 999 alone), the
+        // freshly deleted one no longer counts as recovered
+        s.remove(&t2, 5);
+        let snap2 = s.crash_snapshot(Id(301));
+        assert_eq!(snap2.len(), 9);
+        assert_eq!(s.recover(Id(302), &snap2), 8, "tombstone not 'recovered'");
     }
 
     #[test]

@@ -1,0 +1,785 @@
+//! [`LogStore`] — the crash-safe log-structured storage backend
+//! (docs/STORAGE.md).
+//!
+//! Layout: a data directory of append-only segment files
+//! `seg-<n>.log`. Every mutation is one record:
+//!
+//! ```text
+//! [len u32 LE][crc u32 LE] [kind u8][key u64 LE][version u64 LE][vlen u32 LE][value …]
+//! `------ header ------'   `---------------- payload (len bytes) ----------------'
+//! ```
+//!
+//! `crc` is CRC-32 (IEEE, reflected poly `0xEDB88320`) over the
+//! payload; `kind` is put (0), tombstone (1) or drop (2 — handoff
+//! bookkeeping). The full map lives in memory (the read path is
+//! identical to [`KvStore`](crate::store::kv::KvStore)); the log exists
+//! only so `open` can rebuild it after a crash.
+//!
+//! **Recovery** replays segments in sequence order, applying records
+//! through the same version gate as live writes (idempotent, so
+//! replaying a stale segment twice is harmless). The scan stops at the
+//! first torn or corrupt record and truncates the file back to the last
+//! valid boundary — damage costs the tail of one segment, never a
+//! panic. Leftover `seg-*.tmp` files (a compaction killed before its
+//! atomic rename) are discarded.
+//!
+//! **Compaction** (triggered by [`StorageTuning::compact_segments`]
+//! sealed segments, run from `maintain` after each anti-entropy pass)
+//! rewrites the surviving map as a single snapshot segment —
+//! written to a `.tmp`, fsynced, renamed into place, directory
+//! fsynced — then deletes the superseded segments. Tombstones are
+//! GC'd here iff old (`version + gc_min_age ≤ now`) *and* replicated
+//! (`version ≤ replicated_before`); a crash between the rename and the
+//! deletes leaves stale segments whose replay is version-gated, so at
+//! worst a GC'd tombstone resurrects until the next compaction — live
+//! data is never shadowed.
+//!
+//! IO errors never panic the peer thread: the store degrades to
+//! memory-only operation and counts the failure in
+//! [`StorageCounters::io_errors`].
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::anyhow::{Context, Result};
+use crate::config::StorageTuning;
+use crate::id::Id;
+use crate::store::backend::{StorageBackend, StorageCounters};
+use crate::store::kv::Versioned;
+
+const KIND_PUT: u8 = 0;
+const KIND_TOMBSTONE: u8 = 1;
+const KIND_DROP: u8 = 2;
+
+/// Record header: `len` (4) + `crc` (4).
+const HEADER: usize = 8;
+/// Fixed payload prefix: `kind` (1) + `key` (8) + `version` (8) +
+/// `vlen` (4).
+const PAYLOAD_FIXED: usize = 21;
+/// Sanity cap on one record's payload — a corrupt length field must
+/// not make recovery try to swallow gigabytes.
+const MAX_PAYLOAD: usize = 16 * 1024 * 1024;
+
+/// CRC-32 (IEEE 802.3): reflected polynomial `0xEDB88320`, init
+/// `0xFFFFFFFF`, final complement. Bit-serial — records are small and
+/// the offline image carries no crc crate.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn encode_record(kind: u8, key: Id, version: u64, value: &[u8]) -> Vec<u8> {
+    let len = PAYLOAD_FIXED + value.len();
+    let mut buf = Vec::with_capacity(HEADER + len);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]); // crc, backfilled below
+    buf.push(kind);
+    buf.extend_from_slice(&key.0.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
+    buf.extend_from_slice(&(value.len() as u32).to_le_bytes());
+    buf.extend_from_slice(value);
+    let crc = crc32(&buf[HEADER..]);
+    buf[4..8].copy_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// One record decoded from `buf[off..]`, a clean end-of-segment, or
+/// damage (torn tail, bad CRC, impossible lengths). Recovery treats
+/// `Damaged` as "truncate here" — it is an error value, never a panic.
+enum Parsed {
+    Record { consumed: usize, kind: u8, key: Id, version: u64, value: Vec<u8> },
+    End,
+    Damaged,
+}
+
+fn parse_record(buf: &[u8], off: usize) -> Parsed {
+    let rest = &buf[off..];
+    if rest.is_empty() {
+        return Parsed::End;
+    }
+    if rest.len() < HEADER {
+        return Parsed::Damaged;
+    }
+    let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+    if !(PAYLOAD_FIXED..=MAX_PAYLOAD).contains(&len) || rest.len() < HEADER + len {
+        return Parsed::Damaged;
+    }
+    let crc = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+    let payload = &rest[HEADER..HEADER + len];
+    if crc32(payload) != crc {
+        return Parsed::Damaged;
+    }
+    let kind = payload[0];
+    let vlen = u32::from_le_bytes(payload[17..21].try_into().unwrap()) as usize;
+    if kind > KIND_DROP || vlen != len - PAYLOAD_FIXED {
+        return Parsed::Damaged;
+    }
+    Parsed::Record {
+        consumed: HEADER + len,
+        kind,
+        key: Id(u64::from_le_bytes(payload[1..9].try_into().unwrap())),
+        version: u64::from_le_bytes(payload[9..17].try_into().unwrap()),
+        value: payload[PAYLOAD_FIXED..].to_vec(),
+    }
+}
+
+/// [`KvStore`](crate::store::kv::KvStore)'s acceptance rule: reject
+/// versions older than what is held, and exact duplicates.
+fn gate(map: &BTreeMap<Id, Versioned>, key: Id, entry: &Versioned) -> bool {
+    match map.get(&key) {
+        Some(cur) if cur.version > entry.version => false,
+        Some(cur) if cur == entry => false,
+        _ => true,
+    }
+}
+
+fn apply(map: &mut BTreeMap<Id, Versioned>, kind: u8, key: Id, version: u64, value: Vec<u8>) {
+    if kind == KIND_DROP {
+        map.remove(&key);
+        return;
+    }
+    let entry = Versioned { version, tombstone: kind == KIND_TOMBSTONE, bytes: value };
+    if gate(map, key, &entry) {
+        map.insert(key, entry);
+    }
+}
+
+/// Replay one segment's bytes into `map`, stopping at the first torn or
+/// corrupt record. Returns the end offset of the last valid record.
+fn replay(map: &mut BTreeMap<Id, Versioned>, bytes: &[u8]) -> usize {
+    let mut off = 0;
+    loop {
+        match parse_record(bytes, off) {
+            Parsed::End | Parsed::Damaged => return off,
+            Parsed::Record { consumed, kind, key, version, value } => {
+                apply(map, kind, key, version, value);
+                off += consumed;
+            }
+        }
+    }
+}
+
+fn seg_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("seg-{seq}.log"))
+}
+
+/// The crash-safe log-structured [`StorageBackend`] (module docs /
+/// docs/STORAGE.md for format and recovery semantics).
+pub struct LogStore {
+    dir: PathBuf,
+    cfg: StorageTuning,
+    map: BTreeMap<Id, Versioned>,
+    /// Sealed segment sequence numbers, ascending.
+    sealed: Vec<u64>,
+    active_seq: u64,
+    active_len: u64,
+    /// `None` after an unrecoverable IO error: the shard stays served
+    /// from memory, appends stop (degraded, counted in `io_errors`).
+    active: Option<File>,
+    counters: StorageCounters,
+}
+
+impl LogStore {
+    /// Open (or create) the store under `dir`: discard orphaned
+    /// compaction temporaries, replay every segment in sequence order
+    /// through the version gate, truncate the first damaged record and
+    /// everything after it, and resume appending to the newest segment.
+    pub fn open(dir: &Path, cfg: StorageTuning) -> Result<LogStore> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("storage: create data dir {}", dir.display()))?;
+        let mut seqs: Vec<u64> = Vec::new();
+        for entry in
+            fs::read_dir(dir).with_context(|| format!("storage: list {}", dir.display()))?
+        {
+            let entry = entry.with_context(|| format!("storage: list {}", dir.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".tmp") {
+                // A compaction died before its atomic rename: the
+                // snapshot never became visible and the segments it
+                // meant to replace are intact — drop the orphan.
+                let _ = fs::remove_file(entry.path());
+                continue;
+            }
+            if let Some(seq) = name
+                .strip_prefix("seg-")
+                .and_then(|s| s.strip_suffix(".log"))
+                .and_then(|s| s.parse().ok())
+            {
+                seqs.push(seq);
+            }
+        }
+        seqs.sort_unstable();
+        let mut map = BTreeMap::new();
+        for &seq in &seqs {
+            let path = seg_path(dir, seq);
+            let bytes =
+                fs::read(&path).with_context(|| format!("storage: read {}", path.display()))?;
+            let valid = replay(&mut map, &bytes);
+            if valid < bytes.len() {
+                // Torn tail (or mid-file damage): cut back to the last
+                // valid boundary so the next append starts clean.
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("storage: truncate {}", path.display()))?;
+                f.set_len(valid as u64)
+                    .with_context(|| format!("storage: truncate {}", path.display()))?;
+                f.sync_all()
+                    .with_context(|| format!("storage: truncate {}", path.display()))?;
+            }
+        }
+        let (active_seq, sealed) = match seqs.split_last() {
+            Some((&last, rest)) => (last, rest.to_vec()),
+            None => (1, Vec::new()),
+        };
+        let active_path = seg_path(dir, active_seq);
+        let active = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&active_path)
+            .with_context(|| format!("storage: open {}", active_path.display()))?;
+        let active_len = active
+            .metadata()
+            .with_context(|| format!("storage: stat {}", active_path.display()))?
+            .len();
+        let counters = StorageCounters { recovered_records: map.len() as u64, ..Default::default() };
+        Ok(LogStore {
+            dir: dir.to_path_buf(),
+            cfg,
+            map,
+            sealed,
+            active_seq,
+            active_len,
+            active: Some(active),
+            counters,
+        })
+    }
+
+    fn seg(&self, seq: u64) -> PathBuf {
+        seg_path(&self.dir, seq)
+    }
+
+    /// Append one record, rotating first if the active segment is full.
+    /// Failures degrade to memory-only operation (never a panic).
+    fn append(&mut self, kind: u8, key: Id, version: u64, value: &[u8]) {
+        if self.active_len >= self.cfg.segment_bytes as u64 {
+            self.rotate();
+        }
+        let rec = encode_record(kind, key, version, value);
+        if let Some(f) = self.active.as_mut() {
+            match f.write_all(&rec) {
+                Ok(()) => self.active_len += rec.len() as u64,
+                Err(_) => {
+                    self.counters.io_errors += 1;
+                    self.active = None;
+                }
+            }
+        }
+    }
+
+    /// Seal the active segment (fsync) and open the next one.
+    fn rotate(&mut self) {
+        let f = match self.active.take() {
+            Some(f) => f,
+            None => return, // degraded: nothing to rotate onto
+        };
+        if f.sync_all().is_err() {
+            self.counters.io_errors += 1;
+        }
+        self.sealed.push(self.active_seq);
+        self.active_seq += 1;
+        self.active_len = 0;
+        match OpenOptions::new().create(true).append(true).open(self.seg(self.active_seq)) {
+            Ok(f) => self.active = Some(f),
+            Err(_) => self.counters.io_errors += 1,
+        }
+    }
+
+    /// Rewrite the surviving map as one snapshot segment (tmp → fsync →
+    /// rename → dir fsync), GC eligible tombstones, delete superseded
+    /// segments. Crash-safe at every step: before the rename the old
+    /// segments are authoritative; after it, stale leftovers replay
+    /// idempotently under the version gate.
+    fn compact(&mut self, now_micros: u64, replicated_before_micros: u64) {
+        if let Some(f) = self.active.take() {
+            // The snapshot supersedes the active segment too; seal it.
+            if f.sync_all().is_err() {
+                self.counters.io_errors += 1;
+            }
+        }
+        let age = self.cfg.gc_min_age.as_micros() as u64;
+        // Sorted (map order), so membership below is a binary search.
+        let dead: Vec<Id> = self
+            .map
+            .iter()
+            .filter(|(_, v)| {
+                v.tombstone
+                    && v.version.saturating_add(age) <= now_micros
+                    && v.version <= replicated_before_micros
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        let snap_seq = self.active_seq + 1;
+        let tmp = self.dir.join(format!("seg-{snap_seq}.tmp"));
+        let written = (|| -> std::io::Result<()> {
+            let mut f = File::create(&tmp)?;
+            for (k, v) in &self.map {
+                if dead.binary_search(k).is_ok() {
+                    continue;
+                }
+                let kind = if v.tombstone { KIND_TOMBSTONE } else { KIND_PUT };
+                f.write_all(&encode_record(kind, *k, v.version, &v.bytes))?;
+            }
+            f.sync_all()?;
+            fs::rename(&tmp, seg_path(&self.dir, snap_seq))?;
+            // Make the rename durable before deleting its sources.
+            File::open(&self.dir).and_then(|d| d.sync_all())?;
+            Ok(())
+        })();
+        if written.is_err() {
+            // Old segments stay authoritative; retry on a later pass.
+            self.counters.io_errors += 1;
+            let _ = fs::remove_file(&tmp);
+            match OpenOptions::new().create(true).append(true).open(self.seg(self.active_seq)) {
+                Ok(f) => self.active = Some(f),
+                Err(_) => self.counters.io_errors += 1,
+            }
+            return;
+        }
+        for k in &dead {
+            self.map.remove(k);
+        }
+        self.counters.tombstones_gc += dead.len() as u64;
+        let superseded: Vec<u64> =
+            self.sealed.drain(..).chain(std::iter::once(self.active_seq)).collect();
+        for &seq in &superseded {
+            if fs::remove_file(self.seg(seq)).is_ok() {
+                self.counters.segments_compacted += 1;
+            }
+        }
+        self.sealed = vec![snap_seq];
+        self.active_seq = snap_seq + 1;
+        self.active_len = 0;
+        match OpenOptions::new().create(true).append(true).open(self.seg(self.active_seq)) {
+            Ok(f) => self.active = Some(f),
+            Err(_) => self.counters.io_errors += 1,
+        }
+    }
+}
+
+impl StorageBackend for LogStore {
+    fn next_version(&self, key: Id) -> u64 {
+        self.map.get(&key).map(|v| v.version + 1).unwrap_or(1)
+    }
+
+    fn put(&mut self, key: Id, version: u64, bytes: Vec<u8>) -> bool {
+        let entry = Versioned { version, tombstone: false, bytes };
+        if !gate(&self.map, key, &entry) {
+            return false;
+        }
+        self.append(KIND_PUT, key, version, &entry.bytes);
+        self.map.insert(key, entry);
+        true
+    }
+
+    fn put_tombstone(&mut self, key: Id, version: u64) -> bool {
+        let entry = Versioned { version, tombstone: true, bytes: Vec::new() };
+        if !gate(&self.map, key, &entry) {
+            return false;
+        }
+        self.append(KIND_TOMBSTONE, key, version, &[]);
+        self.map.insert(key, entry);
+        true
+    }
+
+    fn get(&self, key: Id) -> Option<&Versioned> {
+        self.map.get(&key)
+    }
+
+    fn remove(&mut self, key: Id) -> bool {
+        if self.map.remove(&key).is_none() {
+            return false;
+        }
+        self.append(KIND_DROP, key, 0, &[]);
+        true
+    }
+
+    fn iter(&self) -> Box<dyn Iterator<Item = (&Id, &Versioned)> + '_> {
+        Box::new(self.map.iter())
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn live_len(&self) -> usize {
+        self.map.values().filter(|v| v.is_live()).count()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn maintain(&mut self, now_micros: u64, replicated_before_micros: u64) {
+        // Flush the tail so a crash after this pass loses nothing the
+        // repair plane already acted on.
+        if let Some(f) = self.active.as_mut() {
+            if f.sync_all().is_err() {
+                self.counters.io_errors += 1;
+            }
+        }
+        if self.sealed.len() >= self.cfg.compact_segments {
+            self.compact(now_micros, replicated_before_micros);
+        }
+    }
+
+    fn counters(&self) -> StorageCounters {
+        self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::kv::KvStore;
+    use crate::util::rng::mix64;
+    use std::time::Duration;
+
+    const SEC: u64 = 1_000_000; // one second of version timestamp, in µs
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("d1ht-logstore-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn state(st: &dyn StorageBackend) -> BTreeMap<Id, Versioned> {
+        st.iter().map(|(k, v)| (*k, v.clone())).collect()
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrip_and_every_single_byte_flip_rejected() {
+        let rec = encode_record(KIND_PUT, Id(0xDEAD_BEEF), 42, &[1, 2, 3, 4, 5]);
+        match parse_record(&rec, 0) {
+            Parsed::Record { consumed, kind, key, version, value } => {
+                assert_eq!(consumed, rec.len());
+                assert_eq!((kind, key, version), (KIND_PUT, Id(0xDEAD_BEEF), 42));
+                assert_eq!(value, vec![1, 2, 3, 4, 5]);
+            }
+            _ => panic!("clean record must parse"),
+        }
+        // mirror the codec mutation tests: any single corrupted byte is
+        // damage, never a mis-parse or a panic
+        for i in 0..rec.len() {
+            let mut bad = rec.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                matches!(parse_record(&bad, 0), Parsed::Damaged),
+                "flip at byte {i} must be rejected"
+            );
+        }
+        // truncation at any interior boundary is damage, not a panic
+        for cut in 1..rec.len() {
+            assert!(matches!(parse_record(&rec[..cut], 0), Parsed::Damaged), "cut at {cut}");
+        }
+        assert!(matches!(parse_record(&rec, rec.len()), Parsed::End));
+    }
+
+    #[test]
+    fn reopen_rebuilds_exact_state() {
+        let dir = tdir("reopen");
+        let before = {
+            let mut st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+            assert_eq!(st.counters().recovered_records, 0, "fresh dir recovers nothing");
+            assert!(st.put(Id(1), 1, vec![0xAB; 16]));
+            assert!(st.put(Id(1), 2, vec![0xCD; 16])); // supersedes
+            assert!(!st.put(Id(1), 1, vec![0xAB; 16]), "stale write rejected");
+            assert!(st.put(Id(2), 7 * SEC, vec![9]));
+            assert!(st.put_tombstone(Id(3), 5));
+            assert!(st.put(Id(4), 1, vec![4; 4]));
+            assert!(st.remove(Id(4)), "drop leaves no trace after replay");
+            assert_eq!(st.next_version(Id(1)), 3);
+            state(&st)
+        };
+        let st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+        assert_eq!(state(&st), before);
+        assert_eq!(st.counters().recovered_records, before.len() as u64);
+        assert_eq!(st.live_len(), 2);
+        assert!(st.get(Id(3)).unwrap().tombstone);
+        assert!(st.get(Id(4)).is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_last_valid_record_and_log_stays_appendable() {
+        let dir = tdir("torn");
+        {
+            let mut st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+            st.put(Id(1), 1, vec![1; 8]);
+            st.put(Id(2), 1, vec![2; 8]);
+            st.put(Id(3), 1, vec![3; 8]);
+        }
+        let seg = seg_path(&dir, 1);
+        let full = fs::read(&seg).unwrap();
+        // tear the last record: cut 3 bytes off the tail
+        OpenOptions::new().write(true).open(&seg).unwrap().set_len(full.len() as u64 - 3).unwrap();
+        let mut st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+        assert_eq!(st.counters().recovered_records, 2);
+        assert!(st.get(Id(3)).is_none(), "torn record discarded");
+        let record_len = full.len() / 3;
+        assert_eq!(
+            fs::metadata(&seg).unwrap().len(),
+            (full.len() - record_len) as u64,
+            "file truncated back to the last valid boundary"
+        );
+        // the log keeps working from the clean boundary
+        assert!(st.put(Id(9), 1, vec![9; 8]));
+        drop(st);
+        let st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+        assert_eq!(st.counters().recovered_records, 3);
+        assert_eq!(st.get(Id(9)).unwrap().bytes, vec![9; 8]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_tail_truncated_not_fatal() {
+        let dir = tdir("garbage");
+        {
+            let mut st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+            st.put(Id(1), 1, vec![1; 8]);
+        }
+        let seg = seg_path(&dir, 1);
+        let clean_len = fs::metadata(&seg).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&[0xFF; 64]).unwrap();
+        drop(f);
+        let st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+        assert_eq!(st.counters().recovered_records, 1);
+        assert_eq!(st.get(Id(1)).unwrap().bytes, vec![1; 8]);
+        assert_eq!(fs::metadata(&seg).unwrap().len(), clean_len);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite: random op sequence, then truncate the live segment at
+    /// EVERY byte offset (which in particular covers every byte of the
+    /// final record) and reopen — the recovered store must equal the
+    /// longest fully-persisted prefix of the sequence, with the file cut
+    /// back to that boundary. Damage is an error path, never a panic.
+    #[test]
+    fn truncation_at_every_byte_boundary_recovers_exact_prefix() {
+        let dir = tdir("sweep-write");
+        let mut st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+        let mut oracle = KvStore::new(); // reference semantics
+        let osnap = |kv: &KvStore| -> BTreeMap<Id, Versioned> {
+            kv.iter().map(|(k, v)| (*k, v.clone())).collect()
+        };
+        let mut snaps = vec![osnap(&oracle)]; // state after each appended record
+        for i in 0..28u64 {
+            let h = mix64(0x5EED_0000 + i);
+            let key = Id(1 + h % 6);
+            let changed = match (h >> 8) % 10 {
+                0..=5 => {
+                    let v = st.next_version(key);
+                    assert_eq!(v, oracle.next_version(key), "oracle and log agree on versions");
+                    let bytes = vec![(h >> 24) as u8; 1 + (h >> 16) as usize % 22];
+                    let a = st.put(key, v, bytes.clone());
+                    assert_eq!(a, oracle.put(key, v, bytes));
+                    a
+                }
+                6 | 7 => {
+                    let v = st.next_version(key);
+                    let a = st.put_tombstone(key, v);
+                    assert_eq!(a, oracle.put_tombstone(key, v));
+                    a
+                }
+                8 => {
+                    let a = st.remove(key);
+                    assert_eq!(a, oracle.remove(key));
+                    a
+                }
+                _ => {
+                    // duplicate of the current entry: must append nothing
+                    match oracle.get(key).cloned() {
+                        Some(cur) if cur.is_live() => {
+                            let a = st.put(key, cur.version, cur.bytes.clone());
+                            assert!(!a && !oracle.put(key, cur.version, cur.bytes));
+                            false
+                        }
+                        _ => false,
+                    }
+                }
+            };
+            if changed {
+                snaps.push(osnap(&oracle));
+            }
+        }
+        assert_eq!(state(&st), *snaps.last().unwrap());
+        drop(st);
+        let bytes = fs::read(seg_path(&dir, 1)).unwrap();
+        // record boundaries (cumulative end offsets), via the parser
+        let mut bounds = vec![0usize];
+        loop {
+            match parse_record(&bytes, *bounds.last().unwrap()) {
+                Parsed::Record { consumed, .. } => bounds.push(bounds.last().unwrap() + consumed),
+                Parsed::End => break,
+                Parsed::Damaged => panic!("clean log must parse to the end"),
+            }
+        }
+        assert_eq!(bounds.len(), snaps.len(), "one record per state-changing op");
+        let cut_dir = tdir("sweep-cut");
+        for cut in 0..=bytes.len() {
+            let _ = fs::remove_dir_all(&cut_dir);
+            fs::create_dir_all(&cut_dir).unwrap();
+            fs::write(seg_path(&cut_dir, 1), &bytes[..cut]).unwrap();
+            let st = LogStore::open(&cut_dir, StorageTuning::default()).unwrap();
+            // number of records fully contained in the prefix
+            let r = bounds.iter().take_while(|&&b| b <= cut).count() - 1;
+            assert_eq!(state(&st), snaps[r], "cut at byte {cut} must recover prefix {r}");
+            assert_eq!(
+                fs::metadata(seg_path(&cut_dir, 1)).unwrap().len(),
+                bounds[r] as u64,
+                "cut at byte {cut} must truncate to boundary {r}"
+            );
+        }
+        fs::remove_dir_all(&dir).unwrap();
+        fs::remove_dir_all(&cut_dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_spans_segments_and_replay_is_version_gated() {
+        let dir = tdir("rotate");
+        let tun = StorageTuning { segment_bytes: 64, ..StorageTuning::default() };
+        let before = {
+            let mut st = LogStore::open(&dir, tun).unwrap();
+            for i in 0..20u64 {
+                st.put(Id(i % 5), st.next_version(Id(i % 5)), vec![i as u8; 16]);
+            }
+            state(&st)
+        };
+        let segs = fs::read_dir(&dir).unwrap().count();
+        assert!(segs > 3, "tiny segments must rotate (got {segs} files)");
+        let st = LogStore::open(&dir, tun).unwrap();
+        assert_eq!(state(&st), before, "multi-segment replay converges to newest versions");
+        assert_eq!(st.counters().recovered_records, 5);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn leftover_compaction_tmp_is_discarded_on_open() {
+        let dir = tdir("tmp-leftover");
+        {
+            let mut st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+            st.put(Id(1), 1, vec![1; 8]);
+        }
+        // a compaction killed between writing its snapshot and the
+        // atomic rename leaves exactly this orphan behind
+        fs::write(dir.join("seg-99.tmp"), [0xAB; 40]).unwrap();
+        let st = LogStore::open(&dir, StorageTuning::default()).unwrap();
+        assert_eq!(st.counters().recovered_records, 1);
+        assert!(!dir.join("seg-99.tmp").exists(), "orphan tmp discarded");
+        assert_eq!(st.get(Id(1)).unwrap().bytes, vec![1; 8]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compaction_gcs_old_replicated_tombstones_only() {
+        let dir = tdir("gc");
+        let tun = StorageTuning {
+            segment_bytes: 256,
+            compact_segments: 2,
+            gc_min_age: Duration::from_secs(600),
+        };
+        let mut st = LogStore::open(&dir, tun).unwrap();
+        st.put(Id(1), 50 * SEC, vec![0xAA; 100]);
+        st.put_tombstone(Id(2), 100 * SEC); // old + replicated → GC
+        st.put_tombstone(Id(4), 1700 * SEC); // replicated but too young → kept
+        st.put_tombstone(Id(5), 1950 * SEC); // old enough? no — and not replicated → kept
+        for i in 0..8u64 {
+            st.put(Id(10 + i), (60 + i) * SEC, vec![i as u8; 100]); // force rotations
+        }
+        assert!(st.sealed.len() >= tun.compact_segments, "setup must reach the trigger");
+        st.maintain(2000 * SEC, 1900 * SEC);
+        assert!(st.get(Id(2)).is_none(), "old replicated tombstone GC'd");
+        assert!(st.get(Id(4)).unwrap().tombstone, "young tombstone kept");
+        assert!(st.get(Id(5)).unwrap().tombstone, "unreplicated tombstone kept");
+        assert_eq!(st.get(Id(1)).unwrap().bytes, vec![0xAA; 100]);
+        let c = st.counters();
+        assert_eq!(c.tombstones_gc, 1);
+        assert!(c.segments_compacted >= 3, "sealed + active all retired (got {c:?})");
+        assert_eq!(c.io_errors, 0);
+        // compaction resets the trigger: an immediate second pass is a no-op
+        st.maintain(2000 * SEC, 1900 * SEC);
+        assert_eq!(st.counters().tombstones_gc, 1);
+        let before = state(&st);
+        drop(st);
+        let st = LogStore::open(&dir, tun).unwrap();
+        assert_eq!(state(&st), before, "compacted snapshot is durable");
+        assert_eq!(st.counters().recovered_records, before.len() as u64);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stale_segments_surviving_a_compaction_crash_replay_harmlessly() {
+        // crash window: snapshot renamed into place but the superseded
+        // segments not yet deleted — replay sees both, version gating
+        // makes the merge idempotent
+        let dir = tdir("stale-segs");
+        let tun = StorageTuning {
+            segment_bytes: 128,
+            compact_segments: 1,
+            gc_min_age: Duration::from_secs(u64::MAX / SEC / 4), // no GC in this test
+        };
+        let mut st = LogStore::open(&dir, tun).unwrap();
+        st.put(Id(1), 1 * SEC, vec![0x11; 60]);
+        st.put(Id(1), 2 * SEC, vec![0x22; 60]); // rotation: supersedes in a later segment
+        st.put(Id(2), 1 * SEC, vec![0x33; 60]);
+        st.put_tombstone(Id(3), 1 * SEC);
+        let old: Vec<(PathBuf, Vec<u8>)> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .map(|p| (p.clone(), fs::read(&p).unwrap()))
+            .collect();
+        st.maintain(10 * SEC, 10 * SEC);
+        assert!(st.counters().segments_compacted > 0, "compaction must run");
+        let before = state(&st);
+        drop(st);
+        for (path, bytes) in &old {
+            fs::write(path, bytes).unwrap(); // resurrect the stale segments
+        }
+        let st = LogStore::open(&dir, tun).unwrap();
+        assert_eq!(state(&st), before, "stale pre-compaction segments cannot shadow the snapshot");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn docs_pin_format_and_gc_policy() {
+        // docs/STORAGE.md documents the record layout, the CRC
+        // polynomial, and the default GC thresholds; keep prose and
+        // code in lockstep
+        let doc = include_str!("../../../docs/STORAGE.md");
+        for needle in ["0xEDB88320", "4 MiB", "600 s", "4 sealed segments", "seg-<n>.log", ".tmp"]
+        {
+            assert!(doc.contains(needle), "docs/STORAGE.md must mention {needle:?}");
+        }
+        let d = StorageTuning::default();
+        assert_eq!(d.segment_bytes, 4 * 1024 * 1024);
+        assert_eq!(d.compact_segments, 4);
+        assert_eq!(d.gc_min_age, Duration::from_secs(600));
+    }
+}

@@ -10,6 +10,13 @@
 //!   `R − 1` distinct ring successors (default `R = 3`).
 //! * [`kv`] — the per-peer versioned store the socket runtime uses
 //!   (real bytes; version-idempotent writes make repair safe to repeat).
+//! * [`backend`] — the pluggable [`StorageBackend`] trait the socket
+//!   runtime's peers hold their shard behind, and [`log`] — its
+//!   crash-safe log-structured implementation ([`LogStore`]): an
+//!   append-only CRC-checked segment log replayed on open, so a
+//!   crash + restart with `--data-dir` recovers the shard from local
+//!   disk and catches up via anti-entropy instead of rejoining empty
+//!   (docs/STORAGE.md).
 //! * [`zipf`] — the workload's key-popularity distribution.
 //! * [`layer`] — [`StoreLayer`]: the simulator's storage model, driven
 //!   by [`crate::dht::d1ht::D1htSim`]. Values are tracked as payload
@@ -24,12 +31,16 @@
 //! Eq. III.1 churn model this is what keeps ≥ 99.9 % of keys retrievable
 //! (measured by `experiments::store`).
 
+pub mod backend;
 pub mod kv;
 pub mod layer;
+pub mod log;
 pub mod replication;
 pub mod zipf;
 
+pub use backend::{StorageBackend, StorageCounters};
 pub use kv::KvStore;
 pub use layer::{StoreCfg, StoreLayer};
+pub use log::LogStore;
 pub use replication::replica_set;
 pub use zipf::Zipf;

@@ -282,7 +282,8 @@ pub fn run_topic(topic: &str, target: Duration) -> Vec<BenchResult> {
             ]
         }
         "store" => {
-            use crate::store::{StoreCfg, StoreLayer};
+            use crate::config::StorageTuning;
+            use crate::store::{LogStore, StorageBackend, StoreCfg, StoreLayer};
             let mut rng = Rng::new(0x5702E);
             let ids: Vec<Id> = (0..256).map(|_| Id(rng.next_u64())).collect();
             let truth = Table::from_ids(ids);
@@ -294,14 +295,53 @@ pub fn run_topic(topic: &str, target: Duration) -> Vec<BenchResult> {
             };
             let mut layer = StoreLayer::new(cfg, Rng::new(0xFEED));
             layer.preload(&truth);
-            vec![
+            // log-structured backend benches: appends are page-cache
+            // writes (fsync only on segment rotation), recovery is the
+            // open-time segment scan over a pre-seeded 10k-record log.
+            // Tests run this topic from parallel threads, so the temp
+            // root carries a per-call sequence number beside the pid.
+            static DIR_SEQ: std::sync::atomic::AtomicU64 =
+                std::sync::atomic::AtomicU64::new(0);
+            let seq = DIR_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let root = std::env::temp_dir()
+                .join(format!("d1ht-bench-log-{}-{seq}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&root);
+            let append_dir = root.join("append");
+            let recover_dir = root.join("recover");
+            std::fs::create_dir_all(&append_dir).expect("bench temp dir");
+            std::fs::create_dir_all(&recover_dir).expect("bench temp dir");
+            let tuning = StorageTuning::default();
+            let mut log = LogStore::open(&append_dir, tuning).expect("open append log");
+            let value = vec![0xA5u8; 32];
+            {
+                let mut seed = LogStore::open(&recover_dir, tuning).expect("open recover log");
+                for i in 0..10_000u64 {
+                    seed.put(Id(i % 4096), i + 1, value.clone());
+                }
+            }
+            let mut version = 0u64;
+            let results = vec![
                 bench_auto("store.workload_step/512keys", target, || {
                     layer.workload_step(&truth);
                 }),
                 bench_auto("store.repair/512keys", target, || {
                     layer.repair(&truth);
                 }),
-            ]
+                bench_auto("store.log_append/1k", target, || {
+                    for _ in 0..1000 {
+                        version += 1;
+                        log.put(Id(version % 4096), version, value.clone());
+                    }
+                    black_box(log.len());
+                }),
+                bench_auto("store.recover/10k", target, || {
+                    let ls = LogStore::open(&recover_dir, tuning).expect("reopen recover log");
+                    black_box(ls.counters().recovered_records);
+                }),
+            ];
+            drop(log);
+            let _ = std::fs::remove_dir_all(&root);
+            results
         }
         other => panic!("unknown bench topic '{other}'"),
     }

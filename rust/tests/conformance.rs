@@ -15,6 +15,7 @@ use d1ht::fault::FaultPlan;
 const CHURN_ZIPF: &str = include_str!("traces/churn_zipf.json");
 const STEADY_SMALL: &str = include_str!("traces/steady_small.json");
 const PARTITION_HEAL: &str = include_str!("traces/partition_heal.json");
+const RESTART_RECOVERY: &str = include_str!("traces/restart_recovery.json");
 
 #[test]
 fn golden_traces_parse_and_validate() {
@@ -30,6 +31,14 @@ fn golden_traces_parse_and_validate() {
     assert_eq!(ph.name, "partition_heal");
     assert_eq!(ph.peers, 8);
     assert_eq!(ph.keys, 24);
+    let rr = Trace::parse(RESTART_RECOVERY).expect("restart_recovery parses");
+    assert_eq!(rr.name, "restart_recovery");
+    assert_eq!(rr.peers, 5);
+    assert_eq!(rr.keys, 16);
+    assert!(
+        rr.steps.iter().any(|s| s.op == TraceOp::Restart),
+        "the restart trace actually restarts someone"
+    );
 }
 
 #[test]
@@ -105,6 +114,23 @@ fn partition_heal_conforms() {
     }
     assert_eq!(outcome.sim.digest, outcome.net.digest, "retrievable-key digests agree");
     assert!((outcome.sim.durability - 1.0).abs() < 1e-12, "R=3 + settles: nothing lost");
+}
+
+/// Crash + restart with durable storage: the net driver runs every peer
+/// on a data dir, kills one, and respawns it on the *same* dir — log
+/// replay plus anti-entropy must leave both runtimes agreeing on every
+/// get outcome and on the final retrievable-key digest, with nothing
+/// lost (R = 3 and the recovered shard both protect the keyset).
+#[test]
+fn restart_recovery_conforms() {
+    let trace = Trace::parse(RESTART_RECOVERY).unwrap();
+    let outcome = run_trace(&trace).expect("both replays complete");
+    if let Some(d) = &outcome.divergence {
+        panic!("{}", explain(d, &outcome.sim, &outcome.net));
+    }
+    assert_eq!(outcome.sim.digest, outcome.net.digest, "retrievable-key digests agree");
+    assert!((outcome.sim.durability - 1.0).abs() < 1e-12, "nothing lost across the restart");
+    assert!((outcome.net.durability - 1.0).abs() < 1e-12, "nothing lost across the restart");
 }
 
 #[test]
